@@ -1,0 +1,59 @@
+"""Paper Fig. 9: the TPC-H suite across engines, plus compile times.
+
+Each reproduced query runs on the volcano (interpreted / Postgres
+analogue), stage (Spark analogue) and whole-query compiled (Flare L2)
+engines.  Also reports per-query trace+compile time (paper section 6.1:
+"less than 1.5s for all queries", Flare ~20% above Spark).
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, time_call
+from repro.core import FlareContext
+from repro.core.engines import CompileStats
+from repro.relational import queries as Q
+
+SF = float(os.environ.get("BENCH_SF", "0.05"))
+
+
+def run() -> None:
+    ctx = FlareContext()
+    Q.register_tpch(ctx, sf=SF)
+    ctx.preload()
+
+    with_tuple = os.environ.get("BENCH_TUPLE", "1") == "1"
+    for name, qf in Q.QUERIES.items():
+        q = qf(ctx)
+        derived = {}
+        if with_tuple:  # the truly-interpreted Postgres row (one pass)
+            us_t = time_call(lambda: q.collect(engine="tuple"),
+                             warmup=0, iters=1)
+            derived["tuple_us"] = round(us_t, 1)
+        us_v = time_call(lambda: q.collect(engine="volcano"), iters=3)
+        us_s = time_call(lambda: q.collect(engine="stage"), iters=5)
+        # compile time measured on a fresh plan (cache-cold)
+        stats = CompileStats()
+        fresh = qf(ctx)
+        fresh.ctx.execute(fresh.plan, "compiled", stats)
+        us_c = time_call(lambda: q.collect(engine="compiled"), iters=7)
+        if with_tuple:
+            derived["speedup_vs_tuple"] = round(
+                derived["tuple_us"] / us_c, 1)
+        emit(f"tpch_{name}", us_c, volcano_us=round(us_v, 1),
+             stage_us=round(us_s, 1),
+             speedup_vs_volcano=round(us_v / us_c, 2),
+             speedup_vs_stage=round(us_s / us_c, 2),
+             compile_s=round(stats.trace_compile_s, 3), **derived)
+
+    # q22 (scalar subquery, two-phase)
+    q22 = Q.q22(ctx, "compiled")
+    us_v = time_call(lambda: Q.q22(ctx, "volcano").collect(
+        engine="volcano"), iters=3)
+    us_c = time_call(lambda: q22.collect(engine="compiled"), iters=5)
+    emit("tpch_q22", us_c, volcano_us=round(us_v, 1),
+         speedup_vs_volcano=round(us_v / us_c, 2))
+
+
+if __name__ == "__main__":
+    run()

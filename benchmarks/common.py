@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (the harness
+contract).  ``derived`` carries the paper-facing quantity (a speedup
+ratio, a loading time, a roofline term) as ``key=value`` pairs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def time_call(fn: Callable, *, warmup: int = 1, iters: int = 5,
+              min_time_s: float = 0.0) -> float:
+    """Median wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times: List[float] = []
+    t_total = 0.0
+    i = 0
+    while i < iters or t_total < min_time_s:
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        t_total += dt
+        i += 1
+        if i > 100:
+            break
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, **derived) -> str:
+    dtxt = ";".join(f"{k}={v}" for k, v in derived.items())
+    line = f"{name},{us:.1f},{dtxt}"
+    print(line, flush=True)
+    return line

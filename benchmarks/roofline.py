@@ -1,0 +1,224 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  For each compiled (arch x shape x mesh) cell:
+
+    compute term    = per-device HLO FLOPs / 197e12
+    memory term     = per-device HBM bytes / 819e9
+    collective term = per-device collective bytes (all-reduce counted at
+                      the 2x ring factor) / 50e9
+
+Costs come from the trip-count-aware HLO analyzer (the SPMD program *is*
+the per-device program, so per-device = analyzer output directly);
+``cost_analysis`` alone undercounts every scanned layer (see
+repro/launch/hlo_analysis.py).
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) convention with
+N = matmul parameters (non-embedding), 6*N_active*D for MoE, plus the
+quadratic attention term; the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat recompute and dispatch overcompute.
+
+Emits CSV rows and writes results/roofline.md (the EXPERIMENTS.md table).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "roofline.md")
+
+
+def _cfg(arch_name: str):
+    from repro.configs import get
+    return get(arch_name.replace(".", "_").replace("-", "_")
+               if arch_name == "qwen3-0.6b" else arch_name)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the whole cell (all devices).
+
+    6*N_mm*D (train) / 2*N_mm*D (inference) with N_mm = matmul params
+    (MoE counts active experts only; enc-dec decode counts decoder-side
+    params only), plus the sequence-mixing terms: quadratic (windowed)
+    attention, SSD chunked-scan einsums, and enc-dec cross attention.
+    """
+    from repro.models.modeling import Model, enc_len_of
+    m = Model(cfg)
+    n_total = m.n_params()
+    n_embed = cfg.padded_vocab * cfg.d_model  # input embedding (gather)
+    n_mm = n_total - n_embed
+    if cfg.family == "moe":
+        # expert weights contribute only top_k/n_experts of their flops
+        per_expert = cfg.d_model * cfg.d_ff * (3 if cfg.act == "swiglu"
+                                               else 2)
+        expert_params = cfg.n_layers * cfg.n_experts * per_expert
+        n_mm = n_mm - expert_params + expert_params * (cfg.top_k
+                                                       / cfg.n_experts)
+    b, s = shape.global_batch, shape.seq_len
+    h, hd = cfg.n_heads, cfg.head_dim_
+    n_attn_layers = {"dense": cfg.n_layers, "moe": cfg.n_layers,
+                     "ssm": 0,
+                     "hybrid": cfg.n_layers // cfg.hybrid_group,
+                     "encdec": cfg.enc_layers + cfg.dec_layers,
+                     }[cfg.family]
+
+    def seq_mix_full(tokens: int, eff_s: int) -> float:
+        """Forward seq-mixing flops for a full-sequence pass."""
+        attn = n_attn_layers * 2 * 2 * tokens * eff_s * h * hd * 0.5
+        if cfg.family == "ssm":
+            q = cfg.ssm_chunk
+            hh = cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim
+            p, n = cfg.ssm_head_dim, cfg.ssm_state
+            # CB^T + L@X intra-chunk, B(x)X states, C@S inter-chunk
+            attn += cfg.n_layers * 2 * tokens * hh * (
+                q * (n + p) + 2 * p * n)
+        if cfg.family == "encdec":
+            enc_l = enc_len_of(cfg, s)
+            attn += cfg.dec_layers * 2 * 2 * tokens * enc_l * h * hd
+        return attn
+
+    if shape.kind == "train":
+        tokens = b * s
+        eff_s = min(s, cfg.window) if cfg.window else s
+        return 6 * n_mm * tokens + 3 * seq_mix_full(tokens, eff_s)
+    if shape.kind == "prefill":
+        tokens = b * s
+        eff_s = min(s, cfg.window) if cfg.window else s
+        return 2 * n_mm * tokens + seq_mix_full(tokens, eff_s)
+    # decode: one token per sequence against a seq_len cache
+    if cfg.family == "encdec":
+        # only the decoder runs; cross-attention reads the enc_len cache
+        dec_frac = cfg.dec_layers / max(cfg.enc_layers + cfg.dec_layers,
+                                        1)
+        head = cfg.d_model * cfg.padded_vocab
+        n_mm = (n_mm - head) * dec_frac * 1.6 + head  # + cross-attn proj
+        cross = cfg.dec_layers * 2 * 2 * b * enc_len_of(cfg, s) * h * hd
+    else:
+        cross = 0.0
+    cache = min(s, cfg.window) if cfg.window else s
+    attn = n_attn_layers * 2 * 2 * b * cache * h * hd
+    if cfg.family == "ssm":
+        hh = cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim
+        attn = cfg.n_layers * 2 * b * hh * 2 * cfg.ssm_head_dim \
+            * cfg.ssm_state
+    if cfg.family == "encdec":
+        attn = cfg.dec_layers * 2 * 2 * b * cache * h * hd
+    return 2 * n_mm * b + attn + cross
+
+
+def analyze_record(rec: Dict) -> Dict:
+    from repro.configs import get
+    from repro.configs.base import SHAPES
+    cfg = get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    pd = rec["per_device"]
+    coll = pd["collective_bytes"]
+    coll_eff = (2.0 * coll.get("all-reduce", 0)
+                + coll.get("all-gather", 0)
+                + coll.get("reduce-scatter", 0)
+                + coll.get("all-to-all", 0)
+                + coll.get("collective-permute", 0))
+    t_compute = pd["flops"] / PEAK_FLOPS
+    t_memory = pd["hbm_bytes"] / HBM_BW
+    t_coll = coll_eff / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / rec["devices"]
+    useful = mf_dev / max(pd["flops"], 1.0)
+    # roofline fraction: useful work per step-time vs peak
+    frac = (mf_dev / step_s) / PEAK_FLOPS if step_s > 0 else 0.0
+    mem = rec["memory"]
+    hbm_gib = (mem["argument_bytes"] + mem["temp_bytes"]
+               + mem["output_bytes"]) / 2 ** 30
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "step_s": step_s, "model_flops": mf,
+            "useful_ratio": useful, "roofline_frac": frac,
+            "hbm_gib": hbm_gib}
+
+
+IMPROVE = {
+    "compute": "cut recompute: looser remat policy / cheaper dispatch",
+    "memory": "fuse/cast to cut HBM round-trips (f32 logits, scan io)",
+    "collective": "reshard to cut all-gathers (2D weight sharding, "
+                  "overlap FSDP gathers with compute)",
+}
+
+
+def run(mesh: str = "16x16", write_md: bool = True) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        if rec["status"] == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": True, "why": rec["why"]})
+            continue
+        if rec["status"] != "ok":
+            continue
+        a = analyze_record(rec)
+        a.update(arch=rec["arch"], shape=rec["shape"], skipped=False)
+        rows.append(a)
+        emit(f"roofline_{rec['arch']}_{rec['shape']}",
+             a["step_s"] * 1e6,
+             dominant=a["dominant"],
+             compute_s=f"{a['t_compute']:.4g}",
+             memory_s=f"{a['t_memory']:.4g}",
+             collective_s=f"{a['t_collective']:.4g}",
+             useful_ratio=f"{a['useful_ratio']:.3f}",
+             roofline_frac=f"{a['roofline_frac']:.3f}")
+    if write_md:
+        _write_md(rows, mesh)
+    return rows
+
+
+def _write_md(rows: List[Dict], mesh: str) -> None:
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    lines = [
+        f"### Roofline table ({mesh} mesh, per device; "
+        "terms in seconds/step)",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS | useful | roofline frac | mem GiB/dev | "
+        "what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — | — | {r['why'][:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4g} | "
+            f"{r['t_memory']:.4g} | {r['t_collective']:.4g} | "
+            f"**{r['dominant']}** | {r['model_flops']:.3g} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_frac']:.3f} | "
+            f"{r['hbm_gib']:.2f} | {IMPROVE[r['dominant']]} |")
+    mode = "a" if os.path.exists(OUT_MD) else "w"
+    with open(OUT_MD, mode) as f:
+        f.write("\n".join(lines) + "\n\n")
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    if os.path.exists(OUT_MD):
+        os.remove(OUT_MD)
+    run("16x16")
+    run("2x16x16")

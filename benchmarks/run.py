@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only q6,join,...] [--sf 0.05]
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+
+    q6        Fig 4/5   Q6 across engines + direct-vs-preload + kernel
+    join      Fig 6     join strategy comparison
+    tpch      Fig 9     TPC-H suite across engines + compile times
+    loading   Table 1   CSV generic/compiled + flarecol (+projection)
+    scaling   Fig 11/12 mesh-parallel relational scaling (subprocesses)
+    ml        Fig 8/13/14  heterogeneous ETL+ML fused vs staged
+    roofline  (g)       roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+import traceback
+
+MODULES = ["q6", "join", "tpch", "loading", "scaling", "ml", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--sf", type=float, default=None,
+                    help="TPC-H scale factor (default 0.05)")
+    args = ap.parse_args()
+    if args.sf is not None:
+        os.environ["BENCH_SF"] = str(args.sf)
+
+    names = (args.only.split(",") if args.only else MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        modname = ("benchmarks.roofline" if name == "roofline"
+                   else f"benchmarks.bench_{name}")
+        try:
+            mod = importlib.import_module(modname)
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{name},-1.0,error=1", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+def run_module(name: str) -> None:
+    importlib.import_module(f"benchmarks.bench_{name}").run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + decode with compiled step programs.
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+from repro.launch.serve import generate
+
+out = generate(arch="qwen3_0_6b", reduced=True, batch=4,
+               prompt_len=32, gen=24)
+st = out["stats"]
+print(f"prefill: {st.prefill_s*1e3:.1f} ms for 4 x 32-token prompts")
+print(f"decode:  {st.decode_s*1e3:.1f} ms for {st.tokens} tokens "
+      f"({st.tokens_per_s:.1f} tok/s on CPU)")
+print("sample token ids:", out["completions"][0][:10].tolist())

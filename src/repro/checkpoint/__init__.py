@@ -1,0 +1,2 @@
+"""Checkpointing: atomic save/restore, retention, elastic re-meshing."""
+from repro.checkpoint.manager import CheckpointManager   # noqa: F401

@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned architecture.
+
+``repro.configs.registry.get(name)`` returns the exact assigned config;
+``.reduced()`` gives the smoke-test scale-down of the same family.
+"""
+from repro.configs.registry import ARCHS, get  # noqa: F401

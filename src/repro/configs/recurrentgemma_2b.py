@@ -1,0 +1,14 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1 = MQA)
+d_ff=7680 vocab=256000 -- RG-LRU + local attention, 1 attention per
+3-layer group (window 2048). [arXiv:2402.19427; hf]
+
+Sub-quadratic (local attention + linear recurrence): runs long_500k."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv=1, d_ff=7680,
+    vocab=256000, act="gelu", hybrid_group=3, window=2048,
+    rope_theta=1e4, sub_quadratic=True,
+    source="arXiv:2402.19427; hf",
+)

@@ -1,0 +1,10 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 -- GQA, RoPE, gelu MLP. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv=4, d_ff=18432,
+    vocab=49152, act="gelu", qk_norm=False, rope_theta=1e5,
+    source="arXiv:2402.19173; hf",
+)

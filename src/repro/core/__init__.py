@@ -1,0 +1,20 @@
+"""repro.core -- the paper's primary contribution, in JAX.
+
+Flare's three integration levels (paper Fig. 1) as an executable system:
+
+* Level 1/2: deferred DataFrame plans -> Catalyst-analogue optimizer ->
+  stage-granular OR whole-query compilation (``engines``),
+* Level 3: staged UDFs (``staging``) and ML kernels (``ml``) that compile
+  together with the relational pipeline.
+"""
+from repro.core.dataframe import (DataFrame, FlareContext, FlareDataFrame,
+                                  any_, avg, count, flare, max_, min_, sum_)
+from repro.core.expr import Col, Expr, WithDomain, cast, col, lit, when
+from repro.core.plan import AggSpec
+from repro.core.staging import udf
+
+__all__ = [
+    "DataFrame", "FlareContext", "FlareDataFrame", "flare",
+    "col", "lit", "when", "cast", "udf", "AggSpec", "WithDomain",
+    "sum_", "avg", "min_", "max_", "count", "any_", "Col", "Expr",
+]

@@ -1,0 +1,247 @@
+"""Deferred DataFrame API + ``flare()`` accelerator entry point.
+
+Mirrors the user-facing shape of the paper (sections 2.2, 4.1)::
+
+    ctx = FlareContext()
+    ctx.register("lineitem", table)
+    df = ctx.table("lineitem").filter(col("l_discount").between(0.05, 0.07))
+    fd = flare(df)          # pick the Flare (whole-query compiled) back-end
+    fd.show()               # triggers compilation + execution
+
+``df.collect()`` without ``flare()`` runs on the stage-granular engine (the
+Spark analogue); ``df.collect(engine="volcano")`` runs the interpreted
+oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import engines as ENG
+from repro.core import expr as E
+from repro.core import optimizer as OPT
+from repro.core import plan as P
+from repro.relational import table as T
+
+
+class FlareContext:
+    """Session object: catalog + device cache + engine instances."""
+
+    def __init__(self, optimize: bool = True,
+                 join_reorder: bool = False):
+        self.catalog = P.Catalog()
+        self.cache = ENG.DeviceCache()
+        self.optimize = optimize
+        self.join_reorder = join_reorder
+
+    # -- catalog ---------------------------------------------------------------
+
+    def register(self, name: str, tbl: T.Table) -> None:
+        self.catalog.register(name, tbl)
+
+    def table(self, name: str) -> "DataFrame":
+        if name not in self.catalog:
+            raise KeyError(f"unknown table {name!r}")
+        return DataFrame(self, P.Scan(name))
+
+    def from_arrays(self, name: str, data, dtypes=None, domains=None
+                    ) -> "DataFrame":
+        self.register(name, T.Table.from_arrays(data, dtypes, domains))
+        return self.table(name)
+
+    # -- execution ---------------------------------------------------------------
+
+    def optimized(self, plan: P.Plan) -> P.Plan:
+        if not self.optimize:
+            return plan
+        return OPT.optimize(plan, self.catalog,
+                            join_reorder=self.join_reorder)
+
+    def execute(self, plan: P.Plan, engine: str,
+                stats: Optional[ENG.CompileStats] = None):
+        return ENG.execute(self.optimized(plan), self.catalog, engine,
+                           self.cache, stats)
+
+    def preload(self, *names: str) -> None:
+        """Paper's ``persist()``: move table columns to device up-front."""
+        for name in names or self.catalog.names():
+            tbl = self.catalog.table(name)
+            for f in tbl.schema:
+                self.cache.get(tbl, f.name)
+
+
+class DataFrame:
+    """A deferred query: context + logical plan (paper section 2.2)."""
+
+    def __init__(self, ctx: FlareContext, plan: P.Plan):
+        self.ctx = ctx
+        self.plan = plan
+
+    # -- transformations (all deferred) ------------------------------------------
+
+    def filter(self, pred: E.Expr) -> "DataFrame":
+        return DataFrame(self.ctx, P.Filter(self.plan, pred))
+
+    where = filter
+
+    def select(self, *exprs: Union[str, Tuple[str, E.Expr]]) -> "DataFrame":
+        outputs: List[Tuple[str, E.Expr]] = []
+        for item in exprs:
+            if isinstance(item, str):
+                outputs.append((item, E.col(item)))
+            elif isinstance(item, tuple):
+                outputs.append(item)
+            elif isinstance(item, E.Col):
+                outputs.append((item.name, item))
+            else:
+                raise TypeError("select() takes column names or "
+                                "expr.alias(name) tuples")
+        return DataFrame(self.ctx, P.Project(self.plan, tuple(outputs)))
+
+    def with_column(self, name: str, e: E.Expr) -> "DataFrame":
+        schema = self.plan.schema(self.ctx.catalog)
+        outputs = [(n, E.col(n)) for n in schema.names if n != name]
+        outputs.append((name, e))
+        return DataFrame(self.ctx, P.Project(self.plan, tuple(outputs)))
+
+    def join(self, other: "DataFrame", on: Union[str, Sequence[str]],
+             right_on: Union[str, Sequence[str], None] = None,
+             how: str = "inner", strategy: Optional[str] = None
+             ) -> "DataFrame":
+        left_on = (on,) if isinstance(on, str) else tuple(on)
+        if right_on is None:
+            r_on = left_on
+        else:
+            r_on = (right_on,) if isinstance(right_on, str) else tuple(right_on)
+        return DataFrame(self.ctx, P.Join(self.plan, other.plan,
+                                          left_on, r_on, how, strategy))
+
+    def group_by(self, *keys: str) -> "GroupedData":
+        return GroupedData(self, keys)
+
+    def agg(self, *specs: P.AggSpec) -> "DataFrame":
+        return DataFrame(self.ctx, P.Aggregate(self.plan, (), tuple(specs)))
+
+    def sort(self, *by: Union[str, Tuple[str, bool]]) -> "DataFrame":
+        norm = tuple((b, True) if isinstance(b, str) else b for b in by)
+        return DataFrame(self.ctx, P.Sort(self.plan, norm))
+
+    def limit(self, n: int) -> "DataFrame":
+        return DataFrame(self.ctx, P.Limit(self.plan, n))
+
+    # -- actions -------------------------------------------------------------------
+
+    def collect(self, engine: str = "stage") -> Dict[str, np.ndarray]:
+        return self.ctx.execute(self.plan, engine).compact()
+
+    def count(self, engine: str = "stage") -> int:
+        return self.ctx.execute(self.plan, engine).num_rows()
+
+    def explain(self, optimized: bool = True) -> str:
+        plan = self.ctx.optimized(self.plan) if optimized else self.plan
+        txt = "== Physical Plan ==\n" + plan.explain()
+        return txt
+
+    def schema(self) -> T.Schema:
+        return self.plan.schema(self.ctx.catalog)
+
+    def show(self, n: int = 20, engine: str = "stage") -> None:
+        print(format_rows(self.collect(engine), n))
+
+
+class GroupedData:
+    def __init__(self, df: DataFrame, keys: Tuple[str, ...]):
+        self.df = df
+        self.keys = keys
+
+    def agg(self, *specs: P.AggSpec) -> DataFrame:
+        return DataFrame(self.df.ctx,
+                         P.Aggregate(self.df.plan, self.keys, tuple(specs)))
+
+    def count(self, name: str = "count") -> DataFrame:
+        return self.agg(P.AggSpec(name, "count", None))
+
+
+# -- aggregate constructors ---------------------------------------------------
+
+
+def sum_(e: E.Expr, name: str = "sum") -> P.AggSpec:
+    return P.AggSpec(name, "sum", e)
+
+
+def avg(e: E.Expr, name: str = "avg") -> P.AggSpec:
+    return P.AggSpec(name, "avg", e)
+
+
+def min_(e: E.Expr, name: str = "min") -> P.AggSpec:
+    return P.AggSpec(name, "min", e)
+
+
+def max_(e: E.Expr, name: str = "max") -> P.AggSpec:
+    return P.AggSpec(name, "max", e)
+
+
+def count(name: str = "count") -> P.AggSpec:
+    return P.AggSpec(name, "count", None)
+
+
+def any_(e: E.Expr, name: str = "any") -> P.AggSpec:
+    """Carry a functionally-dependent column through a group-by."""
+    return P.AggSpec(name, "any", e)
+
+
+# -- the accelerator entry point (paper section 4.1) ---------------------------
+
+
+class FlareDataFrame:
+    """``flare(df)``: route this DataFrame through whole-query compilation."""
+
+    def __init__(self, df: DataFrame):
+        self.df = df
+        self.stats = ENG.CompileStats()
+
+    def collect(self) -> Dict[str, np.ndarray]:
+        self.stats = ENG.CompileStats()
+        return self.df.ctx.execute(self.df.plan, "compiled",
+                                   self.stats).compact()
+
+    def result(self):
+        self.stats = ENG.CompileStats()
+        return self.df.ctx.execute(self.df.plan, "compiled", self.stats)
+
+    def count(self) -> int:
+        return self.result().num_rows()
+
+    def show(self, n: int = 20) -> None:
+        print(format_rows(self.collect(), n))
+
+    def explain(self) -> str:
+        return self.df.explain()
+
+    def to_matrix(self, dtype=np.float32) -> np.ndarray:
+        """Hand off to an ML kernel (paper Fig. 8 ``flare(q).toMatrix``)."""
+        cols = self.collect()
+        return np.stack([np.asarray(v, dtype) for v in cols.values()],
+                        axis=1)
+
+
+def flare(df: DataFrame) -> FlareDataFrame:
+    return FlareDataFrame(df)
+
+
+def format_rows(cols: Dict[str, np.ndarray], n: int = 20) -> str:
+    names = list(cols)
+    widths = {k: max(len(k), *(len(str(v)) for v in cols[k][:n]))
+              if len(cols[k]) else len(k) for k in names}
+    header = "|" + "|".join(k.rjust(widths[k]) for k in names) + "|"
+    sep = "+" + "+".join("-" * widths[k] for k in names) + "+"
+    lines = [sep, header, sep]
+    m = len(next(iter(cols.values()))) if names else 0
+    for i in range(min(n, m)):
+        lines.append("|" + "|".join(
+            str(cols[k][i]).rjust(widths[k]) for k in names) + "|")
+    lines.append(sep)
+    if m > n:
+        lines.append(f"only showing top {n} of {m} rows")
+    return "\n".join(lines)

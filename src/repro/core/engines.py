@@ -1,0 +1,563 @@
+"""The three execution engines (DESIGN.md section 2).
+
+``volcano``  -- operator-at-a-time numpy interpreter.  The Postgres-analogue
+               baseline of the paper's Fig. 9 and the correctness oracle for
+               everything else: it materialises exact-size compacted arrays
+               after every operator.
+``stage``    -- stage-granular compilation (Spark/Tungsten + Flare Level 1
+               analogue): operator pipelines (scan/filter/project) fuse into
+               their parent pipeline-breaker (join/aggregate/sort), each
+               stage is jit-compiled separately, and stage outputs round-trip
+               through the host -- the "communication through Spark's runtime
+               system" overhead the paper measures in Fig. 5/6.
+``compiled`` -- whole-query compilation (Flare Level 2): ONE XLA program for
+               the entire plan; nothing materialises between operators.
+
+All three return a :class:`repro.core.lower.Result` with identical row
+semantics, so the engines can be differentially tested against each other
+(tests/test_engines.py, property tests in tests/test_property.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core import lower as L
+from repro.core import plan as P
+from repro.relational import table as T
+
+_BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit)
+
+
+# ---------------------------------------------------------------------------
+# device column cache ("persist" / preload semantics)
+# ---------------------------------------------------------------------------
+
+
+class DeviceCache:
+    """Caches device-resident columns per (table object, column name).
+
+    The paper's experiments distinguish "direct CSV" from "preloaded"
+    execution; with a warm cache our engines run purely in-memory.
+    """
+
+    def __init__(self):
+        self._cache: Dict[Tuple[int, str], jnp.ndarray] = {}
+
+    def get(self, tbl: T.Table, name: str) -> jnp.ndarray:
+        key = (id(tbl), name)
+        arr = self._cache.get(key)
+        if arr is None:
+            arr = jnp.asarray(tbl[name])
+            self._cache[key] = arr
+        return arr
+
+    def clear(self):
+        self._cache.clear()
+
+
+# ---------------------------------------------------------------------------
+# compiled (whole-query) engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompileStats:
+    trace_compile_s: float = 0.0
+    cache_hit: bool = False
+
+
+class CompiledEngine:
+    """Flare Level 2: plan -> single jit program, cached by fingerprint."""
+
+    def __init__(self):
+        self._cache: Dict[Any, Tuple[Callable, List, Any, T.Schema, Dict]] = {}
+
+    def _key(self, p: P.Plan, catalog: P.Catalog):
+        # dictionary CONTENTS are baked into compiled programs (string-
+        # predicate LUTs, comparison codes, decode tables) -- the key
+        # must cover them, not just their lengths (found by hypothesis:
+        # same-shape tables with different dictionaries collided)
+        parts = [p.fingerprint()]
+        for name in sorted(self._scan_tables(p)):
+            tbl = catalog.table(name)
+            parts.append((name, tbl.num_rows,
+                          tuple((f.name, f.dtype, f.domain,
+                                 hash(tbl.dictionary(f.name) or ()))
+                                for f in tbl.schema)))
+        return tuple(parts)
+
+    @staticmethod
+    def _scan_tables(p: P.Plan) -> List[str]:
+        out = []
+
+        def rec(n):
+            if isinstance(n, P.Scan):
+                out.append(n.table)
+            for c in n.children():
+                rec(c)
+
+        rec(p)
+        return out
+
+    def execute(self, p: P.Plan, catalog: P.Catalog, cache: DeviceCache,
+                stats: Optional[CompileStats] = None) -> L.Result:
+        key = self._key(p, catalog)
+        entry = self._cache.get(key)
+        if entry is None:
+            t0 = time.perf_counter()
+            fn, layout, out_info = L.build_callable(p, catalog)
+            jfn = jax.jit(fn)
+            entry = (jfn, layout, out_info, p.schema(catalog),
+                     self._scan_map(p))
+            self._cache[key] = entry
+            if stats is not None:
+                stats.trace_compile_s = time.perf_counter() - t0
+        elif stats is not None:
+            stats.cache_hit = True
+        jfn, layout, out_info, schema, scan_map = entry
+        args = []
+        for scan_id, names in layout:
+            tbl = catalog.table(scan_map[scan_id])
+            for n in names:
+                args.append(cache.get(tbl, n))
+        out_cols, mask = jfn(*args)
+        out_cols = {k: np.asarray(v) for k, v in out_cols.items()}
+        mask_np = np.asarray(mask)
+        dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
+        return L.Result(out_cols, mask_np, schema, dicts)
+
+    @staticmethod
+    def _scan_map(p: P.Plan) -> Dict[int, str]:
+        out = {}
+
+        def rec(n):
+            if isinstance(n, P.Scan):
+                out[id(n)] = n.table
+            for c in n.children():
+                rec(c)
+
+        rec(p)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# stage-granular engine (Spark/Tungsten analogue)
+# ---------------------------------------------------------------------------
+
+
+class StageEngine:
+    """Pipelines fuse into their parent breaker; each breaker is a stage.
+
+    Stage outputs are materialised to the host between stages, modelling
+    Spark's exchange/iterator boundaries (paper section 3.1: 80% of Q6 time
+    was spent in exactly this glue).
+    """
+
+    def __init__(self):
+        self._cache: Dict[Any, Tuple[Callable, List]] = {}
+        self.stages_run = 0
+
+    def execute(self, p: P.Plan, catalog: P.Catalog,
+                cache: DeviceCache) -> L.Result:
+        self.stages_run = 0
+        cols, mask, info = self._run_stage(p, catalog, cache)
+        schema = p.schema(catalog)
+        dicts = {n: sc.dictionary for n, sc in info.cols.items()}
+        cols = {n: cols[n] for n in schema.names}
+        return L.Result(cols, mask, schema, dicts)
+
+    def _run_stage(self, root: P.Plan, catalog: P.Catalog,
+                   cache: DeviceCache):
+        """Execute the stage rooted at ``root``; returns host arrays."""
+        self.stages_run += 1
+        leaves: Dict[int, Tuple[Dict[str, np.ndarray], Optional[np.ndarray],
+                                L.StaticInfo]] = {}
+
+        def gather(n: P.Plan, is_root: bool):
+            if isinstance(n, P.Scan):
+                leaves[id(n)] = ("scan", n)
+                return
+            if isinstance(n, _BREAKERS) and not is_root:
+                leaves[id(n)] = ("mat", self._run_stage(n, catalog, cache))
+                return
+            for c in n.children():
+                gather(c, False)
+
+        gather(root, True)
+
+        needed = L.required_scan_columns(root, catalog)
+        leaf_ids = sorted(leaves)
+        # flat argument layout: per leaf, its columns then its mask (mat only)
+        layout: List[Tuple[int, List[str], bool]] = []
+        args: List[np.ndarray] = []
+        infos: Dict[int, L.StaticInfo] = {}
+        for lid in leaf_ids:
+            kind, payload = leaves[lid]
+            if kind == "scan":
+                scan = payload
+                tbl = catalog.table(scan.table)
+                names = needed.get(lid) or tbl.schema.names[:1]
+                layout.append((lid, names, False))
+                infos[lid] = L.StaticInfo(
+                    {n: L._static_of_scan(tbl).cols[n] for n in names},
+                    tbl.num_rows)
+                for n in names:
+                    args.append(cache.get(tbl, n))
+            else:
+                mcols, mmask, minfo = payload
+                names = list(mcols)
+                layout.append((lid, names, True))
+                infos[lid] = minfo
+                for n in names:
+                    args.append(jnp.asarray(mcols[n]))
+                args.append(jnp.asarray(
+                    mmask if mmask is not None
+                    else np.ones(minfo.n_rows, np.bool_)))
+
+        def fn(*flat):
+            it = iter(flat)
+            scans: Dict[int, L.Stream] = {}
+            for lid, names, has_mask in layout:
+                cols = {n: next(it) for n in names}
+                mask = next(it) if has_mask else None
+                scans[lid] = L.Stream(cols, mask, infos[lid])
+            stream = L.lower_node(root, catalog, scans)
+            return stream.cols, stream.the_mask()
+
+        key = (root.fingerprint(),
+               tuple((lid, tuple(names), has_mask, infos[lid].n_rows,
+                      tuple(hash(infos[lid].cols[n].dictionary or ())
+                            for n in names))
+                     for lid, names, has_mask in layout))
+        jfn = self._cache.get(key)
+        if jfn is None:
+            jfn = jax.jit(fn)
+            self._cache[key] = jfn
+        out_cols, mask = jfn(*args)
+        # host round-trip = the runtime-boundary overhead being modelled
+        out_cols = {k: np.asarray(v) for k, v in out_cols.items()}
+        return out_cols, np.asarray(mask), L.static_info(root, catalog)
+
+
+# ---------------------------------------------------------------------------
+# volcano engine (numpy oracle)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _VStream:
+    cols: Dict[str, np.ndarray]
+    dicts: Dict[str, Optional[Tuple[str, ...]]]
+    domains: Dict[str, Optional[int]]
+
+
+class VolcanoEngine:
+    """Operator-at-a-time interpreter over compacted numpy arrays.
+
+    Semantics deliberately mirror the compiled engine (left-join zero fill,
+    group-code output order, N:1 joins) so results are comparable
+    element-for-element.  Arithmetic runs in float64: this is the
+    high-precision oracle.
+    """
+
+    def execute(self, p: P.Plan, catalog: P.Catalog,
+                cache: DeviceCache = None) -> L.Result:
+        vs = self._run(p, catalog)
+        schema = p.schema(catalog)
+        cols = {n: vs.cols[n] for n in schema.names}
+        return L.Result(cols, None, schema,
+                        {n: vs.dicts.get(n) for n in schema.names})
+
+    # -- operators -----------------------------------------------------------
+
+    def _run(self, p: P.Plan, catalog: P.Catalog) -> _VStream:
+        if isinstance(p, P.Scan):
+            tbl = catalog.table(p.table)
+            return _VStream(
+                {f.name: tbl[f.name] for f in tbl.schema},
+                {f.name: tbl.dictionary(f.name) for f in tbl.schema},
+                {f.name: f.domain for f in tbl.schema})
+        if isinstance(p, P.Filter):
+            c = self._run(p.child, catalog)
+            m = np.asarray(self._eval(p.pred, c), dtype=bool)
+            return _VStream({n: v[m] for n, v in c.cols.items()},
+                            c.dicts, c.domains)
+        if isinstance(p, P.Project):
+            c = self._run(p.child, catalog)
+            cols, dicts, doms = {}, {}, {}
+            for name, e in p.outputs:
+                cols[name] = np.asarray(self._eval(e, c))
+                dicts[name] = c.dicts.get(e.name) if isinstance(e, E.Col) else None
+                if isinstance(e, E.Col):
+                    doms[name] = c.domains.get(e.name)
+                elif isinstance(e, E.WithDomain):
+                    doms[name] = e.domain
+                    if isinstance(e.arg, E.Col):
+                        dicts[name] = c.dicts.get(e.arg.name)
+                else:
+                    doms[name] = None
+            return _VStream(cols, dicts, doms)
+        if isinstance(p, P.Join):
+            return self._join(p, catalog)
+        if isinstance(p, P.Aggregate):
+            return self._aggregate(p, catalog)
+        if isinstance(p, P.Sort):
+            c = self._run(p.child, catalog)
+            keys = []
+            for name, asc in reversed(p.by):
+                v = c.cols[name]
+                if not asc:
+                    v = -v.astype(np.float64) if v.dtype.kind in "fiu" else v
+                keys.append(v)
+            order = np.lexsort(tuple(keys)) if keys else np.arange(
+                len(next(iter(c.cols.values()))))
+            return _VStream({n: v[order] for n, v in c.cols.items()},
+                            c.dicts, c.domains)
+        if isinstance(p, P.Limit):
+            c = self._run(p.child, catalog)
+            return _VStream({n: v[: p.n] for n, v in c.cols.items()},
+                            c.dicts, c.domains)
+        raise TypeError(p)
+
+    def _join(self, p: P.Join, catalog: P.Catalog) -> _VStream:
+        left = self._run(p.left, catalog)
+        right = self._run(p.right, catalog)
+        doms = []
+        for lk, rk in zip(p.left_on, p.right_on):
+            dl = left.dicts.get(lk)
+            gl = len(dl) if dl is not None else left.domains.get(lk)
+            dr = right.dicts.get(rk)
+            gr = len(dr) if dr is not None else right.domains.get(rk)
+            doms.append(max(gl or 0, gr or 0) or (1 << 31))
+        kp = self._combine([left.cols[k] for k in p.left_on], doms)
+        kb = self._combine([right.cols[k] for k in p.right_on], doms)
+        perm = np.argsort(kb, kind="stable")
+        kb_s = kb[perm]
+        idx = np.searchsorted(kb_s, kp)
+        idx_c = np.clip(idx, 0, max(len(kb_s) - 1, 0))
+        if len(kb_s):
+            matched = kb_s[idx_c] == kp
+        else:
+            matched = np.zeros(len(kp), bool)
+        if p.how == "semi":
+            return _VStream({n: v[matched] for n, v in left.cols.items()},
+                            left.dicts, left.domains)
+        if p.how == "anti":
+            keep = ~matched
+            return _VStream({n: v[keep] for n, v in left.cols.items()},
+                            left.dicts, left.domains)
+        cols, dicts, domsout = dict(left.cols), dict(left.dicts), dict(left.domains)
+        for name, v in right.cols.items():
+            if name in p.right_on:
+                continue
+            g = v[perm][idx_c] if len(kb_s) else np.zeros(len(kp), v.dtype)
+            if p.how == "left":
+                g = np.where(matched, g, np.zeros((), v.dtype))
+            cols[name] = g
+            dicts[name] = right.dicts.get(name)
+            domsout[name] = right.domains.get(name)
+        if p.how == "inner":
+            cols = {n: v[matched] for n, v in cols.items()}
+        return _VStream(cols, dicts, domsout)
+
+    @staticmethod
+    def _combine(keys, doms):
+        out = keys[0].astype(np.int64)
+        for k, d in zip(keys[1:], doms[1:]):
+            out = out * np.int64(d) + k.astype(np.int64)
+        return out
+
+    def _aggregate(self, p: P.Aggregate, catalog: P.Catalog) -> _VStream:
+        c = self._run(p.child, catalog)
+        n = len(next(iter(c.cols.values())))
+        if not p.keys:
+            cols = {}
+            for a in p.aggs:
+                raw = None if a.arg is None else np.asarray(
+                    self._eval(a.arg, c))
+                v = None if raw is None else raw.astype(np.float64)
+                cols[a.name] = np.asarray(
+                    [self._agg_all(a.op, v, n,
+                                   raw.dtype if raw is not None
+                                   else None)])
+            return _VStream(cols, {k: None for k in cols},
+                            {k: None for k in cols})
+        doms = []
+        for k in p.keys:
+            d = c.dicts.get(k)
+            doms.append(len(d) if d is not None else c.domains[k])
+        strides = []
+        acc = 1
+        for d in reversed(doms):
+            strides.append(acc)
+            acc *= d
+        strides.reverse()
+        code = np.zeros(n, np.int64)
+        for k, s in zip(p.keys, strides):
+            code += c.cols[k].astype(np.int64) * s
+        groups, inv = np.unique(code, return_inverse=True)  # sorted: matches compiled group-code order
+        g = len(groups)
+        cols, dicts, domsout = {}, {}, {}
+        for k, s, d in zip(p.keys, strides, doms):
+            cols[k] = ((groups // s) % d).astype(c.cols[k].dtype)
+            dicts[k] = c.dicts.get(k)
+            domsout[k] = c.domains.get(k)
+        cnt = np.bincount(inv, minlength=g)
+        for a in p.aggs:
+            if a.op == "count":
+                cols[a.name] = cnt.astype(np.int64)
+                continue
+            v = np.asarray(self._eval(a.arg, c))
+            vf = v.astype(np.float64)
+            if a.op == "sum":
+                cols[a.name] = np.bincount(inv, weights=vf, minlength=g)
+            elif a.op == "avg":
+                s_ = np.bincount(inv, weights=vf, minlength=g)
+                cols[a.name] = s_ / np.maximum(cnt, 1)
+            elif a.op in ("min", "max", "any"):
+                fill = np.inf if a.op == "min" else -np.inf
+                out = np.full(g, fill)
+                ufn = np.minimum if a.op == "min" else np.maximum
+                ufn.at(out, inv, vf)
+                cols[a.name] = out.astype(v.dtype) if a.op == "any" else out
+            if a.op == "any" and isinstance(a.arg, E.Col):
+                dicts[a.name] = c.dicts.get(a.arg.name)
+                domsout[a.name] = c.domains.get(a.arg.name)
+            else:
+                dicts[a.name] = None
+                domsout[a.name] = None
+        return _VStream(cols, dicts, domsout)
+
+    @staticmethod
+    def _agg_all(op, v, n, dtype=None):
+        # empty-input sentinels match the compiled engine's masked fills
+        # (f32 finfo.max / int32 iinfo.max, NOT inf)
+        def hi():
+            return (float(np.finfo(np.float32).max)
+                    if dtype is None or dtype.kind == "f"
+                    else float(np.iinfo(np.int32).max))
+
+        if op == "count":
+            return np.int64(n)
+        if op == "sum":
+            return v.sum() if len(v) else 0.0
+        if op == "avg":
+            return v.mean() if len(v) else 0.0
+        if op == "min":
+            return v.min() if len(v) else hi()
+        if op == "max":
+            return v.max() if len(v) else -hi()
+        raise ValueError(op)
+
+    # -- expressions over numpy ------------------------------------------------
+
+    def _eval(self, e: E.Expr, s: _VStream):
+        if isinstance(e, E.Col):
+            return s.cols[e.name]
+        if isinstance(e, E.Lit):
+            return e.value
+        if isinstance(e, E.BinOp):
+            l, r = self._eval(e.left, s), self._eval(e.right, s)
+            if e.op == "/":
+                return np.asarray(l, np.float64) / np.asarray(r, np.float64)
+            return {"+": np.add, "-": np.subtract,
+                    "*": np.multiply}[e.op](l, r)
+        if isinstance(e, E.Cmp):
+            ld = s.dicts.get(e.left.name) if isinstance(e.left, E.Col) else None
+            rd = s.dicts.get(e.right.name) if isinstance(e.right, E.Col) else None
+            if ld is not None and isinstance(e.right, E.Lit):
+                return self._cmp_code(e.op, s.cols[e.left.name], ld,
+                                      e.right.value)
+            if rd is not None and isinstance(e.left, E.Lit):
+                flipped = {"<": ">", ">": "<", "<=": ">=", ">=": "<=",
+                           "==": "==", "!=": "!="}[e.op]
+                return self._cmp_code(flipped, s.cols[e.right.name], rd,
+                                      e.left.value)
+            l, r = self._eval(e.left, s), self._eval(e.right, s)
+            return {"<": np.less, "<=": np.less_equal, ">": np.greater,
+                    ">=": np.greater_equal, "==": np.equal,
+                    "!=": np.not_equal}[e.op](l, r)
+        if isinstance(e, E.BoolOp):
+            vals = [np.asarray(self._eval(a, s), bool) for a in e.args]
+            out = vals[0]
+            for v in vals[1:]:
+                out = (out & v) if e.op == "and" else (out | v)
+            return out
+        if isinstance(e, E.Not):
+            return ~np.asarray(self._eval(e.arg, s), bool)
+        if isinstance(e, E.InSet):
+            d = s.dicts.get(e.arg.name) if isinstance(e.arg, E.Col) else None
+            v = self._eval(e.arg, s)
+            if d is not None:
+                codes = [d.index(x) for x in e.values if x in d]
+                return np.isin(v, codes)
+            return np.isin(v, e.values)
+        if isinstance(e, E.StrPred):
+            d = s.dicts[e.arg.name]
+            lut = np.asarray([L._match_str(e.kind, x, e.params) for x in d],
+                             bool)
+            return lut[self._eval(e.arg, s)]
+        if isinstance(e, E.IfThenElse):
+            return np.where(np.asarray(self._eval(e.cond, s), bool),
+                            self._eval(e.then, s), self._eval(e.other, s))
+        if isinstance(e, E.Cast):
+            return np.asarray(self._eval(e.arg, s)).astype(
+                T.numpy_dtype(e.dtype))
+        if isinstance(e, E.WithDomain):
+            return self._eval(e.arg, s)
+        if isinstance(e, E.Udf):
+            args = [np.asarray(self._eval(a, s)) for a in e.args]
+            return np.asarray(e.fn(*args))
+        raise TypeError(e)
+
+    @staticmethod
+    def _cmp_code(op, codes, dictionary, value):
+        try:
+            code = dictionary.index(value)
+        except ValueError:
+            if op == "==":
+                return np.zeros(codes.shape, bool)
+            if op == "!=":
+                return np.ones(codes.shape, bool)
+            code = int(np.searchsorted(np.asarray(dictionary, object), value))
+            if op in ("<", "<="):
+                return codes < code
+            return codes >= code
+        return {"<": np.less, "<=": np.less_equal, ">": np.greater,
+                ">=": np.greater_equal, "==": np.equal,
+                "!=": np.not_equal}[op](codes, code)
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+
+_COMPILED = CompiledEngine()
+_STAGE = StageEngine()
+_VOLCANO = VolcanoEngine()
+_DEFAULT_CACHE = DeviceCache()
+
+
+def execute(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
+            cache: Optional[DeviceCache] = None,
+            stats: Optional[CompileStats] = None) -> L.Result:
+    cache = cache or _DEFAULT_CACHE
+    if engine == "compiled":
+        return _COMPILED.execute(p, catalog, cache, stats)
+    if engine == "stage":
+        return _STAGE.execute(p, catalog, cache)
+    if engine == "volcano":
+        return _VOLCANO.execute(p, catalog)
+    if engine == "tuple":
+        from repro.core.tuple_engine import TupleEngine
+        return TupleEngine().execute(p, catalog)
+    raise ValueError(f"unknown engine {engine!r}")

@@ -1,0 +1,696 @@
+"""Whole-query lowering: logical plan -> ONE traced JAX function.
+
+This is the Flare Level 2 analogue (paper section 4): the *entire* optimized
+plan is lowered into a single program, so that operator pipelines fuse and
+nothing materialises between operators.  Where the paper emits C and
+compiles with GCC, we trace into a jaxpr and compile with XLA.
+
+TPU adaptation (DESIGN.md section 3)::
+
+    Filter      -> boolean selection mask (predication, never compacts)
+    Hash join   -> sorted-array join: argsort build keys once, probe with
+                   vectorised searchsorted + gather (N:1 / PK-FK joins)
+    Hash agg    -> segment-sum onto the dense, statically-bounded group
+                   domain derived from dictionaries / key domains
+    Strings     -> int32 dictionary codes; string predicates evaluated on
+                   the tiny dictionary at *lowering* time and baked in as
+                   lookup tables (Parquet-style dictionary filtering)
+
+Lowering runs in two phases.  Phase A (host, before tracing) propagates
+static information: dictionaries, key domains, join key-combination
+constants.  Phase B is the traced function over device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.relational import table as T
+
+_I32_MAX = np.int32(2 ** 31 - 1)
+
+# ---------------------------------------------------------------------------
+# static (phase A) column info
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StaticCol:
+    dtype: str
+    dictionary: Optional[Tuple[str, ...]] = None
+    domain: Optional[int] = None  # dense-int key domain (exclusive bound)
+
+    @property
+    def group_domain(self) -> Optional[int]:
+        if self.dictionary is not None:
+            return len(self.dictionary)
+        return self.domain
+
+
+@dataclasses.dataclass
+class StaticInfo:
+    """Phase-A result for one plan node's output stream."""
+
+    cols: Dict[str, StaticCol]
+    n_rows: int  # static row bound of the stream
+
+
+def _static_of_scan(tbl: T.Table) -> StaticInfo:
+    cols = {}
+    for f in tbl.schema:
+        cols[f.name] = StaticCol(f.dtype, tbl.dictionary(f.name), f.domain)
+    return StaticInfo(cols, tbl.num_rows)
+
+
+# ---------------------------------------------------------------------------
+# stream: the traced value flowing between operators
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Stream:
+    cols: Dict[str, jnp.ndarray]
+    mask: Optional[jnp.ndarray]  # bool [n] or None (= all valid)
+    info: StaticInfo
+
+    @property
+    def n(self) -> int:
+        return self.info.n_rows
+
+    def the_mask(self) -> jnp.ndarray:
+        if self.mask is None:
+            return jnp.ones((self.n,), dtype=jnp.bool_)
+        return self.mask
+
+
+# ---------------------------------------------------------------------------
+# expression evaluation (phase B, traced)
+# ---------------------------------------------------------------------------
+
+_JNP_OF = {
+    T.INT32: jnp.int32, T.INT64: jnp.int32,  # device int64 needs x64; int32 suffices at our scales (checked in phase A)
+    T.FLOAT32: jnp.float32, T.FLOAT64: jnp.float32,
+    T.BOOL: jnp.bool_, T.DATE: jnp.int32, T.STRING: jnp.int32,
+}
+
+
+def _dict_of(e: E.Expr, info: StaticInfo) -> Optional[Tuple[str, ...]]:
+    if isinstance(e, E.Col):
+        return info.cols[e.name].dictionary
+    return None
+
+
+def _str_code(dictionary: Tuple[str, ...], value: str) -> int:
+    """Code of ``value`` in a sorted dictionary, or -1 if absent."""
+    try:
+        return dictionary.index(value)
+    except ValueError:
+        return -1
+
+
+def eval_expr(e: E.Expr, stream: Stream) -> jnp.ndarray:
+    info = stream.info
+    if isinstance(e, E.Col):
+        return stream.cols[e.name]
+    if isinstance(e, E.Lit):
+        if isinstance(e.value, str):
+            raise TypeError("string literal outside comparison")
+        return jnp.asarray(e.value)
+    if isinstance(e, E.BinOp):
+        l, r = eval_expr(e.left, stream), eval_expr(e.right, stream)
+        if e.op == "+":
+            return l + r
+        if e.op == "-":
+            return l - r
+        if e.op == "*":
+            return l * r
+        if e.op == "/":
+            num = l.astype(jnp.float32) if jnp.issubdtype(l.dtype, jnp.integer) else l
+            den = r.astype(jnp.float32) if jnp.issubdtype(r.dtype, jnp.integer) else r
+            return num / den
+        raise ValueError(e.op)
+    if isinstance(e, E.Cmp):
+        # string comparison -> dictionary code comparison (codes are in
+        # dictionary == lexical order, so <,> are order-preserving too).
+        ldict = _dict_of(e.left, info)
+        rdict = _dict_of(e.right, info)
+        if ldict is not None and isinstance(e.right, E.Lit):
+            code = _str_code(ldict, e.right.value)
+            l = eval_expr(e.left, stream)
+            return _cmp_with_code(e.op, l, code, ldict, e.right.value)
+        if rdict is not None and isinstance(e.left, E.Lit):
+            flipped = {"<": ">", ">": "<", "<=": ">=", ">=": "<=",
+                       "==": "==", "!=": "!="}[e.op]
+            code = _str_code(rdict, e.left.value)
+            r = eval_expr(e.right, stream)
+            return _cmp_with_code(flipped, r, code, rdict, e.left.value)
+        if ldict is not None and rdict is not None:
+            if ldict != rdict:
+                raise TypeError("cross-dictionary string comparison "
+                                "unsupported in compiled engine")
+            return _apply_cmp(e.op, eval_expr(e.left, stream),
+                              eval_expr(e.right, stream))
+        return _apply_cmp(e.op, eval_expr(e.left, stream),
+                          eval_expr(e.right, stream))
+    if isinstance(e, E.BoolOp):
+        vals = [eval_expr(a, stream) for a in e.args]
+        out = vals[0]
+        for v in vals[1:]:
+            out = (out & v) if e.op == "and" else (out | v)
+        return out
+    if isinstance(e, E.Not):
+        return ~eval_expr(e.arg, stream)
+    if isinstance(e, E.InSet):
+        d = _dict_of(e.arg, info)
+        arg = eval_expr(e.arg, stream)
+        if d is not None:
+            codes = [c for c in (_str_code(d, v) for v in e.values) if c >= 0]
+            if not codes:
+                return jnp.zeros(arg.shape, jnp.bool_)
+            out = arg == codes[0]
+            for c in codes[1:]:
+                out = out | (arg == c)
+            return out
+        out = arg == e.values[0]
+        for v in e.values[1:]:
+            out = out | (arg == v)
+        return out
+    if isinstance(e, E.StrPred):
+        d = _dict_of(e.arg, info)
+        if d is None:
+            raise TypeError(f"{e.kind} on non-string column")
+        lut = np.asarray([_match_str(e.kind, s, e.params) for s in d],
+                         dtype=np.bool_)
+        codes = eval_expr(e.arg, stream)
+        return jnp.asarray(lut)[codes]
+    if isinstance(e, E.IfThenElse):
+        return jnp.where(eval_expr(e.cond, stream),
+                         eval_expr(e.then, stream),
+                         eval_expr(e.other, stream))
+    if isinstance(e, E.Cast):
+        return eval_expr(e.arg, stream).astype(_JNP_OF[e.dtype])
+    if isinstance(e, E.WithDomain):
+        return eval_expr(e.arg, stream)
+    if isinstance(e, E.Udf):
+        args = [eval_expr(a, stream) for a in e.args]
+        return e.fn(*args)  # staged: traced straight into this program
+    raise TypeError(f"cannot lower {e!r}")
+
+
+def _cmp_with_code(op, codes, code, dictionary, value):
+    if code < 0:
+        # literal absent from dictionary: == is all-false, != all-true;
+        # for ordering, fall back to position where it would be inserted.
+        if op == "==":
+            return jnp.zeros(codes.shape, jnp.bool_)
+        if op == "!=":
+            return jnp.ones(codes.shape, jnp.bool_)
+        code = int(np.searchsorted(np.asarray(dictionary, dtype=object),
+                                   value))
+        if op in ("<", "<="):
+            return codes < code
+        return codes >= code
+    return _apply_cmp(op, codes, jnp.int32(code))
+
+
+def _apply_cmp(op, l, r):
+    return {"<": jnp.less, "<=": jnp.less_equal, ">": jnp.greater,
+            ">=": jnp.greater_equal, "==": jnp.equal,
+            "!=": jnp.not_equal}[op](l, r)
+
+
+def _match_str(kind: str, s: str, params: Tuple[str, ...]) -> bool:
+    if kind == "startswith":
+        return s.startswith(params[0])
+    if kind == "endswith":
+        return s.endswith(params[0])
+    if kind == "contains":
+        return params[0] in s
+    if kind == "like":
+        return fnmatch.fnmatchcase(s, params[0].replace("%", "*").replace("_", "?"))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# phase A: static info propagation
+# ---------------------------------------------------------------------------
+
+
+def static_info(p: P.Plan, catalog: P.Catalog) -> StaticInfo:
+    if isinstance(p, P.Scan):
+        return _static_of_scan(catalog.table(p.table))
+    if isinstance(p, P.Filter):
+        return static_info(p.child, catalog)
+    if isinstance(p, P.Project):
+        child = static_info(p.child, catalog)
+        schema = p.child.schema(catalog)
+        cols = {}
+        for name, e in p.outputs:
+            if isinstance(e, E.Col):
+                cols[name] = child.cols[e.name]
+            elif isinstance(e, E.WithDomain):
+                inner = (child.cols[e.arg.name] if isinstance(e.arg, E.Col)
+                         else StaticCol(E.infer_dtype(e.arg, schema)))
+                cols[name] = StaticCol(inner.dtype, inner.dictionary,
+                                       e.domain)
+            else:
+                cols[name] = StaticCol(E.infer_dtype(e, schema))
+        return StaticInfo(cols, child.n_rows)
+    if isinstance(p, P.Join):
+        left = static_info(p.left, catalog)
+        right = static_info(p.right, catalog)
+        if p.how in ("semi", "anti"):
+            return left
+        cols = dict(left.cols)
+        for name, sc in right.cols.items():
+            if name in p.right_on:
+                continue
+            cols[name] = sc
+        return StaticInfo(cols, left.n_rows)
+    if isinstance(p, P.Aggregate):
+        child = static_info(p.child, catalog)
+        strides, domain = _group_layout(p, child)
+        cols = {}
+        for k in p.keys:
+            cols[k] = child.cols[k]
+        schema = p.schema(catalog)
+        for a in p.aggs:
+            if a.op == "any" and isinstance(a.arg, E.Col):
+                cols[a.name] = child.cols[a.arg.name]  # keeps dict/domain
+            else:
+                cols[a.name] = StaticCol(schema[a.name].dtype)
+        n = domain if p.keys else 1
+        return StaticInfo(cols, n)
+    if isinstance(p, (P.Sort,)):
+        return static_info(p.child, catalog)
+    if isinstance(p, P.Limit):
+        child = static_info(p.child, catalog)
+        return StaticInfo(child.cols, min(child.n_rows, p.n))
+    raise TypeError(f"no static info for {p!r}")
+
+
+def _group_layout(p: P.Aggregate, child: StaticInfo) -> Tuple[List[int], int]:
+    """Strides and total size of the dense group-code domain."""
+    doms = []
+    for k in p.keys:
+        g = child.cols[k].group_domain
+        if g is None:
+            raise TypeError(
+                f"aggregate key '{k}' needs a dictionary or a dense integer "
+                f"domain (Field.domain) for TPU direct-indexed aggregation")
+        doms.append(g)
+    total = 1
+    for d in doms:
+        total *= d
+    if total > (1 << 26):
+        raise ValueError(f"group domain {total} too large for direct "
+                         f"aggregation; add a coarser key encoding")
+    strides = []
+    acc = 1
+    for d in reversed(doms):
+        strides.append(acc)
+        acc *= d
+    strides.reverse()
+    return strides, max(total, 1)
+
+
+def _combine_keys(keys: Sequence[jnp.ndarray], doms: Sequence[int]) -> jnp.ndarray:
+    total = 1
+    for d in doms:
+        total *= d
+    if total > int(_I32_MAX):
+        raise ValueError("combined key domain exceeds int32; enable a "
+                         "wider key encoding")
+    out = keys[0].astype(jnp.int32)
+    for k, d in zip(keys[1:], doms[1:]):
+        out = out * np.int32(d) + k.astype(jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# phase B: traced operators
+# ---------------------------------------------------------------------------
+
+
+def _join_info(p: P.Join, left: StaticInfo, right: StaticInfo
+               ) -> StaticInfo:
+    """Output static info from the actual input streams (stream row
+    counts may differ from catalog counts under sharded execution)."""
+    if p.how in ("semi", "anti"):
+        return left
+    cols = dict(left.cols)
+    for name, sc in right.cols.items():
+        if name not in p.right_on:
+            cols[name] = sc
+    return StaticInfo(cols, left.n_rows)
+
+
+def _lower_join(p: P.Join, left: Stream, right: Stream,
+                catalog: P.Catalog) -> Stream:
+    strategy = p.strategy or "sorted"
+    # --- combined integer keys ------------------------------------------------
+    ldoms = [left.info.cols[k].group_domain or int(_I32_MAX) for k in p.left_on]
+    rdoms = [right.info.cols[k].group_domain or int(_I32_MAX) for k in p.right_on]
+    doms = [max(a, b) for a, b in zip(ldoms, rdoms)]
+    if len(p.left_on) > 1:
+        for d in doms:
+            if d >= int(_I32_MAX):
+                raise TypeError("composite join keys need Field.domain bounds")
+    kp = _combine_keys([left.cols[k] for k in p.left_on], doms)
+    kb = _combine_keys([right.cols[k] for k in p.right_on], doms)
+
+    # --- build side: sort keys once (the 'hash table' analogue) ---------------
+    if right.mask is not None:
+        kb = jnp.where(right.mask, kb, _I32_MAX)  # invalid rows never match
+    perm = jnp.argsort(kb)
+    kb_sorted = kb[perm]
+
+    pmask = left.the_mask()
+    if strategy == "sortmerge":
+        # Paper Fig. 6: sort-merge also sorts the (large) probe side, then
+        # un-permutes results -- strictly more work, kept for comparison.
+        probe_perm = jnp.argsort(kp)
+        kp_s = kp[probe_perm]
+        idx_s = jnp.searchsorted(kb_sorted, kp_s)
+        inv = jnp.argsort(probe_perm)
+        idx = idx_s[inv]
+    else:
+        idx = jnp.searchsorted(kb_sorted, kp)
+
+    idx_c = jnp.clip(idx, 0, kb_sorted.shape[0] - 1)
+    matched = (kb_sorted[idx_c] == kp) & pmask
+
+    if p.how == "semi":
+        return Stream(dict(left.cols), matched,
+                      _join_info(p, left.info, right.info))
+    if p.how == "anti":
+        return Stream(dict(left.cols), pmask & ~matched,
+                      _join_info(p, left.info, right.info))
+
+    cols = dict(left.cols)
+    for name in right.cols:
+        if name in p.right_on:
+            continue
+        gathered = right.cols[name][perm][idx_c]
+        if p.how == "left":
+            gathered = jnp.where(matched, gathered,
+                                 jnp.zeros((), gathered.dtype))
+        cols[name] = gathered
+    mask = matched if p.how == "inner" else pmask
+    return Stream(cols, mask, _join_info(p, left.info, right.info))
+
+
+def _lower_aggregate(p: P.Aggregate, child: Stream,
+                     catalog: P.Catalog) -> Stream:
+    info = static_info(p, catalog)
+    mask = child.the_mask()
+    maskf = mask.astype(jnp.float32)
+
+    def masked(vals, fill=None):
+        if fill is None:
+            return vals * maskf.astype(vals.dtype)
+        return jnp.where(mask, vals, jnp.asarray(fill, vals.dtype))
+
+    if not p.keys:  # global aggregate
+        cols: Dict[str, jnp.ndarray] = {}
+        cnt = jnp.sum(mask.astype(jnp.int32))
+        for a in p.aggs:
+            if a.op == "count":
+                cols[a.name] = cnt[None]
+                continue
+            v = eval_expr(a.arg, child)
+            if jnp.issubdtype(v.dtype, jnp.integer) and a.op in ("sum", "avg"):
+                v = v.astype(jnp.float32)
+            if a.op == "sum":
+                cols[a.name] = jnp.sum(masked(v))[None]
+            elif a.op == "avg":
+                s = jnp.sum(masked(v))
+                cols[a.name] = (s / jnp.maximum(cnt, 1))[None]
+            elif a.op == "min":
+                cols[a.name] = jnp.min(masked(v, _type_max(v.dtype)))[None]
+            elif a.op == "max":
+                cols[a.name] = jnp.max(masked(v, _type_min(v.dtype)))[None]
+        return Stream(cols, None, info)
+
+    strides, domain = _group_layout(p, child.info)
+    code = jnp.zeros((child.n,), jnp.int32)
+    for k, s in zip(p.keys, strides):
+        code = code + child.cols[k].astype(jnp.int32) * np.int32(s)
+    code = jnp.where(mask, code, 0)  # invalid rows land in group 0, masked out of counts
+
+    cnt = jax.ops.segment_sum(mask.astype(jnp.int32), code,
+                              num_segments=domain)
+    cols = {}
+    # decode key components from the group index
+    gidx = jnp.arange(domain, dtype=jnp.int32)
+    for k, s, in zip(p.keys, strides):
+        dom_k = child.info.cols[k].group_domain
+        cols[k] = (gidx // np.int32(s)) % np.int32(dom_k)
+    for a in p.aggs:
+        if a.op == "count":
+            cols[a.name] = cnt
+            continue
+        v = eval_expr(a.arg, child)
+        if jnp.issubdtype(v.dtype, jnp.integer) and a.op in ("sum", "avg"):
+            v = v.astype(jnp.float32)
+        if a.op == "sum":
+            cols[a.name] = jax.ops.segment_sum(masked(v), code,
+                                               num_segments=domain)
+        elif a.op == "avg":
+            s_ = jax.ops.segment_sum(masked(v), code, num_segments=domain)
+            cols[a.name] = s_ / jnp.maximum(cnt, 1).astype(s_.dtype)
+        elif a.op == "min":
+            cols[a.name] = jax.ops.segment_min(
+                masked(v, _type_max(v.dtype)), code, num_segments=domain)
+        elif a.op == "max":
+            cols[a.name] = jax.ops.segment_max(
+                masked(v, _type_min(v.dtype)), code, num_segments=domain)
+        elif a.op == "any":
+            # FD carry-along: all members equal, take the max of valid ones.
+            cols[a.name] = jax.ops.segment_max(
+                masked(v, _type_min(v.dtype)), code, num_segments=domain
+            ).astype(v.dtype)
+    return Stream(cols, cnt > 0, info)
+
+
+def _type_max(dt):
+    return jnp.finfo(dt).max if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).max
+
+
+def _type_min(dt):
+    return jnp.finfo(dt).min if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).min
+
+
+def _lower_sort(p: P.Sort, child: Stream, catalog: P.Catalog) -> Stream:
+    mask = child.the_mask()
+    # lexsort: last key is primary; invalid rows pushed to the end.
+    keys = []
+    for name, asc in reversed(p.by):
+        v = child.cols[name]
+        if v.dtype == jnp.bool_:
+            v = v.astype(jnp.int32)
+        if not asc:
+            v = -v if jnp.issubdtype(v.dtype, jnp.signedinteger) or \
+                jnp.issubdtype(v.dtype, jnp.floating) else v
+        keys.append(v)
+    keys.append((~mask).astype(jnp.int32))  # primary: valid first
+    order = jnp.lexsort(tuple(keys))
+    cols = {n: c[order] for n, c in child.cols.items()}
+    return Stream(cols, mask[order], child.info)
+
+
+def lower_node(p: P.Plan, catalog: P.Catalog,
+               scans: Dict[int, Stream]) -> Stream:
+    """Recursively lower ``p``; ``scans`` maps id(node) -> leaf Stream.
+
+    Leaves are Scan nodes (whole-query compilation) or materialised stage
+    outputs (stage-granular compilation, the Spark/Tungsten analogue).
+    """
+    if id(p) in scans:
+        return scans[id(p)]
+    if isinstance(p, P.Scan):
+        raise KeyError(f"unbound scan {p.table}")
+    if isinstance(p, P.Filter):
+        child = lower_node(p.child, catalog, scans)
+        pred = eval_expr(p.pred, child)
+        mask = pred if child.mask is None else (child.mask & pred)
+        return Stream(child.cols, mask, child.info)
+    if isinstance(p, P.Project):
+        child = lower_node(p.child, catalog, scans)
+        cols = {name: eval_expr(e, child) for name, e in p.outputs}
+        schema = p.child.schema(catalog)
+        scols = {}
+        for name, e in p.outputs:
+            if isinstance(e, E.Col):
+                scols[name] = child.info.cols[e.name]
+            elif isinstance(e, E.WithDomain):
+                inner = (child.info.cols[e.arg.name]
+                         if isinstance(e.arg, E.Col)
+                         else StaticCol(E.infer_dtype(e.arg, schema)))
+                scols[name] = StaticCol(inner.dtype, inner.dictionary,
+                                        e.domain)
+            else:
+                scols[name] = StaticCol(E.infer_dtype(e, schema))
+        return Stream(cols, child.mask, StaticInfo(scols, child.n))
+    if isinstance(p, P.Join):
+        left = lower_node(p.left, catalog, scans)
+        right = lower_node(p.right, catalog, scans)
+        return _lower_join(p, left, right, catalog)
+    if isinstance(p, P.Aggregate):
+        child = lower_node(p.child, catalog, scans)
+        return _lower_aggregate(p, child, catalog)
+    if isinstance(p, P.Sort):
+        child = lower_node(p.child, catalog, scans)
+        return _lower_sort(p, child, catalog)
+    if isinstance(p, P.Limit):
+        child = lower_node(p.child, catalog, scans)
+        n = min(p.n, child.n)
+        cols = {c_: c[:n] for c_, c in child.cols.items()}
+        mask = None if child.mask is None else child.mask[:n]
+        return Stream(cols, mask, StaticInfo(child.info.cols, n))
+    raise TypeError(f"cannot lower plan node {p!r}")
+
+
+# ---------------------------------------------------------------------------
+# whole-query compilation entry point
+# ---------------------------------------------------------------------------
+
+
+def required_scan_columns(p: P.Plan, catalog: P.Catalog) -> Dict[int, List[str]]:
+    """Columns each Scan must bind (after optimizer pruning, this is small)."""
+    out: Dict[int, List[str]] = {}
+
+    def rec(node: P.Plan, needed: Optional[set]):
+        if isinstance(node, P.Scan):
+            names = node.schema(catalog).names
+            cols = [n for n in names if needed is None or n in needed]
+            out[id(node)] = cols or names[:1]
+            return
+        if isinstance(node, P.Filter):
+            need = None if needed is None else set(needed) | set(E.columns_of(node.pred))
+            rec(node.child, need)
+        elif isinstance(node, P.Project):
+            # NOTE: lower_node evaluates every Project output, so every
+            # output's inputs are required; dropping unused *outputs* is an
+            # optimizer rewrite (prune_projections), not a binding decision.
+            need = set()
+            for name, e in node.outputs:
+                need |= set(E.columns_of(e))
+            rec(node.child, need)
+        elif isinstance(node, P.Join):
+            lneed = None if needed is None else set()
+            rneed = None if needed is None else set()
+            if needed is not None:
+                lnames = set(node.left.schema(catalog).names)
+                for n in needed:
+                    (lneed if n in lnames else rneed).add(n)
+                lneed |= set(node.left_on)
+                rneed |= set(node.right_on)
+            else:
+                pass
+            rec(node.left, lneed)
+            rec(node.right, rneed if node.how not in ("semi", "anti")
+                else (None if needed is None else set(node.right_on)))
+        elif isinstance(node, P.Aggregate):
+            need = set(node.keys)
+            for a in node.aggs:
+                if a.arg is not None:
+                    need |= set(E.columns_of(a.arg))
+            rec(node.child, need)
+        elif isinstance(node, (P.Sort, P.Limit)):
+            need = needed
+            if isinstance(node, P.Sort) and needed is not None:
+                need = set(needed) | {n for n, _ in node.by}
+            rec(node.child, need)
+        else:
+            raise TypeError(node)
+
+    rec(p, None)
+    return out
+
+
+@dataclasses.dataclass
+class Result:
+    """Execution result: padded columns + validity mask + schema."""
+
+    cols: Dict[str, np.ndarray]
+    mask: Optional[np.ndarray]
+    schema: T.Schema
+    dicts: Dict[str, Optional[Tuple[str, ...]]]
+    ordered: bool = True
+
+    def num_rows(self) -> int:
+        if self.mask is None:
+            return len(next(iter(self.cols.values())))
+        return int(self.mask.sum())
+
+    def compact(self) -> Dict[str, np.ndarray]:
+        """Valid rows only, strings decoded, host dtypes per schema."""
+        if self.mask is None:
+            sel = slice(None)
+        else:
+            sel = np.flatnonzero(self.mask)
+        out = {}
+        for f in self.schema:
+            arr = np.asarray(self.cols[f.name])[sel]
+            d = self.dicts.get(f.name)
+            if d is not None:
+                lut = np.asarray(d, dtype=object)
+                out[f.name] = lut[arr]
+            elif f.dtype == T.STRING and arr.dtype == object:
+                out[f.name] = arr  # already-decoded strings (tuple engine)
+            else:
+                out[f.name] = arr.astype(T.numpy_dtype(f.dtype))
+        return out
+
+    def scalar(self, name: Optional[str] = None):
+        c = self.compact()
+        if name is None:
+            name = next(iter(c))
+        return c[name][0]
+
+
+def build_callable(p: P.Plan, catalog: P.Catalog
+                   ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]], StaticInfo]:
+    """Build the pure function over flat scan-column arrays.
+
+    Returns (fn, arg_layout, out_info) where arg_layout lists
+    (scan_node_id, column_names) in argument order.
+    """
+    needed = required_scan_columns(p, catalog)
+    scan_nodes: List[P.Scan] = []
+
+    def collect(node: P.Plan):
+        if isinstance(node, P.Scan):
+            scan_nodes.append(node)
+        for c in node.children():
+            collect(c)
+
+    collect(p)
+    layout = [(id(s), needed[id(s)]) for s in scan_nodes]
+    statics = {id(s): _static_of_scan(catalog.table(s.table))
+               for s in scan_nodes}
+    out_info = static_info(p, catalog)
+
+    def fn(*flat_arrays):
+        it = iter(flat_arrays)
+        scans: Dict[int, Stream] = {}
+        for s in scan_nodes:
+            cols = {name: next(it) for name in needed[id(s)]}
+            info = StaticInfo(
+                {n: statics[id(s)].cols[n] for n in needed[id(s)]},
+                statics[id(s)].n_rows)
+            scans[id(s)] = Stream(cols, None, info)
+        stream = lower_node(p, catalog, scans)
+        out_cols = {n: stream.cols[n] for n in p.schema(catalog).names}
+        return out_cols, (stream.the_mask())
+
+    return fn, layout, out_info

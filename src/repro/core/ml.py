@@ -1,0 +1,147 @@
+"""OptiML-analogue ML kernels (Flare Level 3, paper sections 5.2 / 6.2).
+
+The paper compiles heterogeneous pipelines -- relational ETL feeding
+iterative ML kernels -- into one program via Delite/DMLL.  Here the DMLL
+role is played by the jaxpr: these kernels are pure jnp/lax functions, so
+``jax.jit(lambda cols: kmeans(etl(cols)))`` compiles ETL + training loop
+into a single XLA program (see repro/core/pipeline.py and
+examples/heterogeneous_kmeans.py).
+
+Kernels reproduced from the paper's evaluation: k-means (Fig. 8), logistic
+regression, Gaussian Discriminant Analysis (Fig. 13), plus the
+``untilconverged`` / ``dist`` / ``group_by_reduce`` OptiML building blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# OptiML building blocks
+# ---------------------------------------------------------------------------
+
+
+def dist(x: jnp.ndarray, y: jnp.ndarray, kind: str = "SQUARE") -> jnp.ndarray:
+    """Pairwise distance of rows of x [n,d] against rows of y [k,d]."""
+    if kind != "SQUARE":
+        raise ValueError(kind)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # [n,1]
+    y2 = jnp.sum(y * y, axis=-1)[None, :]                # [1,k]
+    return x2 + y2 - 2.0 * (x @ y.T)
+
+
+def until_converged(init, body: Callable, tol: float, max_iter: int,
+                    diff: Callable = None):
+    """``untilconverged_withdiff`` analogue as a lax.while_loop.
+
+    ``body(state) -> state``; ``diff(old, new) -> scalar``.  Stops when
+    diff < tol or max_iter reached.  Returns (state, iters).
+    """
+    if diff is None:
+        diff = lambda a, b: jnp.max(jnp.abs(a - b))
+
+    def cond(carry):
+        _, it, d = carry
+        return (it < max_iter) & (d >= tol)
+
+    def step(carry):
+        state, it, _ = carry
+        new = body(state)
+        return new, it + 1, diff(state, new)
+
+    state, iters, _ = jax.lax.while_loop(
+        cond, step, (init, jnp.int32(0), jnp.float32(jnp.inf)))
+    return state, iters
+
+
+def group_by_reduce(keys: jnp.ndarray, values: jnp.ndarray,
+                    num_groups: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DMLL GroupByReduce: per-group sums and counts over dense int keys."""
+    sums = jax.ops.segment_sum(values, keys, num_segments=num_groups)
+    counts = jax.ops.segment_sum(jnp.ones(keys.shape[0], values.dtype), keys,
+                                 num_segments=num_groups)
+    return sums, counts
+
+
+# ---------------------------------------------------------------------------
+# kernels from the paper's evaluation
+# ---------------------------------------------------------------------------
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray
+    assignments: jnp.ndarray
+    iters: jnp.ndarray
+
+
+def kmeans(x: jnp.ndarray, k: int, tol: float = 1e-3,
+           max_iter: int = 100, seed: int = 0) -> KMeansResult:
+    """Paper Fig. 8: findNearestCluster + untilconverged + groupByReduce."""
+    m = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    mu0 = x[jax.random.randint(key, (k,), 0, m)]
+
+    def assign(mu):
+        return jnp.argmin(dist(x, mu), axis=1)
+
+    def body(mu):
+        c = assign(mu)
+        sums, counts = group_by_reduce(c, x, k)   # [k,d], [k]
+        return sums / jnp.maximum(counts[:, None], 1.0)
+
+    def mu_diff(a, b):
+        return jnp.sum(dist(a, b).diagonal())
+
+    mu, iters = until_converged(mu0, body, tol, max_iter, mu_diff)
+    return KMeansResult(mu, assign(mu), iters)
+
+
+class LogRegResult(NamedTuple):
+    weights: jnp.ndarray
+    iters: jnp.ndarray
+
+
+def logreg(x: jnp.ndarray, y: jnp.ndarray, lr: float = 0.1,
+           tol: float = 1e-4, max_iter: int = 200) -> LogRegResult:
+    """Batch-gradient logistic regression (paper Fig. 13 'LogReg')."""
+    n, d = x.shape
+
+    def body(w):
+        p = jax.nn.sigmoid(x @ w)
+        grad = x.T @ (p - y) / n
+        return w - lr * grad
+
+    w, iters = until_converged(jnp.zeros((d,), x.dtype), body, tol, max_iter)
+    return LogRegResult(w, iters)
+
+
+class GDAResult(NamedTuple):
+    phi: jnp.ndarray
+    mu0: jnp.ndarray
+    mu1: jnp.ndarray
+    sigma: jnp.ndarray
+
+
+def gda(x: jnp.ndarray, y: jnp.ndarray) -> GDAResult:
+    """Gaussian Discriminant Analysis (paper Fig. 13 'GDA'); closed form."""
+    n = x.shape[0]
+    y1 = y.astype(x.dtype)
+    n1 = jnp.sum(y1)
+    n0 = n - n1
+    phi = n1 / n
+    mu0 = jnp.sum(x * (1 - y1)[:, None], axis=0) / jnp.maximum(n0, 1)
+    mu1 = jnp.sum(x * y1[:, None], axis=0) / jnp.maximum(n1, 1)
+    centered = x - jnp.where(y1[:, None] > 0, mu1[None], mu0[None])
+    sigma = centered.T @ centered / n
+    return GDAResult(phi, mu0, mu1, sigma)
+
+
+def gene_barcode(counts: jnp.ndarray, barcodes: jnp.ndarray,
+                 num_genes: int) -> jnp.ndarray:
+    """Stand-in for the paper's 'Gene' app: per-gene barcode histogram via
+    GroupByReduce (a pure data-parallel aggregation workload)."""
+    sums, _ = group_by_reduce(barcodes, counts, num_genes)
+    return sums

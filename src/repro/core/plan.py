@@ -1,0 +1,325 @@
+"""Logical plan IR -- the analogue of Catalyst plan trees.
+
+A plan is a tree of operators over a catalog of columnar tables.  Plans are
+built by the DataFrame API, rewritten by ``repro.core.optimizer`` and
+executed by one of the three engines in ``repro.core.engines``:
+
+* ``volcano``   -- operator-at-a-time numpy interpreter (Postgres analogue,
+                   also the correctness oracle),
+* ``stage``     -- per-pipeline-stage jit with materialised intermediates
+                   (the Spark/Tungsten + Flare-Level-1 analogue),
+* ``compiled``  -- whole-query compilation into ONE XLA program
+                   (Flare Level 2, the paper's contribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import expr as E
+from repro.relational import table as T
+
+# ---------------------------------------------------------------------------
+# aggregate spec
+# ---------------------------------------------------------------------------
+
+AGG_OPS = ("sum", "count", "min", "max", "avg", "any")
+# "any": arbitrary member of the group -- used for columns functionally
+# dependent on the group key (e.g. TPC-H Q3 groups by l_orderkey and
+# carries o_orderdate along).  Classic FD-aware grouping.
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    name: str          # output column name
+    op: str            # one of AGG_OPS
+    arg: Optional[E.Expr]  # None for count(*)
+
+    def __post_init__(self):
+        if self.op not in AGG_OPS:
+            raise ValueError(f"unknown aggregate {self.op}")
+        if self.op != "count" and self.arg is None:
+            raise ValueError(f"{self.op} needs an argument")
+
+
+# ---------------------------------------------------------------------------
+# plan nodes
+# ---------------------------------------------------------------------------
+
+
+class Plan:
+    """Base plan node.  Subclasses define ``children`` and ``schema``."""
+
+    _schema: Optional[T.Schema] = None
+
+    def children(self) -> Tuple["Plan", ...]:
+        return ()
+
+    def with_children(self, kids: Sequence["Plan"]) -> "Plan":
+        assert not kids
+        return self
+
+    def infer_schema(self, catalog: "Catalog") -> T.Schema:
+        raise NotImplementedError
+
+    def schema(self, catalog: "Catalog") -> T.Schema:
+        if self._schema is None:
+            self._schema = self.infer_schema(catalog)
+        return self._schema
+
+    # pretty printing ----------------------------------------------------------
+    def explain(self, catalog: Optional["Catalog"] = None) -> str:
+        lines: List[str] = []
+
+        def rec(p: Plan, depth: int):
+            lines.append("  " * depth + ("*" if depth == 0 else "+- ")
+                         + p.describe())
+            for c in p.children():
+                rec(c, depth + 1)
+
+        rec(self, 0)
+        return "\n".join(lines)
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+    def fingerprint(self) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(eq=False)
+class Scan(Plan):
+    table: str
+
+    def infer_schema(self, catalog):
+        return catalog.schema(self.table)
+
+    def describe(self):
+        return f"Scan {self.table}"
+
+    def fingerprint(self):
+        return f"scan:{self.table}"
+
+
+@dataclasses.dataclass(eq=False)
+class Filter(Plan):
+    child: Plan
+    pred: E.Expr
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return Filter(kids[0], self.pred)
+
+    def infer_schema(self, catalog):
+        return self.child.schema(catalog)
+
+    def describe(self):
+        return f"Filter {self.pred}"
+
+    def fingerprint(self):
+        return f"filter({self.child.fingerprint()},{E.fingerprint(self.pred)})"
+
+
+@dataclasses.dataclass(eq=False)
+class Project(Plan):
+    child: Plan
+    outputs: Tuple[Tuple[str, E.Expr], ...]  # (name, expr)
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return Project(kids[0], self.outputs)
+
+    def infer_schema(self, catalog):
+        cs = self.child.schema(catalog)
+        fields = []
+        for name, e in self.outputs:
+            dtype = E.infer_dtype(e, cs)
+            domain = cs[e.name].domain if isinstance(e, E.Col) else None
+            fields.append(T.Field(name, dtype, domain))
+        return T.Schema(fields)
+
+    def describe(self):
+        return "Project [" + ", ".join(
+            f"{n}={e}" for n, e in self.outputs) + "]"
+
+    def fingerprint(self):
+        body = ",".join(f"{n}={E.fingerprint(e)}" for n, e in self.outputs)
+        return f"project({self.child.fingerprint()},[{body}])"
+
+
+@dataclasses.dataclass(eq=False)
+class Join(Plan):
+    """Equi-join.  ``right`` is the build side and must be N:1 w.r.t. the
+    probe (``left``) side -- i.e. right keys are unique (PK--FK join).
+
+    TPU adaptation (DESIGN.md section 3): lowered to a *sorted-array join*
+    (sort build keys once, vectorised ``searchsorted`` probe + gather)
+    instead of a pointer-chasing hash table.  ``how`` in {inner, left,
+    semi, anti}.  ``strategy`` in {sorted, sortmerge} is picked by the
+    optimizer (paper Fig. 6 compares strategies).
+    """
+
+    left: Plan
+    right: Plan
+    left_on: Tuple[str, ...]
+    right_on: Tuple[str, ...]
+    how: str = "inner"
+    strategy: Optional[str] = None
+
+    def children(self):
+        return (self.left, self.right)
+
+    def with_children(self, kids):
+        return Join(kids[0], kids[1], self.left_on, self.right_on,
+                    self.how, self.strategy)
+
+    def infer_schema(self, catalog):
+        ls = self.left.schema(catalog)
+        if self.how in ("semi", "anti"):
+            return ls
+        rs = self.right.schema(catalog)
+        fields = list(ls.fields)
+        seen = set(ls.names)
+        for f in rs.fields:
+            if f.name in self.right_on:
+                continue  # key columns deduplicated (equal to left keys)
+            if f.name in seen:
+                raise ValueError(f"ambiguous column {f.name} in join; "
+                                 "rename before joining")
+            fields.append(f)
+        return T.Schema(fields)
+
+    def describe(self):
+        return (f"Join[{self.how}/{self.strategy or 'auto'}] "
+                f"{list(self.left_on)} = {list(self.right_on)}")
+
+    def fingerprint(self):
+        return (f"join({self.left.fingerprint()},{self.right.fingerprint()},"
+                f"{self.left_on},{self.right_on},{self.how},{self.strategy})")
+
+
+@dataclasses.dataclass(eq=False)
+class Aggregate(Plan):
+    """Group-by aggregate.
+
+    Keys must be dictionary-encoded strings or dense-domain ints so the
+    compiled engine can aggregate by direct indexing (segment-sum onto the
+    statically-bounded group domain).
+    """
+
+    child: Plan
+    keys: Tuple[str, ...]
+    aggs: Tuple[AggSpec, ...]
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return Aggregate(kids[0], self.keys, self.aggs)
+
+    def infer_schema(self, catalog):
+        cs = self.child.schema(catalog)
+        fields = [cs[k] for k in self.keys]
+        for a in self.aggs:
+            if a.op == "count":
+                fields.append(T.Field(a.name, T.INT64))
+            elif a.op == "avg":
+                fields.append(T.Field(a.name, T.FLOAT64))
+            elif a.op == "any" and isinstance(a.arg, E.Col):
+                fields.append(cs[a.arg.name].with_name(a.name))
+            else:
+                fields.append(T.Field(a.name, E.infer_dtype(a.arg, cs)))
+        return T.Schema(fields)
+
+    def describe(self):
+        aggs = ", ".join(f"{a.name}={a.op}({a.arg})" for a in self.aggs)
+        return f"Aggregate keys={list(self.keys)} [{aggs}]"
+
+    def fingerprint(self):
+        aggs = ",".join(
+            f"{a.name}:{a.op}:{E.fingerprint(a.arg) if a.arg is not None else ''}"
+            for a in self.aggs)
+        return f"agg({self.child.fingerprint()},{self.keys},[{aggs}])"
+
+
+@dataclasses.dataclass(eq=False)
+class Sort(Plan):
+    child: Plan
+    by: Tuple[Tuple[str, bool], ...]  # (column, ascending)
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return Sort(kids[0], self.by)
+
+    def infer_schema(self, catalog):
+        return self.child.schema(catalog)
+
+    def describe(self):
+        return "Sort " + ", ".join(
+            f"{c}{'' if a else ' desc'}" for c, a in self.by)
+
+    def fingerprint(self):
+        return f"sort({self.child.fingerprint()},{self.by})"
+
+
+@dataclasses.dataclass(eq=False)
+class Limit(Plan):
+    child: Plan
+    n: int
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return Limit(kids[0], self.n)
+
+    def infer_schema(self, catalog):
+        return self.child.schema(catalog)
+
+    def describe(self):
+        return f"Limit {self.n}"
+
+    def fingerprint(self):
+        return f"limit({self.child.fingerprint()},{self.n})"
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+
+
+class Catalog:
+    """Named table registry (SparkSession analogue)."""
+
+    def __init__(self):
+        self._tables: Dict[str, T.Table] = {}
+
+    def register(self, name: str, tbl: T.Table) -> None:
+        self._tables[name] = tbl
+
+    def table(self, name: str) -> T.Table:
+        return self._tables[name]
+
+    def schema(self, name: str) -> T.Schema:
+        return self._tables[name].schema
+
+    def names(self) -> List[str]:
+        return sorted(self._tables)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tables
+
+
+def transform(p: Plan, fn) -> Plan:
+    """Bottom-up plan rewrite; ``fn`` returns replacement or None."""
+    kids = tuple(transform(c, fn) for c in p.children())
+    if any(k is not c for k, c in zip(kids, p.children())):
+        p = p.with_children(kids)
+    out = fn(p)
+    return p if out is None else out

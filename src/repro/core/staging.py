@@ -1,0 +1,51 @@
+"""Staged UDFs -- Flare Level 3 (paper section 5.1).
+
+The paper's ``Rep[A] => Rep[B]`` UDFs become ordinary Python functions over
+jnp arrays.  Because they are *traced* into the surrounding query program
+(never called per row), they are optimized and fused together with the
+relational operators -- the exact property the paper gets from LMS.
+
+    @udf(FLOAT32)
+    def sqr(x):
+        return x * x
+
+    df.select(("y", sqr(col("x"))))
+
+The same function object runs under all three engines: the volcano oracle
+calls it on numpy arrays (jnp ops accept those), the compiled engines trace
+it.  This is the "same code, staged or unstaged" property of multi-stage
+programming (paper section 2.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from repro.core import expr as E
+
+
+class StagedUDF:
+    """A named, staged scalar function over columns."""
+
+    def __init__(self, fn: Callable, dtype: str, name: str = None):
+        self.fn = fn
+        self.dtype = dtype
+        self.name = name or getattr(fn, "__name__", "udf")
+        functools.update_wrapper(self, fn)
+
+    def __call__(self, *args) -> E.Udf:
+        return E.Udf(self.fn, tuple(E.wrap(a) for a in args), self.dtype,
+                     self.name)
+
+    def raw(self, *arrays):
+        """Apply directly to arrays (outside a query)."""
+        return self.fn(*arrays)
+
+
+def udf(dtype: str, name: str = None):
+    """Decorator: mark a function as a staged UDF returning ``dtype``."""
+
+    def deco(fn: Callable) -> StagedUDF:
+        return StagedUDF(fn, dtype, name)
+
+    return deco

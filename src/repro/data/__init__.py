@@ -1,0 +1,1 @@
+"""Data substrate: loaders (CSV / flarecol), tokenizer, LM input pipeline."""

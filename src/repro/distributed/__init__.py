@@ -1,0 +1,1 @@
+"""Distribution substrate: meshes, logical-axis sharding rules, collectives."""

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each kernel lives in its own subpackage:
+
+* ``filter_agg``        -- the paper's TPC-H Q6 fused scan (Fig. 3),
+* ``segmented_reduce``  -- grouped aggregation as one-hot MXU matmul (Q1),
+* ``flash_attention``   -- blocked online-softmax attention (LM prefill),
+* ``decode_attention``  -- single-token GQA attention over a long KV cache.
+
+Layout per subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper with padding/fallback), ``ref.py``
+(pure-jnp oracle used by the allclose sweep tests).
+
+Kernels execute with ``interpret=True`` on CPU (this container) and
+compile natively on TPU; ``ops`` picks the mode from the backend.
+"""

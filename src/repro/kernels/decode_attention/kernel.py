@@ -1,0 +1,96 @@
+"""Single-token GQA attention over a long KV cache (decode path).
+
+Serves the ``decode_32k`` / ``long_500k`` shapes: one new query token per
+sequence attends to a KV cache of up to 512K positions.  This op is
+memory-bound (the whole cache streams through once), so the kernel is
+organised around that stream:
+
+* grid = (batch * kv_heads, kv_blocks): each step streams one
+  (block_k, d) K tile and V tile from HBM;
+* the ``group`` query heads that share a KV head are packed into the MXU
+  sublane dimension: the per-step matmul is [group, d] @ [d, block_k] --
+  queries ride along for free on the bandwidth-bound K stream;
+* online softmax state ([group,1] m/l and [group,d] acc) in VMEM scratch;
+* cache validity (cur_len <= cache capacity) by predication against a
+  per-sequence length scalar, streamed as a (1,1) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _kernel(scale, q_ref, k_ref, v_ref, len_ref, o_ref,
+            acc_ref, m_ref, l_ref):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [group, d]
+    k = k_ref[0].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0].astype(jnp.float32)          # [bk, d]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    bk = k.shape[0]
+    pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B*Hkv, group, D]; k/v: [B*Hkv, S, D]; lengths: [B*Hkv, 1] i32.
+
+    Returns [B*Hkv, group, D].  S must be a multiple of block_k
+    (ops.py sizes the block)."""
+    bhkv, group, d = q.shape
+    s = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    grid = (bhkv, s // block_k)
+    kern = functools.partial(_kernel, scale)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda h, kb: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, kb: (h, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, kb: (h, kb, 0)),
+            pl.BlockSpec((1, 1), lambda h, kb: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda h, kb: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)

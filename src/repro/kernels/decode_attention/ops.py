@@ -1,0 +1,41 @@
+"""Public wrapper for decode attention: 4-D cache API, block sizing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel as K
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _divisor_block(s: int, cap: int) -> int:
+    b = 1
+    while b * 2 <= cap and s % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "interpret"))
+def decode_attention(q, k, v, lengths, *, scale: float = None,
+                     block_k: int = K.DEFAULT_BLOCK_K,
+                     interpret: bool = None) -> jnp.ndarray:
+    """q: [B, H, D]; k/v cache: [B, Hkv, S, D]; lengths: [B] -> [B, H, D]."""
+    if interpret is None:
+        interpret = _should_interpret()
+    b, h, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = h // hkv
+    bk = _divisor_block(s, min(block_k, s))
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    lens = jnp.broadcast_to(lengths[:, None], (b, hkv)).reshape(
+        b * hkv, 1).astype(jnp.int32)
+    out = K.decode_attention(
+        qg, k.reshape(b * hkv, s, d), v.reshape(b * hkv, s, d), lens,
+        scale=scale, block_k=bk, interpret=interpret)
+    return out.reshape(b, hkv, group, d).reshape(b, h, d)

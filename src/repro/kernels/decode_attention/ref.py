@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float = None):
+    """q: [B, H, D]; k/v: [B, Hkv, S, D]; lengths: [B] i32 -> [B, H, D]."""
+    b, h, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kx = jnp.repeat(k, group, axis=1)     # [B, H, S, D]
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p,
+                      vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,48 @@
+"""Public wrapper: padding, reshaping to lane-aligned blocks, jit."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.filter_agg import kernel as K
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_reshape(x: jnp.ndarray, rows_mult: int, fill) -> jnp.ndarray:
+    n = x.shape[0]
+    per_block = rows_mult * K.LANES
+    padded = (n + per_block - 1) // per_block * per_block
+    x = jnp.pad(x, (0, padded - n), constant_values=fill)
+    return x.reshape(padded // K.LANES, K.LANES)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "date_lo", "date_hi", "disc_lo", "disc_hi", "qty_hi", "block_rows",
+    "interpret"))
+def filter_agg_q6(quantity, price, discount, shipdate, *,
+                  date_lo: int, date_hi: int, disc_lo: float,
+                  disc_hi: float, qty_hi: float,
+                  block_rows: int = K.DEFAULT_BLOCK_ROWS,
+                  interpret: bool = None) -> jnp.ndarray:
+    """Q6 revenue over 1-D columns of any length; returns a f32 scalar."""
+    if interpret is None:
+        interpret = _should_interpret()
+    n = quantity.shape[0]
+    if n < block_rows * K.LANES:  # small inputs: one partial block
+        block_rows = max(1, n // K.LANES) or 1
+    # pad with values that FAIL the predicate (quantity = +inf)
+    qty = _pad_reshape(quantity.astype(jnp.float32), block_rows, jnp.inf)
+    price_ = _pad_reshape(price.astype(jnp.float32), block_rows, 0.0)
+    disc = _pad_reshape(discount.astype(jnp.float32), block_rows, 0.0)
+    date = _pad_reshape(shipdate.astype(jnp.int32), block_rows, 0)
+    lanes = K.filter_agg_q6(
+        qty, price_, disc, date,
+        date_lo=date_lo, date_hi=date_hi, disc_lo=disc_lo,
+        disc_hi=disc_hi, qty_hi=qty_hi, block_rows=block_rows,
+        interpret=interpret)
+    return jnp.sum(lanes)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Q6 fused filter-aggregate scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def filter_agg_q6_ref(quantity, price, discount, shipdate, *,
+                      date_lo, date_hi, disc_lo, disc_hi, qty_hi):
+    pred = ((shipdate >= date_lo) & (shipdate < date_hi)
+            & (discount >= disc_lo) & (discount <= disc_hi)
+            & (quantity < qty_hi))
+    return jnp.sum(jnp.where(pred, price * discount, 0.0),
+                   dtype=jnp.float32)

@@ -1,0 +1,46 @@
+"""Public wrapper for flash attention: 4-D API, block sizing, backend pick.
+
+Rather than padding the sequence (which would corrupt non-causal softmax
+normalisation), block sizes degrade to the largest power-of-two divisor of
+the sequence length -- production shapes are 128-aligned so this only
+affects small test shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _divisor_block(s: int, cap: int) -> int:
+    b = 1
+    while b * 2 <= cap and s % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float = None,
+                    block_q: int = K.DEFAULT_BLOCK_Q,
+                    block_k: int = K.DEFAULT_BLOCK_K,
+                    interpret: bool = None) -> jnp.ndarray:
+    """q: [B, H, S, D]; k/v: [B, Hkv, S, D] -> [B, H, S, D]."""
+    if interpret is None:
+        interpret = _should_interpret()
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    bq = _divisor_block(s, min(block_q, s))
+    bk = _divisor_block(s, min(block_k, s))
+    out = K.flash_attention(
+        q.reshape(b * h, s, d), k.reshape(b * hkv, s, d),
+        v.reshape(b * hkv, s, d), causal=causal, scale=scale,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return out.reshape(b, h, s, d)

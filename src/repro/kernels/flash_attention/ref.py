@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: exact softmax attention with GQA head expansion."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, scale: float = None) -> jnp.ndarray:
+    """q: [BH, S, D]; k/v: [BHkv, S, D]."""
+    bh, s, d = q.shape
+    bhkv = k.shape[0]
+    group = bh // bhkv
+    if scale is None:
+        scale = d ** -0.5
+    kx = jnp.repeat(k, group, axis=0)
+    vx = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      vx.astype(jnp.float32)).astype(q.dtype)

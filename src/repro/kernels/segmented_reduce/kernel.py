@@ -1,0 +1,72 @@
+"""Grouped aggregation as a one-hot MXU matmul (TPC-H Q1 hot loop).
+
+CPU Flare aggregates Q1 with a tiny hash table updated per row.  Scatter
+into a hash table is hostile to the TPU memory model; the TPU-native
+formulation turns the scatter into dense compute:
+
+    out[g] = sum_i  values[i] * [codes[i] == g]
+
+i.e. ``values_block @ one_hot(codes_block, G)`` -- an MXU matmul against a
+one-hot matrix materialised *in VMEM per block*.  For the tiny group
+domains of dictionary-encoded keys (Q1: 3x2 groups), this turns a
+memory-bound scatter into a compute trivially served by the systolic
+array, and partial results accumulate in a (1, G) f32 scratch across the
+grid.
+
+VMEM: with block_rows=256 the one-hot tile is 256*128*G f32; G<=64 keeps
+it at 8 MiB -- inside budget.  ops.py enforces/falls back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 64
+MAX_GROUPS = 512
+
+
+def _kernel(vals_ref, codes_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = vals_ref[...]            # [rows, 128] f32
+    codes = codes_ref[...]          # [rows, 128] i32
+    g = acc_ref.shape[1]
+    flat_v = vals.reshape(1, -1)    # [1, rows*128]
+    flat_c = codes.reshape(-1)      # [rows*128]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (flat_c.shape[0], g), 1)
+              == flat_c[:, None]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(flat_v, onehot,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def segmented_sum(values: jnp.ndarray, codes: jnp.ndarray, num_groups: int,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False) -> jnp.ndarray:
+    """values/codes: [rows, 128] pre-padded; returns [1, G] group sums.
+
+    Padded elements must carry value 0 (any code)."""
+    rows = values.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert num_groups <= MAX_GROUPS
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, num_groups), lambda i: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, num_groups), jnp.float32)],
+        interpret=interpret,
+    )(values, codes)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the segmented (grouped) sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_sum_ref(values: jnp.ndarray, codes: jnp.ndarray,
+                      num_groups: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(values.astype(jnp.float32), codes,
+                               num_segments=num_groups)

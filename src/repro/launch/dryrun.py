@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           ).strip()
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell::
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(*input_specs(arch))
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+and additionally parses the post-optimization HLO for collective
+operand bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute) -- cost_analysis does not report those.
+
+Results stream to JSON (one file per cell) under ``results/dryrun`` so
+the roofline table (benchmarks/roofline.py) and EXPERIMENTS.md read from
+artifacts, not from re-runs.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, get
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> Dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: Dict = {"arch": cfg.name, "shape": shape_name,
+                    "mesh": mesh_name, "status": "skipped", "why": why}
+    if not ok:
+        if save:
+            _save(record)
+        return record
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(cfg, shape, mesh)
+    try:
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            # trip-count-aware per-device costs (cost_analysis counts scan
+            # bodies once -- see hlo_analysis docstring)
+            costs = hlo_analysis.analyze(hlo)
+        n_dev = mesh.devices.size
+        record.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "devices": n_dev,
+            "xla_cost_analysis": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            "per_device": {
+                "flops": costs["flops"],
+                "hbm_bytes": costs["hbm_bytes"],
+                "collective_bytes": costs["collective_bytes"],
+                "collective_bytes_total":
+                    costs["collective_bytes_total"],
+            },
+            "memory": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "generated_code_bytes":
+                    int(ma.generated_code_size_in_bytes),
+            },
+        })
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        record.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = (f"{record['arch']}__{record['shape']}__"
+            f"{record['mesh']}.json").replace("/", "_")
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                cfgname = get(arch).name
+                mesh_name = "2x16x16" if mp else "16x16"
+                fname = os.path.join(
+                    RESULTS_DIR,
+                    f"{cfgname}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    with open(fname) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[skip existing] {cfgname} {shape} "
+                                  f"{mesh_name}")
+                            continue
+                rec = run_cell(arch, shape, mp)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory"]  # memory_analysis is per-device
+                    per_dev = (mem["argument_bytes"] + mem["temp_bytes"]
+                               + mem["output_bytes"])
+                    extra = (f"compile={rec['compile_s']:.1f}s "
+                             f"flops/dev={rec['per_device']['flops']:.3g} "
+                             f"mem/dev~{per_dev/2**30:.2f}GiB")
+                elif status == "error":
+                    failures += 1
+                    extra = rec["error"][:200]
+                print(f"[{status:7s}] {rec['arch']:24s} {shape:12s} "
+                      f"{mesh_name:8s} {extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Step builders: whole-step compiled train / prefill / decode programs.
+
+Flare's thesis applied to training: the *entire* step -- forward, backward,
+gradient clip, AdamW update, metrics -- is one traced function compiled to
+one XLA program.  Nothing materialises between "stages"; there is no
+separate optimizer pass (contrast: the stage-granular engines measured in
+benchmarks/bench_q6.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.shardings import ShardingCtx, make_ctx
+from repro.models import param as PM
+from repro.models.modeling import Model, enc_len_of, input_specs
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    sc: ShardingCtx) -> Callable:
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        def loss_fn(params):
+            loss, metrics = model.loss(params, batch, sc)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key) -> Dict:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def abstract_train_state(model: Model) -> Dict:
+    params = model.abstract_params()
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"params": params,
+            "opt": {"m": jax.tree.map(f32, params),
+                    "v": jax.tree.map(f32, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def train_state_pspecs(model: Model, sc: ShardingCtx) -> Dict:
+    pspecs = model.param_pspecs(sc.rules, sc.mesh_shape)
+    return {"params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, sc: ShardingCtx,
+                      cache_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, sc, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, sc: ShardingCtx) -> Callable:
+    def decode_step(params, tokens, caches, length):
+        return model.decode_step(params, tokens, caches, length, sc)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding glue for a full (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig,
+                 sc: ShardingCtx) -> Dict:
+    specs, axes = input_specs(cfg, shape)
+    return {name: sc.pspec(*axes[name], shape=specs[name].shape)
+            for name in specs}
+
+
+def cache_pspecs(model: Model, batch: int, cache_len: int,
+                 sc: ShardingCtx) -> Any:
+    spec = model.cache_spec(batch, cache_len)
+    return PM.param_pspecs(spec, sc.rules, sc.mesh_shape)
+
+
+@dataclasses.dataclass
+class CellPrograms:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    fn: Callable
+    args: Tuple            # abstract ShapeDtypeStructs
+    in_shardings: Tuple
+    donate: Tuple = ()
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opt_cfg: Optional[AdamWConfig] = None) -> CellPrograms:
+    """Abstract program + shardings for dry-run lowering (no allocation)."""
+    sc = make_ctx(mesh, cfg.sharding_profile)
+    model = Model(cfg)
+    specs, _ = input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, shape, sc)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    batch_sh = {k: ns(v) for k, v in bspecs.items()}
+
+    if shape.kind == "train":
+        step = make_train_step(model, opt_cfg or AdamWConfig(), sc)
+        state = abstract_train_state(model)
+        st_sh = jax.tree.map(ns, train_state_pspecs(model, sc),
+                             is_leaf=lambda x: isinstance(x, P))
+        return CellPrograms(step, (state, specs), (st_sh, batch_sh),
+                            donate=(0,))  # state updates in place
+
+    params = model.abstract_params()
+    p_sh = jax.tree.map(ns, model.param_pspecs(sc.rules, sc.mesh_shape),
+                        is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model, sc, cache_len=shape.seq_len)
+        return CellPrograms(fn, (params, specs), (p_sh, batch_sh))
+
+    # decode: one new token against a cache of seq_len
+    cache_len = shape.seq_len
+    enc_len = enc_len_of(cfg, cache_len) if cfg.family == "encdec" else 0
+    caches = model.abstract_caches(shape.global_batch, cache_len, enc_len)
+    c_sh = jax.tree.map(
+        ns, PM.param_pspecs(model.cache_spec(shape.global_batch, cache_len,
+                                             enc_len),
+                            sc.rules, sc.mesh_shape),
+        is_leaf=lambda x: isinstance(x, P))
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_decode_step(model, sc)
+    return CellPrograms(
+        fn, (params, specs["tokens"], caches, length),
+        (p_sh, batch_sh["tokens"], c_sh, ns(P())),
+        donate=(2,))  # serving reuses cache buffers in place

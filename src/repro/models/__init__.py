@@ -1,0 +1,1 @@
+"""Model zoo: the ten assigned architectures on shared JAX layers."""

@@ -1,0 +1,204 @@
+"""Encoder-decoder model (seamless-m4t family).
+
+The audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, S_enc, d_model]; the model here
+is the transformer backbone only -- bidirectional encoder over frames,
+causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shardings import ShardingCtx
+from repro.models import layers as L
+from repro.models import param as PM
+from repro.models.param import ArraySpec
+from repro.models.transformer import _attn_cfg, _remat, stack_specs
+
+F32 = jnp.float32
+
+
+def _cross_spec(cfg: ArchConfig, dtype) -> Dict:
+    c = _attn_cfg(cfg)
+    return {
+        "wq": ArraySpec((c.d_model, c.n_heads, c.head_dim), dtype,
+                        ("embed", "heads", None), init="fan_in"),
+        "wk": ArraySpec((c.d_model, c.n_kv, c.head_dim), dtype,
+                        ("embed", "kv", None), init="fan_in"),
+        "wv": ArraySpec((c.d_model, c.n_kv, c.head_dim), dtype,
+                        ("embed", "kv", None), init="fan_in"),
+        "wo": ArraySpec((c.n_heads, c.head_dim, c.d_model), dtype,
+                        ("heads", None, "embed"), init="fan_in"),
+    }
+
+
+def _cross_kv(p, cfg: ArchConfig, memory):
+    # emitted directly in the [B, K, S, D] cache layout (no transposes)
+    k = jnp.einsum("bsd,dhk->bhsk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", memory, p["wv"])
+    return k, v
+
+
+def _cross_attend(p, cfg: ArchConfig, x, k, v):
+    c = dataclasses.replace(_attn_cfg(cfg), causal=False, window=None)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = L._einsum_attention(q, k, v, c, kv_format="bksd")
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def encdec_spec(cfg: ArchConfig) -> Dict:
+    dt = cfg.param_dtype
+    enc_layer = {"ln1": L.rms_norm_spec(cfg.d_model),
+                 "attn": L.attention_spec(_attn_cfg(cfg), dt),
+                 "ln2": L.rms_norm_spec(cfg.d_model),
+                 "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dt)}
+    dec_layer = {"ln1": L.rms_norm_spec(cfg.d_model),
+                 "self": L.attention_spec(_attn_cfg(cfg), dt),
+                 "ln_x": L.rms_norm_spec(cfg.d_model),
+                 "cross": _cross_spec(cfg, dt),
+                 "ln2": L.rms_norm_spec(cfg.d_model),
+                 "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dt)}
+    return {
+        "embed": ArraySpec((cfg.padded_vocab, cfg.d_model), dt,
+                           ("vocab", "embed"), init="normal"),
+        "enc_layers": stack_specs(enc_layer, cfg.enc_layers),
+        "enc_norm": L.rms_norm_spec(cfg.d_model),
+        "dec_layers": stack_specs(dec_layer, cfg.dec_layers),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+        "head": ArraySpec((cfg.d_model, cfg.padded_vocab), dt,
+                          ("embed", "vocab"), init="fan_in"),
+    }
+
+
+def encode(cfg: ArchConfig, params, enc_embeds, sc: ShardingCtx):
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    x = enc_embeds.astype(cfg.compute_dtype)
+    x = sc.constrain(x, "batch", "seq", "act_embed")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = dataclasses.replace(_attn_cfg(cfg), causal=False)
+
+    def body(x, lp):
+        def blk(xx):
+            xx = xx + L.attention(lp["attn"], acfg,
+                                  L.rms_norm(lp["ln1"], xx), positions, sc)
+            return xx + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], xx),
+                              cfg.act, sc)
+        return _remat(cfg, blk)(x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(params["enc_norm"], x)
+
+
+def forward(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx):
+    """batch: enc_embeds [B,S_enc,d], tokens [B,S_dec] -> (logits, aux)."""
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    memory = encode(cfg, params, batch["enc_embeds"], sc)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = _attn_cfg(cfg)
+
+    def body(x, lp):
+        def blk(xx):
+            xx = xx + L.attention(lp["self"], acfg,
+                                  L.rms_norm(lp["ln1"], xx), positions, sc)
+            k, v = _cross_kv(lp["cross"], cfg, memory)
+            xx = xx + _cross_attend(lp["cross"], cfg,
+                                    L.rms_norm(lp["ln_x"], xx), k, v)
+            return xx + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], xx),
+                              cfg.act, sc)
+        return _remat(cfg, blk)(x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    return logits, jnp.zeros((), F32)
+
+
+def lm_loss(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx):
+    logits, aux = forward(cfg, params, batch, sc)
+    labels = batch["labels"]
+    logits = logits.astype(F32)
+    mask = (labels >= 0).astype(F32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, {"nll": nll, "aux": aux, "tokens": mask.sum()}
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int,
+               enc_len: int) -> Dict:
+    cdtype = cfg.compute_dtype
+    self_spec = L.attention_cache_spec(_attn_cfg(cfg), batch, cache_len,
+                                       cdtype)
+    cross_shape = (batch, cfg.n_kv, enc_len, cfg.head_dim_)
+    cross = {"k": ArraySpec(cross_shape, cdtype,
+                            ("batch", None, None, None), init="zeros"),
+             "v": ArraySpec(cross_shape, cdtype,
+                            ("batch", None, None, None), init="zeros")}
+    one = {"self": self_spec, "cross": cross}
+    return {"layers": stack_specs(one, cfg.dec_layers)}
+
+
+def prefill(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx,
+            cache_len: int):
+    """Encode + decoder prefill -> (last logits, caches incl. cross K/V)."""
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    memory = encode(cfg, params, batch["enc_embeds"], sc)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = _attn_cfg(cfg)
+
+    def body(x, lp):
+        h = L.rms_norm(lp["ln1"], x)
+        a, kv = L.attention_prefill(lp["self"], acfg, h, positions, sc,
+                                    cache_len)
+        x = x + a
+        ck, cv = _cross_kv(lp["cross"], cfg, memory)
+        x = x + _cross_attend(lp["cross"], cfg, L.rms_norm(lp["ln_x"], x),
+                              ck, cv)
+        x = x + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x), cfg.act, sc)
+        return x, {"self": kv, "cross": {"k": ck.astype(cfg.compute_dtype),
+                                         "v": cv.astype(cfg.compute_dtype)}}
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(params["final_norm"], x[:, -1:])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    return logits[:, 0].astype(F32), {"layers": caches}
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches, length,
+                sc: ShardingCtx):
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    x = params["embed"][tokens[:, None]].astype(cfg.compute_dtype)
+    acfg = _attn_cfg(cfg)
+
+    def body(x, xs):
+        lp, cache = xs
+        h = L.rms_norm(lp["ln1"], x)
+        a, kv = L.attention_decode(lp["self"], acfg, h, cache["self"],
+                                   length, sc)
+        x = x + a
+        x = x + _cross_attend(lp["cross"], cfg, L.rms_norm(lp["ln_x"], x),
+                              cache["cross"]["k"], cache["cross"]["v"])
+        x = x + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x), cfg.act, sc)
+        return x, {"self": kv, "cross": cache["cross"]}
+
+    x, new = jax.lax.scan(body, x, (params["dec_layers"],
+                                    caches["layers"]))
+    x = L.rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    return logits[:, 0].astype(F32), {"layers": new}

@@ -1,0 +1,161 @@
+"""Uniform model facade: family dispatch + abstract input specs.
+
+``Model`` wraps a family implementation behind one interface used by the
+trainer, the server, and the dry-run::
+
+    m = Model(cfg)
+    params = m.init(key)                      # concrete (smoke/real runs)
+    aparams = m.abstract_params()             # ShapeDtypeStructs (dry-run)
+    loss, metrics = m.loss(params, batch, sc)
+    logits, caches = m.prefill(params, batch, sc, cache_len)
+    logits, caches = m.decode_step(params, tokens, caches, length, sc)
+
+``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins for
+every model input of an (arch x shape) cell -- weak-type-correct,
+shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.shardings import ShardingCtx, null_ctx
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models import param as PM
+
+
+def enc_len_of(cfg: ArchConfig, seq_len: int) -> int:
+    """Audio frontend stub: 1 frame embedding per 4 decoder tokens."""
+    return max(seq_len // 4, 8)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    @property
+    def spec(self) -> Dict:
+        if self.cfg.family == "encdec":
+            return ED.encdec_spec(self.cfg)
+        return TF.lm_spec(self.cfg)
+
+    def init(self, key) -> Dict:
+        return PM.init_params(self.spec, key)
+
+    def abstract_params(self) -> Dict:
+        return PM.abstract_params(self.spec)
+
+    def param_pspecs(self, rules, mesh_shape) -> Dict:
+        return PM.param_pspecs(self.spec, rules, mesh_shape)
+
+    def n_params(self) -> int:
+        return PM.count_params(self.spec)
+
+    # -- entry points ---------------------------------------------------------
+
+    def loss(self, params, batch, sc: Optional[ShardingCtx] = None):
+        sc = sc or null_ctx()
+        if self.cfg.family == "encdec":
+            return ED.lm_loss(self.cfg, params, batch, sc)
+        return TF.lm_loss(self.cfg, params, batch, sc)
+
+    def forward(self, params, batch, sc: Optional[ShardingCtx] = None):
+        sc = sc or null_ctx()
+        if self.cfg.family == "encdec":
+            return ED.forward(self.cfg, params, batch, sc)
+        return TF.forward(self.cfg, params, batch, sc)
+
+    def prefill(self, params, batch, sc=None, cache_len: int = None):
+        sc = sc or null_ctx()
+        if cache_len is None:
+            cache_len = batch["tokens"].shape[1]
+        if self.cfg.family == "encdec":
+            return ED.prefill(self.cfg, params, batch, sc, cache_len)
+        return TF.prefill(self.cfg, params, batch, sc, cache_len)
+
+    def decode_step(self, params, tokens, caches, length, sc=None):
+        sc = sc or null_ctx()
+        if self.cfg.family == "encdec":
+            return ED.decode_step(self.cfg, params, tokens, caches,
+                                  length, sc)
+        return TF.decode_step(self.cfg, params, tokens, caches, length, sc)
+
+    def cache_spec(self, batch: int, cache_len: int,
+                   enc_len: int = 0) -> Dict:
+        if self.cfg.family == "encdec":
+            return ED.cache_spec(self.cfg, batch, cache_len,
+                                 enc_len or enc_len_of(self.cfg, cache_len))
+        return TF.cache_spec(self.cfg, batch, cache_len)
+
+    def abstract_caches(self, batch: int, cache_len: int,
+                        enc_len: int = 0) -> Dict:
+        return PM.abstract_params(self.cache_spec(batch, cache_len,
+                                                  enc_len))
+
+    def init_caches(self, batch: int, cache_len: int, enc_len: int = 0):
+        spec = self.cache_spec(batch, cache_len, enc_len)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec,
+            is_leaf=PM.is_spec)
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct],
+                           Dict[str, Any]]:
+    """Returns (batch specs, logical axes per input) for a cell.
+
+    * train:   tokens + labels (+ modality extras)
+    * prefill: tokens (+ extras)
+    * decode:  single-token batch; caches are built separately via
+      ``Model.abstract_caches``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = cfg.compute_dtype
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    axes: Dict[str, Tuple] = {}
+
+    def add(name, shp, dtype, ax):
+        specs[name] = jax.ShapeDtypeStruct(shp, dtype)
+        axes[name] = ax
+
+    if shape.kind == "decode":
+        add("tokens", (b,), i32, ("batch",))
+        return specs, axes
+
+    add("tokens", (b, s), i32, ("batch", "seq"))
+    if shape.kind == "train":
+        add("labels", (b, s), i32, ("batch", "seq"))
+    if cfg.frontend == "vision":
+        add("prefix", (b, cfg.frontend_len, cfg.d_model), cdt,
+            ("batch", None, "act_embed"))
+    if cfg.family == "encdec":
+        add("enc_embeds", (b, enc_len_of(cfg, s), cfg.d_model), cdt,
+            ("batch", None, "act_embed"))
+    return specs, axes
+
+
+def demo_batch(cfg: ArchConfig, shape: ShapeConfig, key) -> Dict:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    specs, _ = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sds.shape, 0,
+                                           max(cfg.vocab - 1, 2),
+                                           dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sds.shape,
+                                          jnp.float32).astype(sds.dtype)
+    return out

@@ -1,0 +1,127 @@
+"""Parameter trees with logical sharding axes.
+
+Models declare parameters as :class:`ArraySpec` pytrees: shape + dtype +
+*logical* axis names.  Three consumers:
+
+* ``init_params``      -- concrete initialisation (smoke tests, real training),
+* ``abstract_params``  -- ShapeDtypeStructs (the dry-run never allocates),
+* ``param_pspecs``     -- logical axes -> ``PartitionSpec`` via sharding
+  rules (repro.distributed.shardings), with divisibility fallback so e.g.
+  10 attention heads on a 16-way model axis degrade to replication
+  instead of a GSPMD error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim
+    init: str = "normal"             # normal | zeros | ones | fan_in
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ArraySpec)
+
+
+def _init_one(spec: ArraySpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else \
+            int(np.prod(spec.shape[:-1]))
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * std).astype(spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * (0.02 * spec.scale)).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(tree, key):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree,
+        is_leaf=is_spec)
+
+
+def param_pspecs(tree, rules: Dict[str, Any], mesh_shape: Dict[str, int]):
+    """Map logical axes -> PartitionSpec under ``rules``.
+
+    ``rules[name]`` is a mesh axis name, tuple of names, or None.  An axis
+    whose size is not divisible by its mesh extent falls back to
+    replication (recorded once per (axis, size) in ``param_pspecs.fallbacks``).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    fallbacks = set()
+
+    def one(spec: ArraySpec):
+        parts = []
+        used = set()
+        for dim, name in zip(spec.shape, spec.axes):
+            mesh_axes = rules.get(name) if name else None
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            axes_t = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            axes_t = tuple(a for a in axes_t if a not in used)
+            extent = int(np.prod([mesh_shape[a] for a in axes_t])) if axes_t else 1
+            if not axes_t or dim % extent != 0:
+                fallbacks.add((name, dim, axes_t))
+                parts.append(None)
+                continue
+            used.update(axes_t)
+            parts.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+        return P(*parts)
+
+    out = jax.tree.map(one, tree, is_leaf=is_spec)
+    param_pspecs.fallbacks = fallbacks
+    return out
+
+
+def cast_compute(tree, dtype):
+    """Working-precision copy: floating leaves with ndim >= 2 (the matmul
+    weights) cast to ``dtype``; scales/biases/decay vectors stay f32.
+    The f32 originals remain the optimizer's master weights."""
+
+    def one(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating) \
+                and getattr(x, "ndim", 0) >= 2:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(one, tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in leaves)

@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The hybrid architecture interleaves two recurrent blocks with one local
+(sliding-window) attention block.  The recurrent mixer is a *gated linear
+recurrence*::
+
+    r_t = sigmoid(W_a x_t)                  (recurrence gate)
+    i_t = sigmoid(W_x x_t)                  (input gate)
+    log a_t = -c * softplus(L) * r_t        (c = 8, L learnable)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear recurrences are associative, so the full sequence runs as a
+``jax.lax.associative_scan`` -- O(log L) depth, the TPU-idiomatic
+replacement for the CUDA linear-scan kernel.  Simplification vs the
+released model (recorded in DESIGN.md): gate projections are dense
+``d_rnn x d_rnn`` instead of block-diagonal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import ShardingCtx
+from repro.models.param import ArraySpec
+
+F32 = jnp.float32
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_kernel: int = 4
+
+
+def rglru_spec(c: RGLRUConfig, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "proj_x": ArraySpec((c.d_model, c.d_rnn), dtype,
+                            ("embed", "rnn"), init="fan_in"),
+        "proj_gate": ArraySpec((c.d_model, c.d_rnn), dtype,
+                               ("embed", "rnn"), init="fan_in"),
+        "conv_w": ArraySpec((c.conv_kernel, c.d_rnn), F32,
+                            (None, "rnn"), init="fan_in"),
+        "conv_b": ArraySpec((c.d_rnn,), F32, ("rnn",), init="zeros"),
+        "w_a": ArraySpec((c.d_rnn, c.d_rnn), dtype, ("rnn", None),
+                         init="fan_in"),
+        "b_a": ArraySpec((c.d_rnn,), F32, ("rnn",), init="zeros"),
+        "w_i": ArraySpec((c.d_rnn, c.d_rnn), dtype, ("rnn", None),
+                         init="fan_in"),
+        "b_i": ArraySpec((c.d_rnn,), F32, ("rnn",), init="zeros"),
+        "lam": ArraySpec((c.d_rnn,), F32, ("rnn",), init="ones"),
+        "proj_out": ArraySpec((c.d_rnn, c.d_model), dtype,
+                              ("rnn", "embed"), init="fan_in"),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out + b
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(jnp.einsum("...e,ef->...f", x, p["w_a"].astype(F32))
+                       + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...e,ef->...f", x, p["w_i"].astype(F32))
+                       + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a): stable via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * (i * x)
+
+
+def rglru_block(p: Dict, c: RGLRUConfig, u: jnp.ndarray, sc: ShardingCtx,
+                h0: jnp.ndarray = None, return_state: bool = False):
+    """Full-sequence recurrent mixer. u: [B,L,d_model]."""
+    x = jnp.einsum("bld,df->blf", u, p["proj_x"])
+    x = sc.constrain(x, "batch", "seq", "act_mlp")
+    gate = jnp.einsum("bld,df->blf", u, p["proj_gate"])
+    x = _causal_conv(x.astype(F32), p["conv_w"], p["conv_b"])
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the incoming state into step 0: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = jnp.einsum("blf,fd->bld", (h * jax.nn.gelu(gate.astype(F32))
+                                     ).astype(u.dtype), p["proj_out"])
+    if return_state:
+        return out, {"h": h[:, -1], "conv": x_tail(u, p, c)}
+    return out
+
+
+def x_tail(u, p, c: RGLRUConfig):
+    """Last K-1 pre-conv inputs (decode conv state) after prefill."""
+    x = jnp.einsum("bld,df->blf", u[:, -(c.conv_kernel - 1):], p["proj_x"])
+    return x.astype(F32)
+
+
+def rglru_cache_spec(c: RGLRUConfig, batch: int) -> Dict:
+    return {
+        "h": ArraySpec((batch, c.d_rnn), F32, ("batch", None),
+                       init="zeros"),
+        "conv": ArraySpec((batch, c.conv_kernel - 1, c.d_rnn), F32,
+                          ("batch", None, None), init="zeros"),
+    }
+
+
+def rglru_step(p: Dict, c: RGLRUConfig, u: jnp.ndarray, cache: Dict,
+               sc: ShardingCtx) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. u: [B,1,d_model]."""
+    x_new = jnp.einsum("bld,df->blf", u, p["proj_x"]).astype(F32)[:, 0]
+    gate = jnp.einsum("bld,df->blf", u, p["proj_gate"])[:, 0]
+    conv_in = jnp.concatenate([cache["conv"], x_new[:, None]], axis=1)
+    x = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(p, x)
+    h = a * cache["h"] + b
+    out = jnp.einsum("bf,fd->bd", (h * jax.nn.gelu(gate.astype(F32))
+                                   ).astype(u.dtype), p["proj_out"])
+    return out[:, None], {"h": h, "conv": conv_in[:, 1:]}

@@ -1,0 +1,235 @@
+"""Mamba2 (state-space duality) block: chunked SSD scan + decode step.
+
+The chunked dual form follows the SSD paper (arXiv:2405.21060): the
+sequence is split into chunks of Q tokens; within a chunk the recurrence
+is evaluated as a (masked, decay-weighted) attention-like quadratic form
+-- MXU-friendly matmuls -- while a tiny cross-chunk recurrence carries the
+[H, P, N] state.  O(L) memory, O(L*Q) compute: the architecture that makes
+``long_500k`` feasible.
+
+Layout: x [B,L,H,P] (heads x head-channels), B/C [B,L,G,N] broadcast to
+heads, per-head scalar decay A.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import ShardingCtx
+from repro.models.param import ArraySpec
+from repro.models.layers import rms_norm, rms_norm_spec
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int          # expand * d_model
+    head_dim: int         # P
+    n_groups: int         # G
+    d_state: int          # N
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_spec(c: SSMConfig, dtype=jnp.bfloat16) -> Dict:
+    h = c.n_heads
+    proj_out_dim = 2 * c.d_inner + 2 * c.n_groups * c.d_state + h
+    return {
+        "in_proj": ArraySpec((c.d_model, proj_out_dim), dtype,
+                             ("embed", "rnn"), init="fan_in"),
+        "conv_w": ArraySpec((c.conv_kernel, c.conv_dim), F32,
+                            (None, "rnn"), init="fan_in"),
+        "conv_b": ArraySpec((c.conv_dim,), F32, ("rnn",), init="zeros"),
+        "A_log": ArraySpec((h,), F32, (None,), init="zeros"),
+        "D": ArraySpec((h,), F32, (None,), init="ones"),
+        "dt_bias": ArraySpec((h,), F32, (None,), init="zeros"),
+        "norm": rms_norm_spec(c.d_inner),
+        "out_proj": ArraySpec((c.d_inner, c.d_model), dtype,
+                              ("rnn", "embed"), init="fan_in"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., T] -> [..., T, T] with out[i,j] = sum_{k=j+1..i} x[k]
+    (lower triangle; -inf above the diagonal)."""
+    t = x.shape[-1]
+    # out[i, j] = sum over k in (j, i] of x[k]; build via cumsum over i of
+    # x[i] masked to j < i
+    xi = jnp.broadcast_to(x[..., :, None], x.shape + (t,))  # [..., i, j] = x_i
+    mask_strict = jnp.tril(jnp.ones((t, t), bool), -1)      # j < i
+    contrib = jnp.where(mask_strict, xi, 0.0)
+    out = jnp.cumsum(contrib, axis=-2)
+    mask_incl = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask_incl, out, -jnp.inf)
+
+
+def ssd(x: jnp.ndarray, a_dt: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+        chunk: int, h0: Optional[jnp.ndarray] = None
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked state-space scan.
+
+    x: [B,L,H,P] (dt already folded in), a_dt: [B,L,H] log-decay,
+    b/c: [B,L,G,N]; returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(F32)
+    bc = jnp.repeat(b.reshape(bsz, nc, q, g, n), rep, axis=3).astype(F32)
+    cc = jnp.repeat(c.reshape(bsz, nc, q, g, n), rep, axis=3).astype(F32)
+    ac = jnp.transpose(a_dt.reshape(bsz, nc, q, h),
+                       (0, 3, 1, 2)).astype(F32)      # [b,h,c,q]
+    a_cs = jnp.cumsum(ac, axis=-1)                     # [b,h,c,q]
+
+    # intra-chunk (quadratic, attention-like)
+    l_mat = jnp.exp(_segsum(ac))                       # [b,h,c,q,q]
+    y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp",
+                        cc, bc, l_mat, xc)
+
+    # chunk state contributions
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)      # [b,h,c,q]
+    states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn", bc, decay_states, xc)
+
+    # cross-chunk recurrence: S_{c} = exp(sum a_c) S_{c-1} + states_c
+    chunk_decay = jnp.exp(a_cs[..., -1])               # [b,h,c]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), F32)
+
+    def step(carry, inp):
+        dec, st = inp                                   # [b,h], [b,h,p,n]
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit entering state
+
+    (final, entering) = jax.lax.scan(
+        step, h0.astype(F32),
+        (jnp.transpose(chunk_decay, (2, 0, 1)),
+         jnp.transpose(states, (1, 0, 2, 3, 4))))
+    entering = jnp.transpose(entering, (1, 0, 2, 3, 4))  # [b,c,h,p,n]
+
+    # inter-chunk output
+    state_decay = jnp.exp(a_cs)                          # [b,h,c,q]
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cc, entering, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv via K shifted adds. x: [B,L,C]; w: [K,C]."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out + b
+
+
+def _split_proj(c: SSMConfig, zxbcdt: jnp.ndarray):
+    di, gn, h = c.d_inner, c.n_groups * c.d_state, c.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def mamba2_block(p: Dict, c: SSMConfig, u: jnp.ndarray, sc: ShardingCtx,
+                 h0: Optional[jnp.ndarray] = None,
+                 return_state: bool = False):
+    """Full-sequence Mamba2 mixer. u: [B,L,d_model] -> [B,L,d_model]."""
+    bsz, l, _ = u.shape
+    zxbcdt = jnp.einsum("bld,de->ble", u, p["in_proj"])
+    zxbcdt = sc.constrain(zxbcdt, "batch", "seq", "act_mlp")
+    z, xbc, dt = _split_proj(c, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc.astype(F32), p["conv_w"],
+                                   p["conv_b"]))
+    gn = c.n_groups * c.d_state
+    x = xbc[..., :c.d_inner]
+    b = xbc[..., c.d_inner:c.d_inner + gn]
+    cc = xbc[..., c.d_inner + gn:]
+    h = c.n_heads
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])     # [B,L,H]
+    a = -jnp.exp(p["A_log"])                                 # [H]
+    xh = x.reshape(bsz, l, h, c.head_dim)
+    y, state = ssd(xh * dt[..., None], a * dt,
+                   b.reshape(bsz, l, c.n_groups, c.d_state),
+                   cc.reshape(bsz, l, c.n_groups, c.d_state),
+                   c.chunk, h0)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(bsz, l, c.d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(F32)))
+    out = jnp.einsum("ble,ed->bld", y.astype(u.dtype), p["out_proj"])
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba2_cache_spec(c: SSMConfig, batch: int) -> Dict:
+    return {
+        "state": ArraySpec((batch, c.n_heads, c.head_dim, c.d_state), F32,
+                           ("batch", None, None, None), init="zeros"),
+        "conv": ArraySpec((batch, c.conv_kernel - 1, c.conv_dim), F32,
+                          ("batch", None, None), init="zeros"),
+    }
+
+
+def mamba2_step(p: Dict, c: SSMConfig, u: jnp.ndarray, cache: Dict,
+                sc: ShardingCtx) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. u: [B,1,d_model]."""
+    bsz = u.shape[0]
+    zxbcdt = jnp.einsum("bld,de->ble", u, p["in_proj"])[:, 0]
+    z, xbc, dt = _split_proj(c, zxbcdt)
+    # conv over [cache ; new]
+    conv_in = jnp.concatenate([cache["conv"],
+                               xbc.astype(F32)[:, None]], axis=1)
+    w = p["conv_w"]
+    xbc_c = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"])
+    new_conv = conv_in[:, 1:]
+    gn = c.n_groups * c.d_state
+    x = xbc_c[..., :c.d_inner]
+    b = xbc_c[..., c.d_inner:c.d_inner + gn].reshape(
+        bsz, c.n_groups, c.d_state)
+    cc = xbc_c[..., c.d_inner + gn:].reshape(bsz, c.n_groups, c.d_state)
+    h = c.n_heads
+    rep = h // c.n_groups
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])     # [B,H]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(a * dt)                                  # [B,H]
+    xh = x.reshape(bsz, h, c.head_dim)
+    bh = jnp.repeat(b, rep, axis=1)                          # [B,H,N]
+    ch = jnp.repeat(cc, rep, axis=1)
+    state = (cache["state"] * decay[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None], bh))
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch) + xh * p["D"][:, None]
+    y = y.reshape(bsz, c.d_inner)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z.astype(F32)))
+    out = jnp.einsum("be,ed->bd", y.astype(u.dtype), p["out_proj"])
+    return out[:, None], {"state": state, "conv": new_conv}

@@ -1,0 +1,466 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid families.
+
+One parameter tree + three entry points per model:
+
+* ``loss(params, batch, sc)``        -- training forward + masked CE,
+* ``prefill(params, batch, sc)``     -- full-sequence forward emitting
+  per-layer caches + last-position logits,
+* ``decode_step(params, tok, caches, length, sc)`` -- one token.
+
+Layers are scan-stacked (``jax.lax.scan`` over a leading ``layers`` axis)
+with configurable rematerialisation -- the whole-step program stays
+compact no matter the depth, which is what keeps the 40-cell dry-run
+tractable and mirrors production JAX LM stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shardings import ShardingCtx
+from repro.models import layers as L
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models import param as PM
+from repro.models.param import ArraySpec, is_spec
+
+F32 = jnp.float32
+
+
+def stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: ArraySpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
+                            s.init, s.scale),
+        tree, is_leaf=is_spec)
+
+
+def _attn_cfg(cfg: ArchConfig, window: Optional[int] = None) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, causal=True, window=window,
+        impl=cfg.attn_impl)
+
+
+def _moe_cfg(cfg: ArchConfig) -> L.MoEConfig:
+    return L.MoEConfig(n_experts=cfg.n_experts, top_k=cfg.top_k,
+                       d_model=cfg.d_model, d_ff=cfg.d_ff, act=cfg.act)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> SSM.SSMConfig:
+    return SSM.SSMConfig(
+        d_model=cfg.d_model, d_inner=cfg.ssm_expand * cfg.d_model,
+        head_dim=cfg.ssm_head_dim, n_groups=1, d_state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk)
+
+
+def _rg_cfg(cfg: ArchConfig) -> RG.RGLRUConfig:
+    return RG.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# layer specs
+# ---------------------------------------------------------------------------
+
+
+def _layer_spec(cfg: ArchConfig) -> Dict:
+    dt = cfg.param_dtype
+    if cfg.family == "dense":
+        return {"ln1": L.rms_norm_spec(cfg.d_model),
+                "attn": L.attention_spec(_attn_cfg(cfg), dt),
+                "ln2": L.rms_norm_spec(cfg.d_model),
+                "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dt)}
+    if cfg.family == "moe":
+        return {"ln1": L.rms_norm_spec(cfg.d_model),
+                "attn": L.attention_spec(_attn_cfg(cfg), dt),
+                "ln2": L.rms_norm_spec(cfg.d_model),
+                "moe": L.moe_spec(_moe_cfg(cfg), dt)}
+    if cfg.family == "ssm":
+        return {"ln": L.rms_norm_spec(cfg.d_model),
+                "mixer": SSM.mamba2_spec(_ssm_cfg(cfg), dt)}
+    raise ValueError(cfg.family)
+
+
+def _rec_layer_spec(cfg: ArchConfig) -> Dict:
+    dt = cfg.param_dtype
+    return {"ln1": L.rms_norm_spec(cfg.d_model),
+            "rec": RG.rglru_spec(_rg_cfg(cfg), dt),
+            "ln2": L.rms_norm_spec(cfg.d_model),
+            "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dt)}
+
+
+def _attn_layer_spec(cfg: ArchConfig) -> Dict:
+    dt = cfg.param_dtype
+    return {"ln1": L.rms_norm_spec(cfg.d_model),
+            "attn": L.attention_spec(_attn_cfg(cfg, cfg.window), dt),
+            "ln2": L.rms_norm_spec(cfg.d_model),
+            "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, dt)}
+
+
+def lm_spec(cfg: ArchConfig) -> Dict:
+    dt = cfg.param_dtype
+    spec: Dict[str, Any] = {
+        "embed": ArraySpec((cfg.padded_vocab, cfg.d_model), dt,
+                           ("vocab", "embed"), init="normal"),
+        "final_norm": L.rms_norm_spec(cfg.d_model),
+        "head": ArraySpec((cfg.d_model, cfg.padded_vocab), dt,
+                          ("embed", "vocab"), init="fan_in"),
+    }
+    if cfg.family == "hybrid":
+        g = cfg.hybrid_group
+        n_groups, tail = divmod(cfg.n_layers, g)
+        group = {"rec": stack_specs(_rec_layer_spec(cfg), g - 1),
+                 "attn": _attn_layer_spec(cfg)}
+        spec["groups"] = stack_specs(group, n_groups)
+        spec["tail"] = stack_specs(_rec_layer_spec(cfg), tail) if tail \
+            else {}
+    else:
+        spec["layers"] = stack_specs(_layer_spec(cfg), cfg.n_layers)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# blocks (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(cfg, p, x, positions, sc):
+    x = x + L.attention(p["attn"], _attn_cfg(cfg),
+                        L.rms_norm(p["ln1"], x), positions, sc)
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x), cfg.act, sc)
+    # pin the remat-saved layer boundary to the 2D activation sharding
+    x = sc.constrain(x, "batch", "seq", "act_embed")
+    return x, jnp.zeros((), F32)
+
+
+def _moe_block(cfg, p, x, positions, sc):
+    x = x + L.attention(p["attn"], _attn_cfg(cfg),
+                        L.rms_norm(p["ln1"], x), positions, sc)
+    y, aux = L.moe(p["moe"], _moe_cfg(cfg), L.rms_norm(p["ln2"], x), sc)
+    x = sc.constrain(x + y, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _ssm_block(cfg, p, x, positions, sc):
+    x = x + SSM.mamba2_block(p["mixer"], _ssm_cfg(cfg),
+                             L.rms_norm(p["ln"], x), sc)
+    return x, jnp.zeros((), F32)
+
+
+def _rec_block(cfg, p, x, sc):
+    x = x + RG.rglru_block(p["rec"], _rg_cfg(cfg),
+                           L.rms_norm(p["ln1"], x), sc)
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x), cfg.act, sc)
+    return x
+
+
+def _local_attn_block(cfg, p, x, positions, sc):
+    x = x + L.attention(p["attn"], _attn_cfg(cfg, cfg.window),
+                        L.rms_norm(p["ln1"], x), positions, sc)
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x), cfg.act, sc)
+    return x
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens, sc: ShardingCtx):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    return sc.constrain(x, "batch", "seq", "act_embed")
+
+
+def forward(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B,S_total,V], aux_loss)."""
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens, sc)
+    prefix = batch.get("prefix")          # vision stub: [B,P,d]
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(cfg.compute_dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    aux_total = jnp.zeros((), F32)
+    if cfg.family == "hybrid":
+        def group_fn(x, gp):
+            def rec_fn(x, rp):
+                return _remat(cfg, lambda xx: _rec_block(cfg, rp, xx, sc)
+                              )(x), None
+            x, _ = jax.lax.scan(rec_fn, x, gp["rec"])
+            x = _remat(cfg, lambda xx: _local_attn_block(
+                cfg, gp["attn"], xx, positions, sc))(x)
+            return x, None
+        x, _ = jax.lax.scan(group_fn, x, params["groups"])
+        if params.get("tail"):
+            def tail_fn(x, rp):
+                return _remat(cfg, lambda xx: _rec_block(cfg, rp, xx, sc)
+                              )(x), None
+            x, _ = jax.lax.scan(tail_fn, x, params["tail"])
+    else:
+        block = {"dense": _dense_block, "moe": _moe_block,
+                 "ssm": _ssm_block}[cfg.family]
+
+        def body(carry, lp):
+            x, aux = carry
+            fn = _remat(cfg, lambda xx: block(cfg, lp, xx, positions, sc))
+            x, a = fn(x)
+            return (x, aux + a), None
+
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["layers"])
+        else:
+            n = jax.tree.leaves(params["layers"])[0].shape[0]
+            for i in range(n):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                (x, aux_total), _ = body((x, aux_total), lp)
+
+    x = L.rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    logits = sc.constrain(logits, "batch", "seq", "act_mlp")
+    return logits, aux_total
+
+
+def lm_loss(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx
+            ) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(cfg, params, batch, sc)
+    labels = batch["labels"]
+    prefix = batch.get("prefix")
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    logits = logits.astype(F32)
+    mask = (labels >= 0).astype(F32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via one-hot contraction, NOT take_along_axis: with the
+    # vocab axis model-sharded, gather-based indexing all-gathers the
+    # full f32 logits; the contraction stays shard-local + tiny psum
+    # (Perf iteration 6).
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom + 0.01 * aux
+    return loss, {"nll": nll.sum() / denom, "aux": aux,
+                  "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int) -> Dict:
+    cdtype = cfg.compute_dtype
+    if cfg.family in ("dense", "moe"):
+        one = L.attention_cache_spec(_attn_cfg(cfg), batch, cache_len,
+                                     cdtype)
+        return {"layers": stack_specs(one, cfg.n_layers)}
+    if cfg.family == "ssm":
+        one = SSM.mamba2_cache_spec(_ssm_cfg(cfg), batch)
+        return {"layers": stack_specs(one, cfg.n_layers)}
+    if cfg.family == "hybrid":
+        g = cfg.hybrid_group
+        n_groups, tail = divmod(cfg.n_layers, g)
+        wlen = min(cache_len, cfg.window or cache_len)
+        group = {
+            "rec": stack_specs(RG.rglru_cache_spec(_rg_cfg(cfg), batch),
+                               g - 1),
+            "attn": L.attention_cache_spec(_attn_cfg(cfg, cfg.window),
+                                           batch, wlen, cdtype),
+        }
+        spec = {"groups": stack_specs(group, n_groups)}
+        spec["tail"] = (stack_specs(RG.rglru_cache_spec(_rg_cfg(cfg),
+                                                        batch), tail)
+                        if tail else {})
+        return spec
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ArchConfig, params, batch: Dict, sc: ShardingCtx,
+            cache_len: int):
+    """Full-sequence prefill -> (last-token logits [B,V], caches)."""
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens, sc)
+    prefix = batch.get("prefix")
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(cfg.compute_dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family in ("dense", "moe"):
+        acfg = _attn_cfg(cfg)
+
+        def body(x, lp):
+            h = L.rms_norm(lp["ln1"], x)
+            a, cache = L.attention_prefill(lp["attn"], acfg, h, positions,
+                                           sc, cache_len)
+            x = x + a
+            if cfg.family == "dense":
+                x = x + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x), cfg.act,
+                              sc)
+            else:
+                y, _ = L.moe(lp["moe"], _moe_cfg(cfg),
+                             L.rms_norm(lp["ln2"], x), sc)
+                x = x + y
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        caches = {"layers": caches}
+    elif cfg.family == "ssm":
+        scfg = _ssm_cfg(cfg)
+
+        def body(x, lp):
+            h = L.rms_norm(lp["ln"], x)
+            y, state = SSM.mamba2_block(lp["mixer"], scfg, h, sc,
+                                        return_state=True)
+            conv = SSM_conv_tail(lp["mixer"], scfg, h)
+            return x + y, {"state": state, "conv": conv}
+
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        caches = {"layers": caches}
+    elif cfg.family == "hybrid":
+        rcfg = _rg_cfg(cfg)
+        wlen = min(cache_len, cfg.window or cache_len)
+
+        def rec_prefill(x, rp):
+            h = L.rms_norm(rp["ln1"], x)
+            y, st = RG.rglru_block(rp["rec"], rcfg, h, sc,
+                                   return_state=True)
+            x = x + y
+            x = x + L.mlp(rp["mlp"], L.rms_norm(rp["ln2"], x), cfg.act, sc)
+            return x, st
+
+        def group_fn(x, gp):
+            x, rst = jax.lax.scan(rec_prefill, x, gp["rec"])
+            h = L.rms_norm(gp["attn"]["ln1"], x)
+            a, kv = L.attention_prefill(gp["attn"]["attn"],
+                                        _attn_cfg(cfg, cfg.window), h,
+                                        positions, sc, wlen)
+            x = x + a
+            x = x + L.mlp(gp["attn"]["mlp"],
+                          L.rms_norm(gp["attn"]["ln2"], x), cfg.act, sc)
+            return x, {"rec": rst, "attn": kv}
+
+        x, gcaches = jax.lax.scan(group_fn, x, params["groups"])
+        caches = {"groups": gcaches}
+        if params.get("tail"):
+            x, tst = jax.lax.scan(rec_prefill, x, params["tail"])
+            caches["tail"] = tst
+        else:
+            caches["tail"] = {}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x[:, -1:])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    return logits[:, 0].astype(F32), caches
+
+
+def SSM_conv_tail(p, scfg: SSM.SSMConfig, h):
+    """Decode conv state after prefill: last K-1 post-proj inputs."""
+    zxbcdt = jnp.einsum("bld,de->ble", h[:, -(scfg.conv_kernel - 1):],
+                        p["in_proj"])
+    _, xbc, _ = SSM._split_proj(scfg, zxbcdt)
+    return xbc.astype(F32)
+
+
+def decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, caches: Dict,
+                length: jnp.ndarray, sc: ShardingCtx):
+    """tokens: [B] int32; length: [] i32 tokens already cached.
+    Returns (logits [B,V], new caches)."""
+    params = PM.cast_compute(params, cfg.compute_dtype)
+    x = params["embed"][tokens[:, None]].astype(cfg.compute_dtype)
+
+    if cfg.family in ("dense", "moe"):
+        acfg = _attn_cfg(cfg)
+
+        def body(x, xs):
+            lp, cache = xs
+            h = L.rms_norm(lp["ln1"], x)
+            a, nc = L.attention_decode(lp["attn"], acfg, h, cache, length,
+                                       sc)
+            x = x + a
+            if cfg.family == "dense":
+                x = x + L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x), cfg.act,
+                              sc)
+            else:
+                y, _ = L.moe(lp["moe"], _moe_cfg(cfg),
+                             L.rms_norm(lp["ln2"], x), sc)
+                x = x + y
+            return x, nc
+
+        x, new = jax.lax.scan(body, x, (params["layers"],
+                                        caches["layers"]))
+        new_caches = {"layers": new}
+    elif cfg.family == "ssm":
+        scfg = _ssm_cfg(cfg)
+
+        def body(x, xs):
+            lp, cache = xs
+            h = L.rms_norm(lp["ln"], x)
+            y, nc = SSM.mamba2_step(lp["mixer"], scfg, h, cache, sc)
+            return x + y, nc
+
+        x, new = jax.lax.scan(body, x, (params["layers"],
+                                        caches["layers"]))
+        new_caches = {"layers": new}
+    elif cfg.family == "hybrid":
+        rcfg = _rg_cfg(cfg)
+        acfg = _attn_cfg(cfg, cfg.window)
+
+        def rec_step(x, xs):
+            rp, cache = xs
+            h = L.rms_norm(rp["ln1"], x)
+            y, nc = RG.rglru_step(rp["rec"], rcfg, h, cache, sc)
+            x = x + y
+            x = x + L.mlp(rp["mlp"], L.rms_norm(rp["ln2"], x), cfg.act, sc)
+            return x, nc
+
+        def group_fn(x, xs):
+            gp, gc = xs
+            x, rnew = jax.lax.scan(rec_step, x, (gp["rec"], gc["rec"]))
+            h = L.rms_norm(gp["attn"]["ln1"], x)
+            a, kvnew = L.attention_decode_ring(gp["attn"]["attn"], acfg, h,
+                                               gc["attn"], length, sc)
+            x = x + a
+            x = x + L.mlp(gp["attn"]["mlp"],
+                          L.rms_norm(gp["attn"]["ln2"], x), cfg.act, sc)
+            return x, {"rec": rnew, "attn": kvnew}
+
+        x, gnew = jax.lax.scan(group_fn, x, (params["groups"],
+                                             caches["groups"]))
+        new_caches = {"groups": gnew}
+        if params.get("tail"):
+            x, tnew = jax.lax.scan(rec_step, x, (params["tail"],
+                                                 caches["tail"]))
+            new_caches["tail"] = tnew
+        else:
+            new_caches["tail"] = {}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"].astype(cfg.compute_dtype))
+    return logits[:, 0].astype(F32), new_caches

@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm)            # noqa: F401
+from repro.optim.schedule import warmup_cosine                  # noqa: F401

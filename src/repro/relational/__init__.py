@@ -1,0 +1,1 @@
+"""Columnar relational substrate: tables, TPC-H data, benchmark queries."""

@@ -1,0 +1,52 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here -- smoke tests and
+# benches must see exactly 1 device (the dry-run sets its own flag).
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_with_devices(n_devices: int, code: str, timeout: int = 420) -> str:
+    """Run ``code`` in a subprocess with N host devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices
+
+
+def assert_results_equal(a, b, rtol=5e-3, atol=1e-6, ordered=True,
+                         msg=""):
+    """Compare two collect() dicts."""
+    assert set(a) == set(b), msg
+    for k in a:
+        x, y = a[k], b[k]
+        assert x.shape == y.shape, (msg, k, x.shape, y.shape)
+        if x.dtype == object or y.dtype == object:
+            if ordered:
+                assert list(x) == list(y), (msg, k)
+            else:
+                assert sorted(x) == sorted(y), (msg, k)
+        else:
+            xf, yf = np.float64(x), np.float64(y)
+            if not ordered:
+                xf, yf = np.sort(xf), np.sort(yf)
+            np.testing.assert_allclose(xf, yf, rtol=rtol, atol=atol,
+                                       err_msg=f"{msg}/{k}")

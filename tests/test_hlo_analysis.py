@@ -1,0 +1,142 @@
+"""Trip-count-aware HLO analyzer: validated against hand-counted programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as HA
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def body(x, w):
+        def f(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(f, x, w)
+        return out
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    r = HA.analyze(_hlo(body, x, w))
+    np.testing.assert_allclose(r["flops"], 8 * 2 * 256 ** 3, rtol=0.01)
+
+
+def test_nested_scan_multiplies():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, wi):
+                return jnp.tanh(c2 @ wi), None
+            c, _2 = jax.lax.scan(inner, c, w)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    r = HA.analyze(_hlo(nested, x, w))
+    np.testing.assert_allclose(r["flops"], 32 * 2 * 128 ** 3, rtol=0.01)
+
+
+def test_plain_matmul_flops():
+    def mm(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    r = HA.analyze(_hlo(mm, a, b))
+    np.testing.assert_allclose(r["flops"], 2 * 64 * 128 * 32, rtol=0.01)
+
+
+def test_batched_dot_contraction():
+    def bmm(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    r = HA.analyze(_hlo(bmm, a, b))
+    np.testing.assert_allclose(r["flops"], 2 * 4 * 32 * 64 * 16,
+                               rtol=0.01)
+
+
+def test_dus_counted_as_update_not_buffer():
+    """KV-append pattern: traffic must scale with the update, not cache."""
+    def append(cache, new):
+        def step(c, i):
+            c = jax.lax.dynamic_update_slice_in_dim(
+                c, new, i * new.shape[0], axis=0)
+            return c, None
+        out, _ = jax.lax.scan(step, cache, jnp.arange(16))
+        return out
+
+    cache = jax.ShapeDtypeStruct((16 * 128, 256), jnp.float32)
+    new = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    r = HA.analyze(_hlo(append, cache, new))
+    buffer_bytes = 16 * 128 * 256 * 4
+    # naive (16 full-buffer writes, x2 streaming) would be ~32x buffer;
+    # in-place accounting keeps it at params + 16 slice-updates
+    assert r["hbm_bytes"] < 10 * buffer_bytes, r["hbm_bytes"]
+    assert r["hbm_bytes"] > buffer_bytes
+
+
+def test_collectives_in_scan_counted(subproc):
+    out = subproc(8, r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch import hlo_analysis as HA
+def body(x, w):
+    def f(c, wi):
+        return jnp.tanh(c @ wi), None
+    out, _ = jax.lax.scan(f, x, w)
+    return out
+x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+w = jax.ShapeDtypeStruct((8, 512, 512), jnp.float32)
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+shw = NamedSharding(mesh, P(None, "data", None))
+shx = NamedSharding(mesh, P())
+with mesh:
+    hlo = jax.jit(body, in_shardings=(shx, shw)).lower(x, w)\
+        .compile().as_text()
+r = HA.analyze(hlo)
+total = r["collective_bytes_total"]
+# 8 iterations x ~1MB partial results reduced
+assert 4e6 < total < 4e7, total
+print("COLL_OK", total)
+""")
+    assert "COLL_OK" in out
+
+
+def test_known_trip_count_preferred():
+    hlo = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %add.1 = s32[] add(%g0, %c1)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%add.1, %dot.1)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g2 = s32[] get-tuple-element(%p2), index=0
+  %c99 = s32[] constant(12)
+  ROOT %lt = pred[] compare(%g2, %c99), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tup = (s32[], f32[8,8]{1,0}) tuple(%c0, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    r = HA.analyze(hlo)
+    np.testing.assert_allclose(r["flops"], 12 * 2 * 8 ** 3, rtol=0.01)

@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis): engine equivalence on random plans.
+
+The system invariant: for ANY plan the three engines produce identical
+results.  Hypothesis generates random tables (dense-int keys, dict-coded
+strings, floats) and random plan trees (filter/project/join/aggregate/
+sort/limit with random expressions) and asserts volcano == compiled ==
+stage row-for-row.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import assert_results_equal
+from repro.core import FlareContext, col, flare, lit, when
+from repro.core import engines as ENG
+from repro.core import plan as P
+from repro.core.dataframe import any_, avg, count, max_, min_, sum_
+from repro.relational.table import Table
+
+MAX_EXAMPLES = 25
+
+
+@st.composite
+def tables(draw, min_rows=1, max_rows=120):
+    n = draw(st.integers(min_rows, max_rows))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31 - 1)))
+    kdom = draw(st.integers(2, 12))
+    # x: unique, f32-exactly-representable values (the compiled engine
+    # computes in f32; sub-f32 differences would make sort order
+    # legitimately ambiguous across engines)
+    x = rng.permutation(n) * 0.5 + np.round(rng.uniform(-100, 100, n), 1)
+    data = {
+        "k": rng.integers(0, kdom, n).astype(np.int32),
+        "tag": rng.choice(["aa", "bb", "cc", "dd"], n),
+        "x": np.round(x, 1),
+        "y": rng.integers(-50, 50, n).astype(np.int32),
+    }
+    return Table.from_arrays(data, domains={"k": kdom}), kdom
+
+
+@st.composite
+def predicates(draw):
+    kind = draw(st.integers(0, 5))
+    if kind == 0:
+        return col("x") > draw(st.floats(-100, 100, allow_nan=False))
+    if kind == 1:
+        return col("y").between(draw(st.integers(-50, 0)),
+                                draw(st.integers(0, 50)))
+    if kind == 2:
+        return col("tag") == draw(st.sampled_from(["aa", "bb", "zz"]))
+    if kind == 3:
+        return (col("x") > 0.0) | (col("y") < 0)
+    if kind == 4:
+        return ~(col("k") == draw(st.integers(0, 11)))
+    return col("tag").isin(draw(st.lists(
+        st.sampled_from(["aa", "bb", "cc"]), min_size=1, max_size=3)))
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(tables(), predicates(), st.integers(0, 3))
+def test_filter_project_equivalence(tbl_dom, pred, proj_kind):
+    tbl, _ = tbl_dom
+    ctx = FlareContext()
+    ctx.register("t", tbl)
+    q = ctx.table("t").filter(pred)
+    if proj_kind == 1:
+        q = q.select(("z", col("x") * 2.0 + 1.0), ("k", col("k")))
+    elif proj_kind == 2:
+        q = q.select(("w", when(col("y") > 0, col("x"), 0.0 - col("x"))),
+                     ("tag", col("tag")))
+    elif proj_kind == 3:
+        q = q.with_column("r", col("x") / (col("y") + lit(100)))
+    rv = q.collect(engine="volcano")
+    rc = flare(q).collect()
+    rs = q.collect(engine="stage")
+    assert_results_equal(rv, rc, msg="compiled")
+    assert_results_equal(rv, rs, msg="stage")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(tables(), predicates(),
+       st.lists(st.sampled_from(["k", "tag"]), min_size=0, max_size=2,
+                unique=True))
+def test_aggregate_equivalence(tbl_dom, pred, keys):
+    tbl, _ = tbl_dom
+    ctx = FlareContext()
+    ctx.register("t", tbl)
+    q = ctx.table("t").filter(pred)
+    aggs = [sum_(col("x"), "sx"), count("n"), min_(col("y"), "mn"),
+            max_(col("x"), "mx"), avg(col("x"), "ax")]
+    q = (q.group_by(*keys).agg(*aggs) if keys
+         else q.agg(*aggs))
+    rv = q.collect(engine="volcano")
+    rc = flare(q).collect()
+    assert_results_equal(rv, rc, rtol=1e-2, atol=1e-2, msg="agg")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(tables(max_rows=80), tables(max_rows=40),
+       st.sampled_from(["inner", "left", "semi", "anti"]))
+def test_join_equivalence(t1d, t2d, how):
+    t1, dom1 = t1d
+    t2, dom2 = t2d
+    # build side: unique keys (N:1 invariant)
+    rng = np.random.default_rng(0)
+    dom = max(dom1, dom2)
+    keys = np.arange(dom, dtype=np.int32)
+    keep = rng.random(dom) < 0.7
+    build = Table.from_arrays(
+        {"k": keys[keep], "payload": np.round(
+            rng.uniform(0, 10, int(keep.sum())), 3)},
+        domains={"k": dom})
+    probe = Table.from_arrays(
+        {"k": np.asarray(t1["k"]) % dom, "x": t1["x"]},
+        domains={"k": dom})
+    ctx = FlareContext()
+    ctx.register("probe", probe)
+    ctx.register("build", build)
+    q = ctx.table("probe").join(ctx.table("build"), on="k", how=how)
+    rv = q.collect(engine="volcano")
+    rc = flare(q).collect()
+    rs = q.collect(engine="stage")
+    assert_results_equal(rv, rc, msg=f"join {how}")
+    assert_results_equal(rv, rs, msg=f"join {how} stage")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(tables(), st.sampled_from([("x", True), ("x", False),
+                                  ("y", True), ("k", False)]),
+       st.integers(1, 20))
+def test_sort_limit_equivalence(tbl_dom, by, n):
+    tbl, _ = tbl_dom
+    ctx = FlareContext()
+    ctx.register("t", tbl)
+    # tie-break on x (near-unique float) for deterministic cross-engine order
+    q = ctx.table("t").sort(by, ("x", True)).limit(n)
+    rv = q.collect(engine="volcano")
+    rc = flare(q).collect()
+    assert_results_equal(rv, rc, msg="sort/limit")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(tables(), predicates())
+def test_optimizer_invariance(tbl_dom, pred):
+    """optimize(plan) must not change results (rule soundness)."""
+    tbl, _ = tbl_dom
+    ctx = FlareContext()
+    ctx.register("t", tbl)
+    q = (ctx.table("t").filter(pred)
+         .select(("k", col("k")), ("tag", col("tag")),
+                 ("v", col("x") + 1.0))
+         .filter(col("v") > -1000.0)
+         .group_by("tag").agg(sum_(col("v"), "sv"), count("n")))
+    r_raw = ENG.execute(q.plan, ctx.catalog, "volcano").compact()
+    r_opt = ENG.execute(ctx.optimized(q.plan), ctx.catalog,
+                        "volcano").compact()
+    assert_results_equal(r_raw, r_opt, msg="optimizer")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.lists(st.text(alphabet="abcdef", min_size=0, max_size=6),
+                min_size=1, max_size=50))
+def test_dictionary_roundtrip(strings):
+    from repro.relational.table import dictionary_encode
+    colm = dictionary_encode(strings)
+    assert list(colm.decode()) == [str(s) for s in strings]
+    # codes are in sorted-dictionary order
+    assert list(colm.dictionary) == sorted(set(str(s) for s in strings))

@@ -1,0 +1,116 @@
+"""End-to-end system behaviour: the paper's claims as assertions.
+
+The core reproduction test is differential: all four engines (tuple
+Volcano, vectorized volcano, stage-granular, whole-query compiled) must
+agree on every TPC-H query; the optimizer must not change results; the
+paper's Q6 semantics must match a hand computation.
+"""
+import numpy as np
+import pytest
+
+from conftest import assert_results_equal
+from repro.core import FlareContext, col, flare
+from repro.core import engines as ENG
+from repro.relational import queries as Q
+from repro.relational.tpch import date
+
+SF = 0.005
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    c = FlareContext()
+    Q.register_tpch(c, sf=SF)
+    return c
+
+
+@pytest.mark.parametrize("qname", list(Q.QUERIES))
+def test_engines_agree(ctx, qname):
+    q = Q.QUERIES[qname](ctx)
+    rv = q.collect(engine="volcano")
+    rs = q.collect(engine="stage")
+    rc = flare(q).collect()
+    assert_results_equal(rv, rs, msg=f"{qname} stage")
+    assert_results_equal(rv, rc, msg=f"{qname} compiled")
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3", "q6", "q13", "q14"])
+def test_tuple_engine_agrees(ctx, qname):
+    q = Q.QUERIES[qname](ctx)
+    rv = q.collect(engine="volcano")
+    rt = q.collect(engine="tuple")
+    assert_results_equal(rv, rt, ordered=False, msg=qname)
+
+
+def test_q22_two_phase(ctx):
+    rv = Q.q22(ctx, "volcano").collect(engine="volcano")
+    rc = flare(Q.q22(ctx, "compiled")).collect()
+    assert_results_equal(rv, rc, msg="q22")
+
+
+def test_q6_matches_hand_computation(ctx):
+    """Paper Fig. 2/3: Q6 is a closed-form filter-aggregate."""
+    li = ctx.catalog.table("lineitem")
+    ship, disc = li["l_shipdate"], li["l_discount"]
+    qty, price = li["l_quantity"], li["l_extendedprice"]
+    pred = ((ship >= date("1994-01-01")) & (ship < date("1995-01-01"))
+            & (disc >= 0.05) & (disc <= 0.07) & (qty < 24.0))
+    expected = float((price[pred] * disc[pred]).sum())
+    got = float(flare(Q.q6(ctx)).result().scalar("revenue"))
+    np.testing.assert_allclose(got, expected, rtol=2e-3)
+
+
+@pytest.mark.parametrize("qname", ["q3", "q5", "q10", "q19"])
+def test_optimizer_preserves_results(ctx, qname):
+    q = Q.QUERIES[qname](ctx)
+    r_opt = ENG.execute(ctx.optimized(q.plan), ctx.catalog,
+                        "volcano").compact()
+    r_raw = ENG.execute(q.plan, ctx.catalog, "volcano").compact()
+    assert_results_equal(r_raw, r_opt, msg=qname)
+
+
+def test_optimizer_prunes_and_pushes(ctx):
+    q = Q.q3(ctx)
+    txt = ctx.optimized(q.plan).explain()
+    assert "Scan" in txt
+    assert "Project" in txt  # pruning projects above scans
+
+
+def test_join_reorder_preserves_results(ctx):
+    from repro.core import optimizer as OPT
+    q = Q.q10(ctx)
+    re = OPT.optimize(q.plan, ctx.catalog, join_reorder=True)
+    base = OPT.optimize(q.plan, ctx.catalog, join_reorder=False)
+    ra = ENG.execute(re, ctx.catalog, "volcano").compact()
+    rb = ENG.execute(base, ctx.catalog, "volcano").compact()
+    assert_results_equal(ra, rb, msg="reorder q10")
+
+
+def test_join_strategies_agree(ctx):
+    a = flare(Q.join_micro(ctx, "sorted")).collect()
+    b = flare(Q.join_micro(ctx, "sortmerge")).collect()
+    assert_results_equal(a, b, msg="join strategies")
+
+
+def test_compile_cache_hits(ctx):
+    from repro.core.engines import CompileStats
+    q = Q.q6(ctx)
+    s1, s2 = CompileStats(), CompileStats()
+    ctx.execute(q.plan, "compiled", s1)
+    ctx.execute(q.plan, "compiled", s2)
+    assert s2.cache_hit
+
+
+def test_semi_anti_duality(ctx):
+    orders = ctx.table("orders")
+    li = ctx.table("lineitem").filter(col("l_quantity") > 45.0)
+    semi = orders.join(li, on="o_orderkey", right_on="l_orderkey",
+                       how="semi").count(engine="stage")
+    anti = orders.join(li, on="o_orderkey", right_on="l_orderkey",
+                       how="anti").count(engine="stage")
+    assert semi + anti == ctx.catalog.table("orders").num_rows
+
+
+def test_explain_shows_physical_plan(ctx):
+    txt = Q.q6(ctx).explain()
+    assert "Physical Plan" in txt and "Aggregate" in txt

@@ -1,0 +1,73 @@
+"""Training loop: convergence, exact resume, fault tolerance, stragglers."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.supervisor import StepWatchdog, run_supervised
+from repro.launch.train import TrainRun, train_loop
+
+
+def test_loss_decreases(tmp_path):
+    run = TrainRun(steps=25, batch=4, seq=64, ckpt_dir=None, n_docs=100)
+    out = train_loop(run)
+    first = np.mean(out["losses"][:3])
+    last = np.mean(out["losses"][-3:])
+    assert last < first * 0.7, (first, last)
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """train(20) == train(10) + resume(10 more): identical loss stream."""
+    d1 = str(tmp_path / "a")
+    run_full = TrainRun(steps=20, batch=4, seq=64, ckpt_dir=d1,
+                        ckpt_every=5, n_docs=100)
+    full = train_loop(run_full)
+
+    d2 = str(tmp_path / "b")
+    run_a = TrainRun(steps=10, batch=4, seq=64, ckpt_dir=d2,
+                     ckpt_every=5, n_docs=100)
+    train_loop(run_a)
+    run_b = TrainRun(steps=20, batch=4, seq=64, ckpt_dir=d2,
+                     ckpt_every=5, n_docs=100)
+    resumed = train_loop(run_b)  # restores step 10, runs 10 more
+    np.testing.assert_allclose(resumed["losses"],
+                               full["losses"][10:], rtol=1e-4)
+
+
+def test_supervisor_restarts_on_fault(tmp_path):
+    run = TrainRun(steps=12, batch=2, seq=32, ckpt_dir=str(tmp_path),
+                   ckpt_every=4, fault_prob=0.15, n_docs=60)
+    attempts = []
+
+    def once():
+        train_loop(run)
+
+    def on_restart(n, e):
+        run.restarts_seen = n
+        attempts.append(type(e).__name__)
+
+    restarts = run_supervised(once, max_restarts=20,
+                              on_restart=on_restart)
+    assert all(a == "FaultInjected" for a in attempts)
+    # training completed despite faults
+    assert len(run.losses) >= 12
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(threshold=2.0, warmup=3)
+    events = []
+    for step, dt in enumerate([0.1] * 6 + [0.5] + [0.1] * 3):
+        wd.observe(step, dt, on_straggler=events.append)
+    assert len(events) == 1 and events[0]["step"] == 6
+
+
+def test_supervisor_gives_up_after_max():
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        run_supervised(always_fails, max_restarts=2)
+    assert len(calls) == 3  # initial + 2 restarts

@@ -1,0 +1,31 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs import get
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.launch import hlo_analysis as HA
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get(arch); sh = SHAPES[shape]
+mesh = make_production_mesh(multi_pod=False)
+cell = build_cell(cfg, sh, mesh)
+with mesh:
+    hlo = jax.jit(cell.fn, in_shardings=cell.in_shardings, donate_argnums=cell.donate).lower(*cell.args).compile().as_text()
+comps = HA.parse_computations(hlo)
+mult, fusion_comps = HA.computation_multiplicities(hlo, comps)
+rows = []
+for name, instrs in comps.items():
+    m = mult.get(name, 0.0)
+    if m == 0: continue
+    shapes = {i.name: HA._result_shape(i.body) for i in instrs}
+    for ins in instrs:
+        if ins.opcode in HA._COLLECTIVES:
+            out_b = HA._shape_elems_bytes(HA._result_shape(ins.body))[1]
+            in_b = sum(HA._shape_elems_bytes(shapes.get(o, ""))[1] for o in HA._operand_names(ins.body))
+            meta = ins.body[ins.body.find("op_name="):][:120] if "op_name=" in ins.body else ""
+            rows.append((m*max(in_b,out_b), int(m), ins.opcode, HA._result_shape(ins.body)[:40], meta))
+rows.sort(reverse=True)
+for b, m, op, shp, meta in rows[:14]:
+    print(f"{b/2**30:8.1f} GiB x{m:4d} {op:18s} {shp:40s} {meta[:100]}")

@@ -1,0 +1,29 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, re
+from repro.configs import get
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.launch import hlo_analysis as HA
+
+arch, shape, pattern = sys.argv[1], sys.argv[2], sys.argv[3]
+cfg = get(arch); sh = SHAPES[shape]
+mesh = make_production_mesh(multi_pod=False)
+cell = build_cell(cfg, sh, mesh)
+with mesh:
+    hlo = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(*cell.args).compile().as_text()
+comps = HA.parse_computations(hlo)
+# find the fusion instruction and its called computation
+for name, instrs in comps.items():
+    for ins in instrs:
+        if pattern in ins.name and ins.opcode == "fusion":
+            print(f"--- call site in {name}: {ins.name}")
+            print("   ", ins.body[:400])
+            m = re.search(r"calls=%?([\w.\-]+)", ins.body)
+            if m and m.group(1) in comps:
+                print(f"--- fused computation {m.group(1)}:")
+                for i2 in comps[m.group(1)]:
+                    print(f"    {'ROOT ' if i2.is_root else ''}{i2.name} = {i2.body[:220]}")
+            sys.exit(0)
+print("not found")

@@ -1,0 +1,19 @@
+"""Measure one (arch x shape) cell's roofline terms (hillclimb loop)."""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from repro.launch.dryrun import run_cell
+from benchmarks.roofline import analyze_record
+
+for spec in sys.argv[1:]:
+    arch, shape = spec.split(":")
+    rec = run_cell(arch, shape, multi_pod=False, save=False)
+    if rec["status"] != "ok":
+        print(arch, shape, "ERROR", rec.get("error", "")[:300])
+        continue
+    a = analyze_record(rec)
+    print(f"{arch:12s} {shape:10s} t_c={a['t_compute']:.4f} t_m={a['t_memory']:.4f} "
+          f"t_coll={a['t_collective']:.4f} dom={a['dominant']} useful={a['useful_ratio']:.3f} "
+          f"frac={a['roofline_frac']:.4f} mem/dev={a['hbm_gib']:.1f}GiB compile={rec['compile_s']:.0f}s")
+
+# breakdown mode: PERF_BREAKDOWN=1 prints per-kind collective bytes

@@ -1,0 +1,49 @@
+"""Dump top per-device HBM traffic contributors for a dry-run cell."""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs import get
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.launch import hlo_analysis as HA
+
+
+def top_contribs(arch, shape, topn=12, multi_pod=False):
+    cfg = get(arch); sh = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(cfg, sh, mesh)
+    with mesh:
+        hlo = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(*cell.args).compile().as_text()
+    comps = HA.parse_computations(hlo)
+    mult, fusion_comps = HA.computation_multiplicities(hlo, comps)
+    rows, drows = [], []
+    for name, instrs in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0: continue
+        shapes = {i.name: HA._result_shape(i.body) for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            if op == "dot" and name not in ():
+                drows.append((m * HA._dot_flops(ins, shapes), m, HA._result_shape(ins.body)[:44], ins.name[:40]))
+            if name in fusion_comps or op in HA._NO_TRAFFIC: continue
+            out_b = HA._shape_elems_bytes(HA._result_shape(ins.body))[1]
+            if op == "dynamic-update-slice":
+                ops_ = HA._operand_names(ins.body)
+                out_b = HA._shape_elems_bytes(shapes.get(ops_[1], ""))[1] if len(ops_) > 1 else out_b
+            elif op == "fusion":
+                out_b = HA._fusion_out_traffic(ins, comps, out_b)
+            rows.append((m * out_b, m, op, HA._result_shape(ins.body)[:44], ins.name[:40]))
+    rows.sort(reverse=True); drows.sort(reverse=True)
+    print(f"==== {arch} {shape} BYTES")
+    for b, m, op, shp, iname in rows[:topn]:
+        print(f"{b/2**30:9.2f} GiB  x{int(m):4d}  {op:14s} {shp:44s} {iname}")
+    print(f"==== {arch} {shape} DOT FLOPS")
+    for f, m, shp, iname in drows[:8]:
+        print(f"{f/1e12:9.2f} TF   x{int(m):4d}  {shp:44s} {iname}")
+
+
+if __name__ == "__main__":
+    for spec in sys.argv[1:]:
+        arch, shape = spec.split(":")
+        top_contribs(arch, shape)
