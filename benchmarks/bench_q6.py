@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import FlareContext, flare
+from repro.core import CompileCache, FlareContext
 from repro.data import io as IO
 from repro.kernels.filter_agg import ops as FA
 from repro.relational import queries as Q
@@ -42,13 +42,19 @@ def run() -> None:
         path = os.path.join(d, "lineitem.csv")
         IO.to_csv(li, path)
 
+        # shared across iterations: the template key matches across CSV
+        # re-reads (same metadata), so only the first iteration compiles --
+        # the measurement stays load + execute, as before
+        csv_cache = CompileCache()
+
         def direct():
             tbl = IO.read_csv_compiled(path, li.schema)
             c2 = FlareContext()
             for name in ctx.catalog.names():
                 c2.register(name, ctx.catalog.table(name))
             c2.register("lineitem", tbl)
-            flare(Q.q6(c2)).collect()
+            Q.q6(c2).lower(engine="compiled").compile(
+                cache=csv_cache).collect()
 
         us_direct = time_call(direct, warmup=0, iters=3)
     emit("q6_direct_csv", us_direct, rows=n, sf=SF)
@@ -66,12 +72,31 @@ def run() -> None:
     emit("q6_volcano", us_volcano, engine="vectorized_interpreted")
     us_stage = time_call(lambda: q6.collect(engine="stage"), iters=9)
     emit("q6_stage", us_stage, engine="spark_analogue")
-    fq6 = flare(q6)
-    us_comp = time_call(fq6.collect, iters=9)
+    # whole-query compiled, through the explicit stages split: compile
+    # once (AOT, measured), then time pure execution
+    cq6 = q6.lower(engine="compiled").compile(cache=CompileCache())
+    us_comp = time_call(cq6.collect, iters=9)
     emit("q6_compiled", us_comp, engine="flare_L2",
+         lower_s=round(cq6.stats.lower_s, 3),
+         compile_s=round(cq6.stats.compile_s, 3),
          speedup_vs_tuple=round(us_tuple / us_comp, 1),
          speedup_vs_volcano=round(us_volcano / us_comp, 2),
          speedup_vs_stage=round(us_stage / us_comp, 2))
+
+    # prepared-query reuse: ONE compiled Q6 template across selectivity
+    # bindings (the TPC-H substitution parameters as runtime arguments)
+    cache = CompileCache()
+    tmpl = Q.q6_template(ctx)
+    per_binding = []
+    for b in Q.TEMPLATE_BINDINGS["q6"]:
+        prepared = tmpl.lower(engine="compiled").compile(cache=cache)
+        per_binding.append(time_call(lambda: prepared.collect(**b),
+                                     iters=9))
+    emit("q6_prepared_template", sum(per_binding) / len(per_binding),
+         bindings=len(per_binding), compiles=cache.misses,
+         cache_hit_rate=round(cache.hit_rate, 3),
+         vs_unparameterized=round(
+             (sum(per_binding) / len(per_binding)) / us_comp, 2))
 
     # --- hand-scheduled kernel (the hand-written C row) ----------------------
     import jax.numpy as jnp

@@ -2,16 +2,18 @@
 
 Each reproduced query runs on the volcano (interpreted / Postgres
 analogue), stage (Spark analogue) and whole-query compiled (Flare L2)
-engines.  Also reports per-query trace+compile time (paper section 6.1:
-"less than 1.5s for all queries", Flare ~20% above Spark).
+engines, driven through the explicit stages API so compile time and run
+time are reported separately (paper section 6.1: "less than 1.5s for all
+queries", Flare ~20% above Spark).  The prepared-query templates
+(q6/q14/q19 selectivity variants) additionally report the compile-cache
+hit rate across bindings: one compile, N executions.
 """
 from __future__ import annotations
 
 import os
 
 from benchmarks.common import emit, time_call
-from repro.core import FlareContext
-from repro.core.engines import CompileStats
+from repro.core import CompileCache, FlareContext
 from repro.relational import queries as Q
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
@@ -32,11 +34,9 @@ def run() -> None:
             derived["tuple_us"] = round(us_t, 1)
         us_v = time_call(lambda: q.collect(engine="volcano"), iters=3)
         us_s = time_call(lambda: q.collect(engine="stage"), iters=5)
-        # compile time measured on a fresh plan (cache-cold)
-        stats = CompileStats()
-        fresh = qf(ctx)
-        fresh.ctx.execute(fresh.plan, "compiled", stats)
-        us_c = time_call(lambda: q.collect(engine="compiled"), iters=7)
+        # compile time measured cache-cold through the stages split
+        compiled = q.lower(engine="compiled").compile(cache=CompileCache())
+        us_c = time_call(compiled.collect, iters=7)
         if with_tuple:
             derived["speedup_vs_tuple"] = round(
                 derived["tuple_us"] / us_c, 1)
@@ -44,15 +44,34 @@ def run() -> None:
              stage_us=round(us_s, 1),
              speedup_vs_volcano=round(us_v / us_c, 2),
              speedup_vs_stage=round(us_s / us_c, 2),
-             compile_s=round(stats.trace_compile_s, 3), **derived)
+             lower_s=round(compiled.stats.lower_s, 3),
+             compile_s=round(compiled.stats.compile_s, 3),
+             compile_total_s=round(compiled.stats.trace_compile_s, 3),
+             **derived)
 
-    # q22 (scalar subquery, two-phase)
-    q22 = Q.q22(ctx, "compiled")
-    us_v = time_call(lambda: Q.q22(ctx, "volcano").collect(
-        engine="volcano"), iters=3)
-    us_c = time_call(lambda: q22.collect(engine="compiled"), iters=5)
+    # q22 (scalar subquery, two-phase prepared template)
+    binding = Q.q22_params(ctx, "volcano")
+    q22c = Q.q22(ctx).lower(engine="compiled").compile()
+    us_v = time_call(lambda: Q.q22(ctx).collect(
+        engine="volcano", params=binding), iters=3)
+    us_c = time_call(lambda: q22c.collect(**binding), iters=5)
     emit("tpch_q22", us_c, volcano_us=round(us_v, 1),
          speedup_vs_volcano=round(us_v / us_c, 2))
+
+    # prepared templates: one compile serves every selectivity variant
+    for name, tf in Q.TEMPLATES.items():
+        cache = CompileCache()
+        tmpl = tf(ctx)
+        bindings = Q.TEMPLATE_BINDINGS[name]
+        run_us = []
+        for b in bindings:
+            compiled = tmpl.lower(engine="compiled").compile(cache=cache)
+            run_us.append(time_call(lambda: compiled.collect(**b),
+                                    iters=5))
+        emit(f"tpch_{name}_prepared", sum(run_us) / len(run_us),
+             bindings=len(bindings),
+             compiles=cache.misses,
+             cache_hit_rate=round(cache.hit_rate, 3))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
 """Quickstart: the Flare DataFrame API end to end (paper sections 2-4).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Shows the explicit compilation stages (``Query -> Lowered -> Compiled``,
+the first-class path) next to the legacy ``flare(df)`` shim.
 """
+import warnings
+
 import numpy as np
 
-from repro.core import FlareContext, col, count, flare, sum_, udf
+from repro.core import FlareContext, col, count, flare, param, sum_, udf
 from repro.relational import queries as Q
 from repro.relational.tpch import date
 
@@ -12,7 +17,7 @@ ctx = FlareContext()
 Q.register_tpch(ctx, sf=0.01)          # in-memory TPC-H at SF 0.01
 ctx.preload("lineitem")                # the paper's persist()
 
-# -- the paper's running example: TPC-H Q6 ---------------------------------
+# -- the paper's running example: TPC-H Q6, staged explicitly ----------------
 q6 = (ctx.table("lineitem")
       .filter((col("l_shipdate") >= date("1994-01-01"))
               & (col("l_shipdate") < date("1995-01-01"))
@@ -20,29 +25,60 @@ q6 = (ctx.table("lineitem")
               & (col("l_quantity") < 24.0))
       .agg(sum_(col("l_extendedprice") * col("l_discount"), "revenue")))
 
-print(q6.explain())                    # the optimized physical plan
-fd = flare(q6)                         # whole-query compiled back-end
-print("Q6 revenue:", fd.result().scalar("revenue"))
-print(f"(trace+compile took {fd.stats.trace_compile_s*1e3:.0f} ms; "
-      "re-running hits the plan cache)")
-fd.collect()
-print("cache hit on 2nd run:", fd.stats.cache_hit)
+lowered = q6.lower(engine="compiled")  # optimize + lower (no data touched)
+print(lowered.explain())               # the optimized physical plan
+compiled = lowered.compile()           # ONE XLA program, AOT, measured
+print(f"(lower {compiled.stats.lower_s*1e3:.0f} ms, "
+      f"compile {compiled.stats.compile_s*1e3:.0f} ms)")
+print("Q6 revenue:", compiled.result().scalar("revenue"))
+again = q6.lower(engine="compiled").compile()
+print("recompile of the same template is a cache hit:",
+      again.stats.cache_hit)
 
-# -- joins + grouping --------------------------------------------------------
+# -- prepared queries: params become runtime jit arguments -------------------
+# One compiled program serves every selectivity variant of Q6: the TPC-H
+# substitution parameters are param() placeholders, not baked literals.
+tmpl = Q.q6_template(ctx)
+prepared = tmpl.lower(engine="compiled").compile()
+for year in (1993, 1994, 1995):
+    r = prepared(**Q.q6_binding(year=year))   # no recompilation, ever
+    print(f"Q6 revenue {year}: {r['revenue'][0]:.2f}")
+relowered = tmpl.lower(engine="compiled").compile()
+print("re-preparing the template is a compile-cache hit:",
+      relowered.stats.cache_hit)
+
+# -- engines are inspectable and interchangeable -----------------------------
+print("stage-engine pipeline has",
+      len(tmpl.lower(engine="stage").compiler_ir()), "stage(s)")
+oracle = tmpl.lower(engine="volcano").compile()(**Q.q6_binding())
+print("volcano oracle agrees:",
+      np.allclose(oracle["revenue"], prepared(**Q.q6_binding())["revenue"],
+                  rtol=5e-3))
+
+# -- joins + grouping through the same stages --------------------------------
 top = (ctx.table("lineitem")
        .join(ctx.table("orders"), on="l_orderkey", right_on="o_orderkey")
        .join(ctx.table("customer"), on="o_custkey", right_on="c_custkey")
        .group_by("c_mktsegment")
        .agg(sum_(col("l_extendedprice"), "volume"), count("items"))
        .sort(("volume", False)))
-flare(top).show()
+top.show(engine="compiled")
 
-# -- a staged UDF (Level 3) fuses into the same program ----------------------
+# -- a staged UDF (Level 3) fuses into the same program, params included -----
 @udf("float64")
-def taxed(price, tax):
-    return price * (1.0 + tax)
+def taxed(price, tax, gain):
+    return price * (1.0 + tax) * gain
 
 q = (ctx.table("lineitem")
-     .select(("t", taxed(col("l_extendedprice"), col("l_tax"))))
+     .select(("t", taxed(col("l_extendedprice"), col("l_tax"),
+                         param("gain", "float64"))))
      .agg(sum_(col("t"), "total_taxed")))
-print("total taxed:", flare(q).result().scalar("total_taxed"))
+ct = q.lower(engine="compiled").compile()
+print("total taxed:", ct.result(gain=1.0).scalar("total_taxed"))
+print("total taxed x2:", ct.result(gain=2.0).scalar("total_taxed"))
+
+# -- the legacy one-shot form still works (thin deprecation shim) ------------
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    fd = flare(q6)                     # whole-query compiled back-end
+print("legacy flare(q6):", fd.result().scalar("revenue"))

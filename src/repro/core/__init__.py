@@ -3,18 +3,25 @@
 Flare's three integration levels (paper Fig. 1) as an executable system:
 
 * Level 1/2: deferred DataFrame plans -> Catalyst-analogue optimizer ->
-  stage-granular OR whole-query compilation (``engines``),
+  stage-granular OR whole-query compilation (``engines``), driven through
+  the explicit ``Query -> Lowered -> Compiled`` stages API (``stages``),
 * Level 3: staged UDFs (``staging``) and ML kernels (``ml``) that compile
   together with the relational pipeline.
 """
 from repro.core.dataframe import (DataFrame, FlareContext, FlareDataFrame,
                                   any_, avg, count, flare, max_, min_, sum_)
-from repro.core.expr import Col, Expr, WithDomain, cast, col, lit, when
+from repro.core.engines import CompileStats
+from repro.core.expr import (Col, Expr, Param, WithDomain, cast, col, lit,
+                             param, when)
 from repro.core.plan import AggSpec
+from repro.core.stages import (Compiled, CompileCache, Lowered,
+                               available_engines, register_engine)
 from repro.core.staging import udf
 
 __all__ = [
     "DataFrame", "FlareContext", "FlareDataFrame", "flare",
-    "col", "lit", "when", "cast", "udf", "AggSpec", "WithDomain",
-    "sum_", "avg", "min_", "max_", "count", "any_", "Col", "Expr",
+    "col", "lit", "param", "when", "cast", "udf", "AggSpec", "WithDomain",
+    "sum_", "avg", "min_", "max_", "count", "any_", "Col", "Expr", "Param",
+    "Lowered", "Compiled", "CompileCache", "CompileStats",
+    "available_engines", "register_engine",
 ]

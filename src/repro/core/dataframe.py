@@ -1,20 +1,27 @@
-"""Deferred DataFrame API + ``flare()`` accelerator entry point.
+"""Deferred DataFrame API over the explicit compilation stages.
 
-Mirrors the user-facing shape of the paper (sections 2.2, 4.1)::
+The first-class execution path makes the compilation pipeline explicit
+(``repro.core.stages``, DESIGN.md section 4)::
 
     ctx = FlareContext()
     ctx.register("lineitem", table)
-    df = ctx.table("lineitem").filter(col("l_discount").between(0.05, 0.07))
-    fd = flare(df)          # pick the Flare (whole-query compiled) back-end
-    fd.show()               # triggers compilation + execution
+    df = ctx.table("lineitem").filter(
+        col("l_discount").between(E.param("lo"), E.param("hi")))
+    lowered  = df.lower(engine="compiled")   # inspect .plan()/.compiler_ir()
+    compiled = lowered.compile()             # measured, cached
+    compiled(lo=0.05, hi=0.07)               # prepared-query execution
+    compiled(lo=0.02, hi=0.04)               # same program, new binding
 
-``df.collect()`` without ``flare()`` runs on the stage-granular engine (the
-Spark analogue); ``df.collect(engine="volcano")`` runs the interpreted
-oracle.
+The paper-era conveniences remain as thin shims over those stages:
+``df.collect(engine=...)`` runs lower+compile+execute in one step, and
+``flare(df)`` / :class:`FlareDataFrame` pick the whole-query compiled
+back-end (paper section 4.1).  New code should prefer
+``df.lower().compile()``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -22,16 +29,18 @@ from repro.core import engines as ENG
 from repro.core import expr as E
 from repro.core import optimizer as OPT
 from repro.core import plan as P
+from repro.core import stages as S
 from repro.relational import table as T
 
 
 class FlareContext:
-    """Session object: catalog + device cache + engine instances."""
+    """Session object: catalog + device cache + compile cache."""
 
     def __init__(self, optimize: bool = True,
                  join_reorder: bool = False):
         self.catalog = P.Catalog()
         self.cache = ENG.DeviceCache()
+        self.compile_cache = S.CompileCache()
         self.optimize = optimize
         self.join_reorder = join_reorder
 
@@ -59,9 +68,17 @@ class FlareContext:
                             join_reorder=self.join_reorder)
 
     def execute(self, plan: P.Plan, engine: str,
-                stats: Optional[ENG.CompileStats] = None):
+                stats: Optional[ENG.CompileStats] = None,
+                params: Optional[Dict[str, Any]] = None):
         return ENG.execute(self.optimized(plan), self.catalog, engine,
-                           self.cache, stats)
+                           self.cache, stats, params,
+                           compile_cache=self.compile_cache)
+
+    def lower(self, plan: P.Plan, engine: str = "compiled") -> S.Lowered:
+        """Optimize + lower a plan for ``engine`` (stages entry point)."""
+        return S.lower_plan(self.optimized(plan), self.catalog,
+                            engine=engine, device_cache=self.cache,
+                            compile_cache=self.compile_cache)
 
     def preload(self, *names: str) -> None:
         """Paper's ``persist()``: move table columns to device up-front."""
@@ -130,13 +147,33 @@ class DataFrame:
     def limit(self, n: int) -> "DataFrame":
         return DataFrame(self.ctx, P.Limit(self.plan, n))
 
-    # -- actions -------------------------------------------------------------------
+    # -- compilation stages (the first-class execution path) ---------------------
 
-    def collect(self, engine: str = "stage") -> Dict[str, np.ndarray]:
-        return self.ctx.execute(self.plan, engine).compact()
+    def lower(self, engine: str = "compiled") -> S.Lowered:
+        """Optimize + lower this query for ``engine``.
 
-    def count(self, engine: str = "stage") -> int:
-        return self.ctx.execute(self.plan, engine).num_rows()
+        Returns a :class:`repro.core.stages.Lowered`: inspect the plan via
+        ``.plan()`` / ``.compiler_ir()``, then ``.compile()`` for an
+        executable :class:`repro.core.stages.Compiled` that serves any
+        number of parameter bindings.
+        """
+        return self.ctx.lower(self.plan, engine)
+
+    def params(self) -> Tuple[E.Param, ...]:
+        """Param placeholders of this query (binding order)."""
+        return P.params_of(self.plan)
+
+    # -- one-shot actions (shims over lower().compile()(...)) --------------------
+
+    def collect(self, engine: str = "stage",
+                params: Optional[Dict[str, Any]] = None
+                ) -> Dict[str, np.ndarray]:
+        return self.ctx.execute(self.plan, engine, params=params).compact()
+
+    def count(self, engine: str = "stage",
+              params: Optional[Dict[str, Any]] = None) -> int:
+        return self.ctx.execute(self.plan, engine,
+                                params=params).num_rows()
 
     def explain(self, optimized: bool = True) -> str:
         plan = self.ctx.optimized(self.plan) if optimized else self.plan
@@ -146,8 +183,9 @@ class DataFrame:
     def schema(self) -> T.Schema:
         return self.plan.schema(self.ctx.catalog)
 
-    def show(self, n: int = 20, engine: str = "stage") -> None:
-        print(format_rows(self.collect(engine), n))
+    def show(self, n: int = 20, engine: str = "stage",
+             params: Optional[Dict[str, Any]] = None) -> None:
+        print(format_rows(self.collect(engine, params=params), n))
 
 
 class GroupedData:
@@ -191,27 +229,35 @@ def any_(e: E.Expr, name: str = "any") -> P.AggSpec:
     return P.AggSpec(name, "any", e)
 
 
-# -- the accelerator entry point (paper section 4.1) ---------------------------
+# -- the accelerator entry point (paper section 4.1), now a shim ---------------
 
 
 class FlareDataFrame:
-    """``flare(df)``: route this DataFrame through whole-query compilation."""
+    """``flare(df)``: route this DataFrame through whole-query compilation.
+
+    .. deprecated:: thin shim over ``df.lower("compiled").compile()``;
+       prefer the stages API, which separates compile from run and
+       supports parameter bindings.
+    """
 
     def __init__(self, df: DataFrame):
         self.df = df
         self.stats = ENG.CompileStats()
 
-    def collect(self) -> Dict[str, np.ndarray]:
-        self.stats = ENG.CompileStats()
-        return self.df.ctx.execute(self.df.plan, "compiled",
-                                   self.stats).compact()
+    def _compiled(self) -> S.Compiled:
+        compiled = self.df.lower("compiled").compile()
+        self.stats = compiled.stats
+        return compiled
 
-    def result(self):
-        self.stats = ENG.CompileStats()
-        return self.df.ctx.execute(self.df.plan, "compiled", self.stats)
+    def collect(self, params: Optional[Dict[str, Any]] = None
+                ) -> Dict[str, np.ndarray]:
+        return self._compiled().collect(**(params or {}))
 
-    def count(self) -> int:
-        return self.result().num_rows()
+    def result(self, params: Optional[Dict[str, Any]] = None):
+        return self._compiled().result(**(params or {}))
+
+    def count(self, params: Optional[Dict[str, Any]] = None) -> int:
+        return self.result(params).num_rows()
 
     def show(self, n: int = 20) -> None:
         print(format_rows(self.collect(), n))
@@ -227,6 +273,10 @@ class FlareDataFrame:
 
 
 def flare(df: DataFrame) -> FlareDataFrame:
+    """Deprecated: use ``df.lower(engine="compiled").compile()``."""
+    warnings.warn(
+        "flare(df) is deprecated; use df.lower(engine='compiled')"
+        ".compile() (repro.core.stages)", DeprecationWarning, stacklevel=2)
     return FlareDataFrame(df)
 
 

@@ -11,17 +11,21 @@
                through the host -- the "communication through Spark's runtime
                system" overhead the paper measures in Fig. 5/6.
 ``compiled`` -- whole-query compilation (Flare Level 2): ONE XLA program for
-               the entire plan; nothing materialises between operators.
+               the entire plan; nothing materialises between operators.  The
+               whole-query pipeline itself (AOT lower -> compile -> execute)
+               lives in ``repro.core.stages``; this module's :func:`execute`
+               front door delegates to it.
 
 All three return a :class:`repro.core.lower.Result` with identical row
 semantics, so the engines can be differentially tested against each other
-(tests/test_engines.py, property tests in tests/test_property.py).
+(tests/test_system.py, tests/test_stages.py, and the hypothesis property
+tests in tests/test_property.py).  The explicit ``Query -> Lowered ->
+Compiled`` staging API over these engines is described in DESIGN.md
+section 4.
 """
 from __future__ import annotations
 
 import dataclasses
-import fnmatch
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,88 +69,65 @@ class DeviceCache:
 
 
 # ---------------------------------------------------------------------------
-# compiled (whole-query) engine
+# compile telemetry
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class CompileStats:
+    """Telemetry for one lower/compile/execute pipeline.
+
+    ``lower_s`` covers plan -> traced program (jaxpr), ``compile_s`` the
+    XLA compile of that program; ``trace_compile_s`` is their sum, kept as
+    a field for backward compatibility with pre-stages callers.
+    ``cache_hit`` is True when :class:`repro.core.stages.CompileCache`
+    already held the compiled executable for this template.
+    """
+
     trace_compile_s: float = 0.0
     cache_hit: bool = False
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    run_s: float = 0.0
+    engine: str = ""
+    cache_key: Optional[Tuple] = None
 
 
-class CompiledEngine:
-    """Flare Level 2: plan -> single jit program, cached by fingerprint."""
+def require_param(params: Optional[Dict[str, Any]], spec: E.Param):
+    """Fetch ``spec``'s binding or raise a clear prepared-query error."""
+    if params is None or spec.name not in params:
+        raise KeyError(
+            f"unbound query parameter {spec.name!r} ({spec.dtype}); "
+            f"bound: {sorted(params) if params else []}")
+    return params[spec.name]
 
-    def __init__(self):
-        self._cache: Dict[Any, Tuple[Callable, List, Any, T.Schema, Dict]] = {}
 
-    def _key(self, p: P.Plan, catalog: P.Catalog):
-        # dictionary CONTENTS are baked into compiled programs (string-
-        # predicate LUTs, comparison codes, decode tables) -- the key
-        # must cover them, not just their lengths (found by hypothesis:
-        # same-shape tables with different dictionaries collided)
-        parts = [p.fingerprint()]
-        for name in sorted(self._scan_tables(p)):
-            tbl = catalog.table(name)
-            parts.append((name, tbl.num_rows,
-                          tuple((f.name, f.dtype, f.domain,
-                                 hash(tbl.dictionary(f.name) or ()))
-                                for f in tbl.schema)))
-        return tuple(parts)
+def scan_tables(p: P.Plan) -> List[str]:
+    """Names of all tables scanned by ``p`` (with duplicates)."""
+    out = []
 
-    @staticmethod
-    def _scan_tables(p: P.Plan) -> List[str]:
-        out = []
+    def rec(n):
+        if isinstance(n, P.Scan):
+            out.append(n.table)
+        for c in n.children():
+            rec(c)
 
-        def rec(n):
-            if isinstance(n, P.Scan):
-                out.append(n.table)
-            for c in n.children():
-                rec(c)
+    rec(p)
+    return out
 
-        rec(p)
-        return out
 
-    def execute(self, p: P.Plan, catalog: P.Catalog, cache: DeviceCache,
-                stats: Optional[CompileStats] = None) -> L.Result:
-        key = self._key(p, catalog)
-        entry = self._cache.get(key)
-        if entry is None:
-            t0 = time.perf_counter()
-            fn, layout, out_info = L.build_callable(p, catalog)
-            jfn = jax.jit(fn)
-            entry = (jfn, layout, out_info, p.schema(catalog),
-                     self._scan_map(p))
-            self._cache[key] = entry
-            if stats is not None:
-                stats.trace_compile_s = time.perf_counter() - t0
-        elif stats is not None:
-            stats.cache_hit = True
-        jfn, layout, out_info, schema, scan_map = entry
-        args = []
-        for scan_id, names in layout:
-            tbl = catalog.table(scan_map[scan_id])
-            for n in names:
-                args.append(cache.get(tbl, n))
-        out_cols, mask = jfn(*args)
-        out_cols = {k: np.asarray(v) for k, v in out_cols.items()}
-        mask_np = np.asarray(mask)
-        dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
-        return L.Result(out_cols, mask_np, schema, dicts)
+def scan_map(p: P.Plan) -> Dict[int, str]:
+    """id(Scan node) -> table name, for argument binding."""
+    out = {}
 
-    @staticmethod
-    def _scan_map(p: P.Plan) -> Dict[int, str]:
-        out = {}
+    def rec(n):
+        if isinstance(n, P.Scan):
+            out[id(n)] = n.table
+        for c in n.children():
+            rec(c)
 
-        def rec(n):
-            if isinstance(n, P.Scan):
-                out[id(n)] = n.table
-            for c in n.children():
-                rec(c)
-
-        rec(p)
-        return out
+    rec(p)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -166,9 +147,12 @@ class StageEngine:
         self._cache: Dict[Any, Tuple[Callable, List]] = {}
         self.stages_run = 0
 
-    def execute(self, p: P.Plan, catalog: P.Catalog,
-                cache: DeviceCache) -> L.Result:
+    def execute(self, p: P.Plan, catalog: P.Catalog, cache: DeviceCache,
+                params: Optional[Dict[str, Any]] = None) -> L.Result:
         self.stages_run = 0
+        self._param_env = {
+            s.name: jnp.asarray(require_param(params, s), L._JNP_OF[s.dtype])
+            for s in P.params_of(p)}
         cols, mask, info = self._run_stage(p, catalog, cache)
         schema = p.schema(catalog)
         dicts = {n: sc.dictionary for n, sc in info.cols.items()}
@@ -223,6 +207,13 @@ class StageEngine:
                     mmask if mmask is not None
                     else np.ones(minfo.n_rows, np.bool_)))
 
+        # trailing args: one scalar per Param placeholder of this stage's
+        # subtree, traced so one jitted stage serves every binding
+        # (prepared-statement reuse); the spec list is a function of
+        # root.fingerprint(), keeping the jit-cache key consistent
+        specs = P.params_of(root)
+        args.extend(self._param_env[s.name] for s in specs)
+
         def fn(*flat):
             it = iter(flat)
             scans: Dict[int, L.Stream] = {}
@@ -230,7 +221,8 @@ class StageEngine:
                 cols = {n: next(it) for n in names}
                 mask = next(it) if has_mask else None
                 scans[lid] = L.Stream(cols, mask, infos[lid])
-            stream = L.lower_node(root, catalog, scans)
+            env = {s.name: next(it) for s in specs}
+            stream = L.lower_node(root, catalog, scans, env or None)
             return stream.cols, stream.the_mask()
 
         key = (root.fingerprint(),
@@ -270,7 +262,12 @@ class VolcanoEngine:
     """
 
     def execute(self, p: P.Plan, catalog: P.Catalog,
-                cache: DeviceCache = None) -> L.Result:
+                cache: DeviceCache = None,
+                params: Optional[Dict[str, Any]] = None) -> L.Result:
+        self._params = {
+            s.name: np.asarray(require_param(params, s),
+                               T.numpy_dtype(s.dtype))[()]
+            for s in P.params_of(p)}
         vs = self._run(p, catalog)
         schema = p.schema(catalog)
         cols = {n: vs.cols[n] for n in schema.names}
@@ -465,6 +462,8 @@ class VolcanoEngine:
             return s.cols[e.name]
         if isinstance(e, E.Lit):
             return e.value
+        if isinstance(e, E.Param):
+            return self._params[e.name]
         if isinstance(e, E.BinOp):
             l, r = self._eval(e.left, s), self._eval(e.right, s)
             if e.op == "/":
@@ -541,23 +540,32 @@ class VolcanoEngine:
 # front door
 # ---------------------------------------------------------------------------
 
-_COMPILED = CompiledEngine()
-_STAGE = StageEngine()
-_VOLCANO = VolcanoEngine()
 _DEFAULT_CACHE = DeviceCache()
 
 
 def execute(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
             cache: Optional[DeviceCache] = None,
-            stats: Optional[CompileStats] = None) -> L.Result:
+            stats: Optional[CompileStats] = None,
+            params: Optional[Dict[str, Any]] = None,
+            compile_cache=None) -> L.Result:
+    """One-shot execute: lower + compile + run through the stages API.
+
+    Thin convenience over ``repro.core.stages.lower_plan`` -- prepared
+    queries that run more than once should hold on to the
+    :class:`repro.core.stages.Compiled` object instead.
+    """
+    from repro.core import stages  # late import: stages builds on engines
+
     cache = cache or _DEFAULT_CACHE
-    if engine == "compiled":
-        return _COMPILED.execute(p, catalog, cache, stats)
-    if engine == "stage":
-        return _STAGE.execute(p, catalog, cache)
-    if engine == "volcano":
-        return _VOLCANO.execute(p, catalog)
-    if engine == "tuple":
-        from repro.core.tuple_engine import TupleEngine
-        return TupleEngine().execute(p, catalog)
-    raise ValueError(f"unknown engine {engine!r}")
+    lowered = stages.lower_plan(p, catalog, engine=engine,
+                                device_cache=cache,
+                                compile_cache=compile_cache)
+    compiled = lowered.compile()
+    out = compiled.result(**(params or {}))
+    if stats is not None:
+        s = compiled.stats
+        (stats.trace_compile_s, stats.cache_hit, stats.lower_s,
+         stats.compile_s, stats.run_s, stats.engine, stats.cache_key) = (
+            s.trace_compile_s, s.cache_hit, s.lower_s, s.compile_s,
+            s.run_s, s.engine, s.cache_key)
+    return out

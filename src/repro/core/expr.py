@@ -101,6 +101,32 @@ class Lit(Expr):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class Param(Expr):
+    """A named runtime parameter (prepared-statement placeholder).
+
+    Unlike :class:`Lit`, the value is NOT baked into the compiled program:
+    it lowers to an extra scalar argument of the jitted query function, so
+    one compiled program serves every binding of the parameter
+    (``repro.core.stages``: ``lowered.compile()(name=value)``).
+
+    Only numeric dtypes are allowed -- string predicates are evaluated on
+    the dictionary at lowering time and therefore cannot be deferred.
+    """
+
+    name: str
+    dtype: str
+
+    def __post_init__(self):
+        if self.dtype not in T.NUMERIC_DTYPES:
+            raise TypeError(
+                f"param {self.name!r}: dtype must be numeric "
+                f"(one of {T.NUMERIC_DTYPES}), got {self.dtype!r}")
+
+    def __repr__(self):
+        return f":{self.name}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class BinOp(Expr):
     op: str
     left: Expr
@@ -286,6 +312,25 @@ def lit(v: Any) -> Lit:
     return Lit(v)
 
 
+def param(name: str, dtype: str = T.FLOAT64) -> Param:
+    """A prepared-query placeholder bound at execution time."""
+    return Param(name, dtype)
+
+
+def params_of(e: Expr) -> List[Param]:
+    """All Param placeholders in ``e`` (document order, with duplicates)."""
+    out: List[Param] = []
+
+    def rec(x: Expr):
+        if isinstance(x, Param):
+            out.append(x)
+        for c in x.children():
+            rec(c)
+
+    rec(e)
+    return out
+
+
 def when(cond: Expr, then: Any, otherwise: Any) -> IfThenElse:
     return IfThenElse(cond, wrap(then), wrap(otherwise))
 
@@ -347,6 +392,8 @@ def infer_dtype(e: Expr, schema: T.Schema) -> str:
         return schema[e.name].dtype
     if isinstance(e, Lit):
         return lit_dtype(e.value)
+    if isinstance(e, Param):
+        return e.dtype
     if isinstance(e, BinOp):
         l = infer_dtype(e.left, schema)
         r = infer_dtype(e.right, schema)
@@ -375,6 +422,9 @@ def fingerprint(e: Expr) -> str:
         return f"c:{e.name}"
     if isinstance(e, Lit):
         return f"l:{e.value!r}"
+    if isinstance(e, Param):
+        # structural only -- two bindings of one template share a cache key
+        return f"p:{e.name}:{e.dtype}"
     if isinstance(e, BinOp):
         return f"({fingerprint(e.left)}{e.op}{fingerprint(e.right)})"
     if isinstance(e, Cmp):

@@ -116,7 +116,8 @@ def _str_code(dictionary: Tuple[str, ...], value: str) -> int:
         return -1
 
 
-def eval_expr(e: E.Expr, stream: Stream) -> jnp.ndarray:
+def eval_expr(e: E.Expr, stream: Stream,
+              params: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
     info = stream.info
     if isinstance(e, E.Col):
         return stream.cols[e.name]
@@ -124,8 +125,14 @@ def eval_expr(e: E.Expr, stream: Stream) -> jnp.ndarray:
         if isinstance(e.value, str):
             raise TypeError("string literal outside comparison")
         return jnp.asarray(e.value)
+    if isinstance(e, E.Param):
+        if params is None or e.name not in params:
+            raise KeyError(
+                f"unbound query parameter {e.name!r}; pass a binding, e.g. "
+                f"lowered.compile()({e.name}=...)")
+        return params[e.name]
     if isinstance(e, E.BinOp):
-        l, r = eval_expr(e.left, stream), eval_expr(e.right, stream)
+        l, r = eval_expr(e.left, stream, params), eval_expr(e.right, stream, params)
         if e.op == "+":
             return l + r
         if e.op == "-":
@@ -144,33 +151,33 @@ def eval_expr(e: E.Expr, stream: Stream) -> jnp.ndarray:
         rdict = _dict_of(e.right, info)
         if ldict is not None and isinstance(e.right, E.Lit):
             code = _str_code(ldict, e.right.value)
-            l = eval_expr(e.left, stream)
+            l = eval_expr(e.left, stream, params)
             return _cmp_with_code(e.op, l, code, ldict, e.right.value)
         if rdict is not None and isinstance(e.left, E.Lit):
             flipped = {"<": ">", ">": "<", "<=": ">=", ">=": "<=",
                        "==": "==", "!=": "!="}[e.op]
             code = _str_code(rdict, e.left.value)
-            r = eval_expr(e.right, stream)
+            r = eval_expr(e.right, stream, params)
             return _cmp_with_code(flipped, r, code, rdict, e.left.value)
         if ldict is not None and rdict is not None:
             if ldict != rdict:
                 raise TypeError("cross-dictionary string comparison "
                                 "unsupported in compiled engine")
-            return _apply_cmp(e.op, eval_expr(e.left, stream),
-                              eval_expr(e.right, stream))
-        return _apply_cmp(e.op, eval_expr(e.left, stream),
-                          eval_expr(e.right, stream))
+            return _apply_cmp(e.op, eval_expr(e.left, stream, params),
+                              eval_expr(e.right, stream, params))
+        return _apply_cmp(e.op, eval_expr(e.left, stream, params),
+                          eval_expr(e.right, stream, params))
     if isinstance(e, E.BoolOp):
-        vals = [eval_expr(a, stream) for a in e.args]
+        vals = [eval_expr(a, stream, params) for a in e.args]
         out = vals[0]
         for v in vals[1:]:
             out = (out & v) if e.op == "and" else (out | v)
         return out
     if isinstance(e, E.Not):
-        return ~eval_expr(e.arg, stream)
+        return ~eval_expr(e.arg, stream, params)
     if isinstance(e, E.InSet):
         d = _dict_of(e.arg, info)
-        arg = eval_expr(e.arg, stream)
+        arg = eval_expr(e.arg, stream, params)
         if d is not None:
             codes = [c for c in (_str_code(d, v) for v in e.values) if c >= 0]
             if not codes:
@@ -189,18 +196,18 @@ def eval_expr(e: E.Expr, stream: Stream) -> jnp.ndarray:
             raise TypeError(f"{e.kind} on non-string column")
         lut = np.asarray([_match_str(e.kind, s, e.params) for s in d],
                          dtype=np.bool_)
-        codes = eval_expr(e.arg, stream)
+        codes = eval_expr(e.arg, stream, params)
         return jnp.asarray(lut)[codes]
     if isinstance(e, E.IfThenElse):
-        return jnp.where(eval_expr(e.cond, stream),
-                         eval_expr(e.then, stream),
-                         eval_expr(e.other, stream))
+        return jnp.where(eval_expr(e.cond, stream, params),
+                         eval_expr(e.then, stream, params),
+                         eval_expr(e.other, stream, params))
     if isinstance(e, E.Cast):
-        return eval_expr(e.arg, stream).astype(_JNP_OF[e.dtype])
+        return eval_expr(e.arg, stream, params).astype(_JNP_OF[e.dtype])
     if isinstance(e, E.WithDomain):
-        return eval_expr(e.arg, stream)
+        return eval_expr(e.arg, stream, params)
     if isinstance(e, E.Udf):
-        args = [eval_expr(a, stream) for a in e.args]
+        args = [eval_expr(a, stream, params) for a in e.args]
         return e.fn(*args)  # staged: traced straight into this program
     raise TypeError(f"cannot lower {e!r}")
 
@@ -408,8 +415,8 @@ def _lower_join(p: P.Join, left: Stream, right: Stream,
     return Stream(cols, mask, _join_info(p, left.info, right.info))
 
 
-def _lower_aggregate(p: P.Aggregate, child: Stream,
-                     catalog: P.Catalog) -> Stream:
+def _lower_aggregate(p: P.Aggregate, child: Stream, catalog: P.Catalog,
+                     params: Optional[Dict[str, Any]] = None) -> Stream:
     info = static_info(p, catalog)
     mask = child.the_mask()
     maskf = mask.astype(jnp.float32)
@@ -426,7 +433,7 @@ def _lower_aggregate(p: P.Aggregate, child: Stream,
             if a.op == "count":
                 cols[a.name] = cnt[None]
                 continue
-            v = eval_expr(a.arg, child)
+            v = eval_expr(a.arg, child, params)
             if jnp.issubdtype(v.dtype, jnp.integer) and a.op in ("sum", "avg"):
                 v = v.astype(jnp.float32)
             if a.op == "sum":
@@ -458,7 +465,7 @@ def _lower_aggregate(p: P.Aggregate, child: Stream,
         if a.op == "count":
             cols[a.name] = cnt
             continue
-        v = eval_expr(a.arg, child)
+        v = eval_expr(a.arg, child, params)
         if jnp.issubdtype(v.dtype, jnp.integer) and a.op in ("sum", "avg"):
             v = v.astype(jnp.float32)
         if a.op == "sum":
@@ -507,8 +514,8 @@ def _lower_sort(p: P.Sort, child: Stream, catalog: P.Catalog) -> Stream:
     return Stream(cols, mask[order], child.info)
 
 
-def lower_node(p: P.Plan, catalog: P.Catalog,
-               scans: Dict[int, Stream]) -> Stream:
+def lower_node(p: P.Plan, catalog: P.Catalog, scans: Dict[int, Stream],
+               params: Optional[Dict[str, Any]] = None) -> Stream:
     """Recursively lower ``p``; ``scans`` maps id(node) -> leaf Stream.
 
     Leaves are Scan nodes (whole-query compilation) or materialised stage
@@ -519,13 +526,13 @@ def lower_node(p: P.Plan, catalog: P.Catalog,
     if isinstance(p, P.Scan):
         raise KeyError(f"unbound scan {p.table}")
     if isinstance(p, P.Filter):
-        child = lower_node(p.child, catalog, scans)
-        pred = eval_expr(p.pred, child)
+        child = lower_node(p.child, catalog, scans, params)
+        pred = eval_expr(p.pred, child, params)
         mask = pred if child.mask is None else (child.mask & pred)
         return Stream(child.cols, mask, child.info)
     if isinstance(p, P.Project):
-        child = lower_node(p.child, catalog, scans)
-        cols = {name: eval_expr(e, child) for name, e in p.outputs}
+        child = lower_node(p.child, catalog, scans, params)
+        cols = {name: eval_expr(e, child, params) for name, e in p.outputs}
         schema = p.child.schema(catalog)
         scols = {}
         for name, e in p.outputs:
@@ -541,17 +548,17 @@ def lower_node(p: P.Plan, catalog: P.Catalog,
                 scols[name] = StaticCol(E.infer_dtype(e, schema))
         return Stream(cols, child.mask, StaticInfo(scols, child.n))
     if isinstance(p, P.Join):
-        left = lower_node(p.left, catalog, scans)
-        right = lower_node(p.right, catalog, scans)
+        left = lower_node(p.left, catalog, scans, params)
+        right = lower_node(p.right, catalog, scans, params)
         return _lower_join(p, left, right, catalog)
     if isinstance(p, P.Aggregate):
-        child = lower_node(p.child, catalog, scans)
-        return _lower_aggregate(p, child, catalog)
+        child = lower_node(p.child, catalog, scans, params)
+        return _lower_aggregate(p, child, catalog, params)
     if isinstance(p, P.Sort):
-        child = lower_node(p.child, catalog, scans)
+        child = lower_node(p.child, catalog, scans, params)
         return _lower_sort(p, child, catalog)
     if isinstance(p, P.Limit):
-        child = lower_node(p.child, catalog, scans)
+        child = lower_node(p.child, catalog, scans, params)
         n = min(p.n, child.n)
         cols = {c_: c[:n] for c_, c in child.cols.items()}
         mask = None if child.mask is None else child.mask[:n]
@@ -658,12 +665,16 @@ class Result:
         return c[name][0]
 
 
-def build_callable(p: P.Plan, catalog: P.Catalog
+def build_callable(p: P.Plan, catalog: P.Catalog,
+                   param_specs: Sequence[E.Param] = ()
                    ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]], StaticInfo]:
     """Build the pure function over flat scan-column arrays.
 
     Returns (fn, arg_layout, out_info) where arg_layout lists
-    (scan_node_id, column_names) in argument order.
+    (scan_node_id, column_names) in argument order.  If ``param_specs``
+    is non-empty, ``fn`` takes one trailing scalar argument per spec (in
+    spec order) -- the runtime values of :class:`repro.core.expr.Param`
+    placeholders, traced rather than baked into the program.
     """
     needed = required_scan_columns(p, catalog)
     scan_nodes: List[P.Scan] = []
@@ -679,6 +690,7 @@ def build_callable(p: P.Plan, catalog: P.Catalog
     statics = {id(s): _static_of_scan(catalog.table(s.table))
                for s in scan_nodes}
     out_info = static_info(p, catalog)
+    param_specs = tuple(param_specs)
 
     def fn(*flat_arrays):
         it = iter(flat_arrays)
@@ -689,7 +701,8 @@ def build_callable(p: P.Plan, catalog: P.Catalog
                 {n: statics[id(s)].cols[n] for n in needed[id(s)]},
                 statics[id(s)].n_rows)
             scans[id(s)] = Stream(cols, None, info)
-        stream = lower_node(p, catalog, scans)
+        env = {spec.name: next(it) for spec in param_specs}
+        stream = lower_node(p, catalog, scans, env or None)
         out_cols = {n: stream.cols[n] for n in p.schema(catalog).names}
         return out_cols, (stream.the_mask())
 

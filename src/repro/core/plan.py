@@ -316,6 +316,42 @@ class Catalog:
         return name in self._tables
 
 
+def node_exprs(p: Plan) -> Tuple[E.Expr, ...]:
+    """The expressions carried directly by ``p`` (not its children)."""
+    if isinstance(p, Filter):
+        return (p.pred,)
+    if isinstance(p, Project):
+        return tuple(e for _, e in p.outputs)
+    if isinstance(p, Aggregate):
+        return tuple(a.arg for a in p.aggs if a.arg is not None)
+    return ()
+
+
+def params_of(p: Plan) -> Tuple[E.Param, ...]:
+    """Distinct Param placeholders in the plan, sorted by name.
+
+    The sorted order is the canonical binding/argument order used by the
+    stages API (``repro.core.stages``) and the engines, so that one
+    compiled program's signature is deterministic across sessions.
+    """
+    seen: Dict[str, E.Param] = {}
+
+    def rec(n: Plan):
+        for e in node_exprs(n):
+            for prm in E.params_of(e):
+                prior = seen.get(prm.name)
+                if prior is not None and prior.dtype != prm.dtype:
+                    raise TypeError(
+                        f"param {prm.name!r} used with conflicting dtypes "
+                        f"{prior.dtype!r} and {prm.dtype!r}")
+                seen.setdefault(prm.name, prm)
+        for c in n.children():
+            rec(c)
+
+    rec(p)
+    return tuple(seen[k] for k in sorted(seen))
+
+
 def transform(p: Plan, fn) -> Plan:
     """Bottom-up plan rewrite; ``fn`` returns replacement or None."""
     kids = tuple(transform(c, fn) for c in p.children())

@@ -1,0 +1,570 @@
+"""Explicit compilation stages: ``Query -> Lowered -> Compiled``.
+
+The paper's Flare accelerates Spark by making the compilation pipeline a
+first-class object instead of a side effect of ``collect()``.  This module
+is that pipeline, shaped after ``jax.stages`` / the JAX AOT API (and the
+JaCe ``Wrapped -> Lowered -> Compiled`` reimplementation of it):
+
+    lowered  = df.lower(engine="compiled")   # plan optimized + lowered
+    lowered.plan()                           # inspect the optimized plan
+    lowered.compiler_ir("stablehlo")         # inspect the compiler IR
+    compiled = lowered.compile()             # measured AOT compile
+    compiled(**params)                       # execute (many times, cheap)
+
+Separating the stages buys three things the paper's evaluation relies on:
+
+* compile time and run time are measured independently
+  (``CompileStats.lower_s`` / ``compile_s`` / ``run_s``),
+* one compiled program is reused across executions -- and, with
+  :func:`repro.core.expr.param` placeholders, across *parameter bindings*
+  (prepared-statement semantics: the binding becomes a traced scalar
+  argument instead of a baked-in literal),
+* engines are pluggable: anything implementing the :class:`Engine`
+  protocol can be registered and driven through the same API
+  (DESIGN.md section 4).
+
+All three built-in engines (``volcano``, ``stage``, ``compiled``) plus the
+row-interpreted ``tuple`` engine run behind this API and return
+differentially-comparable :class:`repro.core.lower.Result` objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engines as ENG
+from repro.core import expr as E
+from repro.core import lower as L
+from repro.core import plan as P
+from repro.relational import table as T
+
+CompileStats = ENG.CompileStats
+
+# An executor is catalog-free: it is (re)bound to a catalog + device cache
+# at every call, so a CompileCache entry can serve any catalog whose table
+# metadata matches the template key.
+Executor = Callable[[P.Catalog, ENG.DeviceCache, Optional[Dict[str, Any]]],
+                    L.Result]
+
+
+# ---------------------------------------------------------------------------
+# template cache keys + the explicit cache handle
+# ---------------------------------------------------------------------------
+
+
+def template_key(engine: str, p: P.Plan, catalog: P.Catalog) -> Tuple:
+    """Structural cache key of a (engine, plan, table-metadata) template.
+
+    Param placeholders fingerprint structurally (``p:name:dtype``), so two
+    bindings of one template share a key; literals are part of the key.
+    Dictionary CONTENTS are baked into compiled programs (string-predicate
+    LUTs, comparison codes, decode tables), so the key must cover them,
+    not just their lengths.
+    """
+    parts: List[Any] = [engine, p.fingerprint()]
+    for name in sorted(set(ENG.scan_tables(p))):
+        tbl = catalog.table(name)
+        parts.append((name, tbl.num_rows,
+                      tuple((f.name, f.dtype, f.domain,
+                             hash(tbl.dictionary(f.name) or ()))
+                            for f in tbl.schema)))
+    return tuple(parts)
+
+
+class CompileCache:
+    """Explicit handle on compiled query templates.
+
+    One entry per :func:`template_key`; the entry is a catalog-free
+    :data:`Executor`.  ``hits``/``misses`` give the cache-hit rate that
+    the benchmarks report.
+    """
+
+    def __init__(self):
+        self._entries: Dict[Tuple, Executor] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: Tuple) -> Optional[Executor]:
+        exe = self._entries.get(key)
+        if exe is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return exe
+
+    def insert(self, key: Tuple, exe: Executor) -> None:
+        self._entries[key] = exe
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._entries
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+_DEFAULT_COMPILE_CACHE = CompileCache()
+
+
+def bind_params(p: P.Plan, params: Dict[str, Any]) -> P.Plan:
+    """Substitute Param placeholders with literal values (plan rewrite).
+
+    Used by purely interpreted engines (``tuple``), where there is no
+    compiled artifact to share; also handy for explain()-ing a template
+    at a concrete binding.
+    """
+
+    def sub(e: E.Expr) -> Optional[E.Expr]:
+        if isinstance(e, E.Param):
+            return E.Lit(ENG.require_param(params, e))
+        return None
+
+    def rule(n: P.Plan) -> Optional[P.Plan]:
+        if isinstance(n, P.Filter):
+            return P.Filter(n.child, E.map_expr(n.pred, sub))
+        if isinstance(n, P.Project):
+            return P.Project(n.child, tuple(
+                (name, E.map_expr(e, sub)) for name, e in n.outputs))
+        if isinstance(n, P.Aggregate):
+            return P.Aggregate(n.child, n.keys, tuple(
+                dataclasses.replace(a, arg=E.map_expr(a.arg, sub))
+                if a.arg is not None else a for a in n.aggs))
+        return None
+
+    return P.transform(p, rule)
+
+
+# ---------------------------------------------------------------------------
+# the Engine protocol + registry
+# ---------------------------------------------------------------------------
+
+
+class Engine(Protocol):
+    """A pluggable execution back-end behind the stages API.
+
+    ``lower`` turns an optimized plan into an engine-specific artifact
+    (traced program, stage decomposition, ...); ``compile`` turns that
+    artifact into a reusable catalog-free :data:`Executor`;
+    ``compiler_ir`` exposes the artifact for inspection.
+    """
+
+    name: str
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs: Tuple[E.Param, ...]) -> Any:
+        """Lower ``p``; returns the engine's lowering artifact."""
+        ...
+
+    def compiler_ir(self, artifact: Any, dialect: Optional[str] = None) -> Any:
+        """Inspect the lowering artifact in the requested dialect."""
+        ...
+
+    def compile(self, artifact: Any) -> Executor:
+        """Compile the artifact into an executor."""
+        ...
+
+
+ENGINES: Dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine) -> Engine:
+    """Register a back-end under ``engine.name`` (last wins)."""
+    ENGINES[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(f"unknown engine {name!r}; available: "
+                         f"{available_engines()}") from None
+
+
+def available_engines() -> List[str]:
+    return sorted(ENGINES)
+
+
+# ---------------------------------------------------------------------------
+# whole-query engine (Flare Level 2): ONE XLA program, AOT-compiled
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _WholeQueryArtifact:
+    fn: Callable
+    # (table_name, column_names) per scan, in argument order
+    layout: Tuple[Tuple[str, Tuple[str, ...]], ...]
+    avals: Tuple[jax.ShapeDtypeStruct, ...]
+    param_specs: Tuple[E.Param, ...]
+    out_info: L.StaticInfo
+    schema: T.Schema
+    jax_lowered: Any  # jax.stages.Lowered
+
+
+class WholeQueryEngine:
+    """Whole-query compilation: plan -> one jaxpr -> one XLA executable.
+
+    The AOT path: lowering traces against ``ShapeDtypeStruct`` avals
+    derived from the catalog (row counts + dtypes are static), so
+    ``compile()`` needs no data at all.
+    """
+
+    name = "compiled"
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs: Tuple[E.Param, ...]) -> _WholeQueryArtifact:
+        fn, id_layout, out_info = L.build_callable(p, catalog, param_specs)
+        smap = ENG.scan_map(p)
+        layout = tuple((smap[sid], tuple(names)) for sid, names in id_layout)
+        avals: List[jax.ShapeDtypeStruct] = []
+        for tname, names in layout:
+            tbl = catalog.table(tname)
+            for n in names:
+                avals.append(jax.ShapeDtypeStruct(
+                    (tbl.num_rows,),
+                    jax.dtypes.canonicalize_dtype(tbl[n].dtype)))
+        for s in param_specs:
+            avals.append(jax.ShapeDtypeStruct(
+                (), jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))))
+        jax_lowered = jax.jit(fn).lower(*avals)
+        return _WholeQueryArtifact(fn, layout, tuple(avals), param_specs,
+                                   out_info, p.schema(catalog), jax_lowered)
+
+    def compiler_ir(self, artifact: _WholeQueryArtifact,
+                    dialect: Optional[str] = None) -> Any:
+        if dialect in (None, "jaxpr"):
+            return jax.make_jaxpr(artifact.fn)(*artifact.avals)
+        return artifact.jax_lowered.compiler_ir(dialect)
+
+    def compile(self, artifact: _WholeQueryArtifact) -> Executor:
+        exe = artifact.jax_lowered.compile()
+        layout, specs = artifact.layout, artifact.param_specs
+        pdtypes = [a.dtype for a in artifact.avals[len(artifact.avals)
+                                                   - len(specs):]]
+        out_info, schema = artifact.out_info, artifact.schema
+
+        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]) -> L.Result:
+            args = []
+            for tname, names in layout:
+                tbl = catalog.table(tname)
+                for n in names:
+                    args.append(device_cache.get(tbl, n))
+            for s, dt in zip(specs, pdtypes):
+                args.append(jnp.asarray(ENG.require_param(params, s), dt))
+            out_cols, mask = exe(*args)
+            out_np = {k: np.asarray(v) for k, v in out_cols.items()}
+            dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
+            return L.Result(out_np, np.asarray(mask), schema, dicts)
+
+        return run
+
+
+# ---------------------------------------------------------------------------
+# stage-granular engine (Spark/Tungsten analogue)
+# ---------------------------------------------------------------------------
+
+
+def stage_decomposition(p: P.Plan) -> List[P.Plan]:
+    """Stage roots in bottom-up execution order (the Lowered IR of the
+    ``stage`` engine): every pipeline breaker below another stage root
+    starts its own stage, mirroring ``engines.StageEngine``."""
+    out: List[P.Plan] = []
+
+    def gather(root: P.Plan):
+        def rec(n: P.Plan, is_root: bool):
+            if isinstance(n, ENG._BREAKERS) and not is_root:
+                gather(n)
+                return
+            for c in n.children():
+                rec(c, False)
+
+        rec(root, True)
+        out.append(root)
+
+    gather(p)
+    return out
+
+
+@dataclasses.dataclass
+class _StageArtifact:
+    plan: P.Plan
+    stages: List[P.Plan]
+    param_specs: Tuple[E.Param, ...]
+
+
+class StagePipelineEngine:
+    """Stage-granular compilation: one jit per pipeline breaker, host
+    round-trips between stages.  Per-stage XLA compiles happen lazily on
+    the first execution (stage shapes depend on materialised masks), so
+    ``compile_s`` covers pipeline assembly and the first run pays the
+    residual jit cost -- exactly the Spark-runtime behaviour the paper's
+    Fig. 5/6 measures."""
+
+    name = "stage"
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs: Tuple[E.Param, ...]) -> _StageArtifact:
+        return _StageArtifact(p, stage_decomposition(p), param_specs)
+
+    def compiler_ir(self, artifact: _StageArtifact,
+                    dialect: Optional[str] = None) -> Any:
+        if dialect in (None, "stages"):
+            return [s.explain() for s in artifact.stages]
+        raise ValueError(f"unknown dialect {dialect!r} for stage engine "
+                         "(use 'stages')")
+
+    def compile(self, artifact: _StageArtifact) -> Executor:
+        eng = ENG.StageEngine()  # its jit cache lives with this executor
+
+        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]) -> L.Result:
+            return eng.execute(artifact.plan, catalog, device_cache, params)
+
+        return run
+
+
+# ---------------------------------------------------------------------------
+# interpreted engines (volcano oracle + tuple-at-a-time baseline)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _InterpArtifact:
+    plan: P.Plan
+    param_specs: Tuple[E.Param, ...]
+
+
+class VolcanoStageEngine:
+    """Vectorised interpreter (the correctness oracle).  ``lower`` is the
+    identity on the optimized plan and ``compile`` wraps an interpreter
+    -- the stages API still applies, compile just measures ~0."""
+
+    name = "volcano"
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs: Tuple[E.Param, ...]) -> _InterpArtifact:
+        return _InterpArtifact(p, param_specs)
+
+    def compiler_ir(self, artifact: _InterpArtifact,
+                    dialect: Optional[str] = None) -> Any:
+        return artifact.plan.explain()
+
+    def compile(self, artifact: _InterpArtifact) -> Executor:
+        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]) -> L.Result:
+            return ENG.VolcanoEngine().execute(artifact.plan, catalog,
+                                               None, params)
+
+        return run
+
+
+class TupleStageEngine:
+    """Row-at-a-time Volcano baseline.  Params are bound by plan rewrite
+    (Param -> Lit) per execution: with no compiled artifact there is
+    nothing to share, so substitution IS prepared-statement execution."""
+
+    name = "tuple"
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs: Tuple[E.Param, ...]) -> _InterpArtifact:
+        return _InterpArtifact(p, param_specs)
+
+    def compiler_ir(self, artifact: _InterpArtifact,
+                    dialect: Optional[str] = None) -> Any:
+        return artifact.plan.explain()
+
+    def compile(self, artifact: _InterpArtifact) -> Executor:
+        from repro.core.tuple_engine import TupleEngine
+
+        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]) -> L.Result:
+            p = artifact.plan
+            if artifact.param_specs:
+                p = bind_params(p, params)
+            return TupleEngine().execute(p, catalog)
+
+        return run
+
+
+for _cls in (WholeQueryEngine, StagePipelineEngine, VolcanoStageEngine,
+             TupleStageEngine):
+    register_engine(_cls())
+
+
+# ---------------------------------------------------------------------------
+# the stage objects
+# ---------------------------------------------------------------------------
+
+
+class Lowered:
+    """An optimized plan lowered for one engine, awaiting compilation.
+
+    Lowering is forced lazily: ``compile()`` on a cache hit never traces,
+    which is what makes prepared-query reuse cheap.  Inspect via
+    :meth:`plan`, :meth:`explain` and :meth:`compiler_ir`.
+    """
+
+    def __init__(self, p: P.Plan, catalog: P.Catalog, engine: Engine,
+                 param_specs: Tuple[E.Param, ...], key: Tuple,
+                 device_cache: ENG.DeviceCache,
+                 compile_cache: CompileCache):
+        self._plan = p
+        self._catalog = catalog
+        self._engine = engine
+        self._param_specs = param_specs
+        self._key = key
+        self._device_cache = device_cache
+        self._compile_cache = compile_cache
+        self._artifact: Any = None
+        self._lower_s = 0.0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def engine_name(self) -> str:
+        return self._engine.name
+
+    @property
+    def cache_key(self) -> Tuple:
+        return self._key
+
+    def plan(self) -> P.Plan:
+        """The optimized logical/physical plan this template lowers."""
+        return self._plan
+
+    def explain(self) -> str:
+        return "== Physical Plan ==\n" + self._plan.explain()
+
+    def params(self) -> Tuple[E.Param, ...]:
+        """Param placeholders (sorted by name = binding order)."""
+        return self._param_specs
+
+    def compiler_ir(self, dialect: Optional[str] = None) -> Any:
+        """Engine IR: jaxpr/stablehlo (compiled), stage list (stage),
+        plan text (interpreters)."""
+        return self._engine.compiler_ir(self._force(), dialect)
+
+    # -- the next stage ------------------------------------------------------
+
+    def _force(self) -> Any:
+        if self._artifact is None:
+            t0 = time.perf_counter()
+            self._artifact = self._engine.lower(self._plan, self._catalog,
+                                                self._param_specs)
+            self._lower_s = time.perf_counter() - t0
+        return self._artifact
+
+    def compile(self, cache: Optional[CompileCache] = None) -> "Compiled":
+        """Compile (or fetch from ``cache``) the executable for this
+        template; returns a :class:`Compiled` with fresh CompileStats."""
+        cache = cache if cache is not None else self._compile_cache
+        stats = CompileStats(engine=self._engine.name, cache_key=self._key)
+        exe = cache.lookup(self._key)
+        if exe is None:
+            artifact = self._force()
+            t0 = time.perf_counter()
+            exe = self._engine.compile(artifact)
+            stats.compile_s = time.perf_counter() - t0
+            stats.lower_s = self._lower_s
+            cache.insert(self._key, exe)
+        else:
+            stats.cache_hit = True
+        stats.trace_compile_s = stats.lower_s + stats.compile_s
+        return Compiled(exe, self._plan, self._catalog, self._engine.name,
+                        self._param_specs, self._key, self._device_cache,
+                        stats)
+
+
+class Compiled:
+    """An executable query template: call it with parameter bindings.
+
+    ``compiled(**params)`` returns compacted host columns;
+    ``compiled.result(**params)`` the raw padded :class:`Result`.  One
+    Compiled serves any number of bindings without recompilation.
+    """
+
+    def __init__(self, exe: Executor, p: P.Plan, catalog: P.Catalog,
+                 engine_name: str, param_specs: Tuple[E.Param, ...],
+                 key: Tuple, device_cache: ENG.DeviceCache,
+                 stats: CompileStats):
+        self._exe = exe
+        self._plan = p
+        self._catalog = catalog
+        self.engine_name = engine_name
+        self._param_specs = param_specs
+        self.cache_key = key
+        self._device_cache = device_cache
+        self.stats = stats
+
+    def params(self) -> Tuple[E.Param, ...]:
+        return self._param_specs
+
+    def _check_bindings(self, params: Dict[str, Any]) -> None:
+        known = {s.name for s in self._param_specs}
+        extra = sorted(set(params) - known)
+        if extra:
+            raise TypeError(f"unknown parameter(s) {extra}; this template "
+                            f"takes {sorted(known)}")
+
+    def result(self, **params: Any) -> L.Result:
+        self._check_bindings(params)
+        t0 = time.perf_counter()
+        out = self._exe(self._catalog, self._device_cache, params or None)
+        self.stats.run_s = time.perf_counter() - t0
+        return out
+
+    def __call__(self, **params: Any) -> Dict[str, np.ndarray]:
+        return self.result(**params).compact()
+
+    collect = __call__
+
+    def count(self, **params: Any) -> int:
+        return self.result(**params).num_rows()
+
+    def scalar(self, name: Optional[str] = None, **params: Any):
+        return self.result(**params).scalar(name)
+
+    def __repr__(self):
+        names = ", ".join(s.name for s in self._param_specs)
+        return (f"Compiled<{self.engine_name}>({names})")
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
+               device_cache: Optional[ENG.DeviceCache] = None,
+               compile_cache: Optional[CompileCache] = None) -> Lowered:
+    """Lower an (already optimized) plan for ``engine``.
+
+    The DataFrame front end (``df.lower(engine=...)``) optimizes first
+    and passes its context's device + compile caches; direct callers get
+    process-wide defaults.
+    """
+    eng = get_engine(engine)
+    specs = P.params_of(p)
+    key = template_key(engine, p, catalog)
+    return Lowered(p, catalog, eng, specs, key,
+                   device_cache if device_cache is not None
+                   else ENG._DEFAULT_CACHE,
+                   compile_cache if compile_cache is not None
+                   else _DEFAULT_COMPILE_CACHE)

@@ -15,6 +15,13 @@ The same function object runs under all three engines: the volcano oracle
 calls it on numpy arrays (jnp ops accept those), the compiled engines trace
 it.  This is the "same code, staged or unstaged" property of multi-stage
 programming (paper section 2.2).
+
+UDFs compose with prepared-query parameters (``repro.core.expr.param``):
+a Param argument reaches ``fn`` as a traced scalar, so one compiled
+program serves every binding::
+
+    df.select(("y", scaled(col("x"), param("gain", "float32"))))
+    df.lower("compiled").compile()(gain=2.5)
 """
 from __future__ import annotations
 
@@ -40,6 +47,9 @@ class StagedUDF:
     def raw(self, *arrays):
         """Apply directly to arrays (outside a query)."""
         return self.fn(*arrays)
+
+    def __repr__(self):
+        return f"StagedUDF({self.name}: ... -> {self.dtype})"
 
 
 def udf(dtype: str, name: str = None):

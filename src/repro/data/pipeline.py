@@ -15,7 +15,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core import FlareContext, col, flare
+from repro.core import FlareContext, col
 from repro.data import synth, tokenizer
 from repro.relational.table import Table
 
@@ -69,7 +69,7 @@ class LMDataPipeline:
         if langs:
             q = q.filter(col("lang").isin(langs))
         q = q.select("doc_id", "text")
-        kept = flare(q).collect()          # whole-query compiled ETL
+        kept = q.lower(engine="compiled").compile().collect()  # compiled ETL
         toks = tokenizer.encode_batch(list(kept["text"]))
         stream = tokenizer.pack_stream(toks)
         return LMDataPipeline(stream, seq_len, global_batch, seed)

@@ -1,10 +1,18 @@
 """TPC-H queries used in the paper's evaluation (Figs. 4, 6, 9).
 
 Implemented via the deferred DataFrame API exactly as a Spark user would
-write them; the engine choice (volcano / stage / compiled) happens at
+write them.  Queries BUILD PLANS ONLY: the engine choice (volcano /
+stage / compiled) happens later, at ``df.lower(engine=...)`` /
 ``collect`` time.  Join orders follow the reference formulation with the
 probe side on the large table (paper section 6.1 matches HyPer's orders;
 our N:1 chains give the same shapes).
+
+The TPC-H selectivity variants (each official query is a template over
+random substitution parameters) are expressed as *prepared-query
+templates* in ``TEMPLATES``: ``q6_template`` and friends use
+:func:`repro.core.param` placeholders, so ONE compiled program serves
+every parameter binding -- ``q6_template(ctx).lower("compiled")
+.compile()(**binding)``.
 
 Deviations from spec, recorded per DESIGN.md section 3: dates are dense
 int32 days; Q10 outputs c_custkey (no c_name text column is generated);
@@ -14,10 +22,10 @@ change the operator mix the paper benchmarks.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Any, Callable, Dict
 
 from repro.core import (FlareContext, DataFrame, WithDomain, any_, avg, cast,
-                        col, count, lit, max_, min_, sum_, when)
+                        col, count, lit, max_, min_, param, sum_, when)
 from repro.relational.tpch import date, generate
 
 # ---------------------------------------------------------------------------
@@ -198,18 +206,32 @@ def q19(ctx: FlareContext) -> DataFrame:
 # -- Q22: global sales opportunity (anti join; paper: 57x) --------------------------
 
 
-def q22(ctx: FlareContext, engine: str = "compiled") -> DataFrame:
-    pos = (ctx.table("customer")
-           .filter(col("c_acctbal") > 0.0)
-           .agg(avg(col("c_acctbal"), "a")))
-    threshold = float(ctx.execute(pos.plan, engine).scalar("a"))
+def q22(ctx: FlareContext) -> DataFrame:
+    """Outer query of the two-phase Q22, as a prepared template.
+
+    The scalar subquery (average positive account balance) is a runtime
+    parameter ``acctbal_min`` -- compute it with :func:`q22_params` on
+    any engine, then bind: ``q22(ctx).collect(engine,
+    params=q22_params(ctx, engine))``.  Unlike the one-shot formulation
+    this builds a pure plan: no engine choice happens here.
+    """
     return (ctx.table("customer")
-            .filter(col("c_acctbal") > threshold)
+            .filter(col("c_acctbal") > param("acctbal_min", "float64"))
             .join(ctx.table("orders"), on="c_custkey", right_on="o_custkey",
                   how="anti")
             .group_by("c_nationkey")
             .agg(count("numcust"), sum_(col("c_acctbal"), "totacctbal"))
             .sort("c_nationkey"))
+
+
+def q22_params(ctx: FlareContext, engine: str = "volcano"
+               ) -> Dict[str, Any]:
+    """Phase 1 of Q22: the scalar-subquery binding for :func:`q22`."""
+    pos = (ctx.table("customer")
+           .filter(col("c_acctbal") > 0.0)
+           .agg(avg(col("c_acctbal"), "a")))
+    compiled = pos.lower(engine=engine).compile()
+    return {"acctbal_min": float(compiled.scalar("a"))}
 
 
 # -- Fig. 6 micro-benchmark: lineitem |><| orders ------------------------------------
@@ -225,8 +247,100 @@ def join_micro(ctx: FlareContext, strategy: str = None) -> DataFrame:
                  count("n")))
 
 
+# ---------------------------------------------------------------------------
+# prepared-query templates (TPC-H substitution parameters as runtime params)
+#
+# The official benchmark draws random substitution parameters per run; with
+# ``param()`` placeholders each query is ONE compiled program reused across
+# all selectivity variants (prepared-statement semantics).  String-valued
+# substitutions (brand, container) stay literal: string predicates are
+# evaluated on the dictionary at lowering time.
+# ---------------------------------------------------------------------------
+
+
+def q6_template(ctx: FlareContext) -> DataFrame:
+    """Q6 over DATE / DISCOUNT / QUANTITY substitution parameters."""
+    li = ctx.table("lineitem")
+    return (li.filter((col("l_shipdate") >= param("date_lo", "date"))
+                      & (col("l_shipdate") < param("date_hi", "date"))
+                      & col("l_discount").between(param("disc_lo", "float64"),
+                                                  param("disc_hi", "float64"))
+                      & (col("l_quantity") < param("qty_hi", "float64")))
+            .agg(sum_(col("l_extendedprice") * col("l_discount"),
+                      "revenue")))
+
+
+def q6_binding(year: int = 1994, discount: float = 0.06,
+               quantity: float = 24.0) -> Dict[str, Any]:
+    """Spec-shaped Q6 substitution: [DATE, DATE+1y), DISCOUNT +/- 0.01."""
+    return {"date_lo": date(f"{year}-01-01"),
+            "date_hi": date(f"{year + 1}-01-01"),
+            "disc_lo": round(discount - 0.01, 2),
+            "disc_hi": round(discount + 0.01, 2),
+            "qty_hi": quantity}
+
+
+def q14_template(ctx: FlareContext) -> DataFrame:
+    """Q14 over its DATE substitution parameter (one-month window)."""
+    li = ctx.table("lineitem").filter(
+        (col("l_shipdate") >= param("date_lo", "date"))
+        & (col("l_shipdate") < param("date_hi", "date")))
+    q = (li.join(ctx.table("part"), on="l_partkey", right_on="p_partkey")
+         .agg(sum_(when(col("p_type").like("PROMO%"), _rev(), 0.0),
+                   "promo"),
+              sum_(_rev(), "total")))
+    return q.select(("promo_revenue",
+                     lit(100.0) * col("promo") / col("total")))
+
+
+def q19_template(ctx: FlareContext) -> DataFrame:
+    """Q19 over QUANTITY1/2/3 (each branch spans [q_i, q_i + 10])."""
+    li = ctx.table("lineitem")
+    q = li.join(ctx.table("part"), on="l_partkey", right_on="p_partkey")
+    b1 = ((col("p_brand") == "Brand#12")
+          & col("p_container").isin(["SM CASE", "SM BOX", "SM PACK",
+                                     "SM PKG"])
+          & col("l_quantity").between(param("qty1", "float64"),
+                                      param("qty1", "float64") + lit(10.0))
+          & col("p_size").between(1, 5))
+    b2 = ((col("p_brand") == "Brand#23")
+          & col("p_container").isin(["MED BAG", "MED BOX", "MED PKG",
+                                     "MED PACK"])
+          & col("l_quantity").between(param("qty2", "float64"),
+                                      param("qty2", "float64") + lit(10.0))
+          & col("p_size").between(1, 10))
+    b3 = ((col("p_brand") == "Brand#34")
+          & col("p_container").isin(["LG CASE", "LG BOX", "LG PACK",
+                                     "LG PKG"])
+          & col("l_quantity").between(param("qty3", "float64"),
+                                      param("qty3", "float64") + lit(10.0))
+          & col("p_size").between(1, 15))
+    common = (col("l_shipmode").isin(["AIR", "REG AIR"])
+              & (col("l_shipinstruct") == "DELIVER IN PERSON"))
+    return q.filter((b1 | b2 | b3) & common).agg(sum_(_rev(), "revenue"))
+
+
 QUERIES: Dict[str, Callable[[FlareContext], DataFrame]] = {
     "q1": q1, "q3": q3, "q4": q4, "q5": q5, "q6": q6,
     "q10": q10, "q13": q13, "q14": q14, "q19": q19,
 }
-# q22 needs an engine argument (scalar subquery); handled separately.
+# q22 is a prepared template over the scalar-subquery binding
+# (q22_params); it joins the registry-driven benchmarks via bench_tpch.
+
+#: Prepared-query templates + a representative list of spec-shaped
+#: bindings, for benchmarks and differential tests.
+TEMPLATES: Dict[str, Callable[[FlareContext], DataFrame]] = {
+    "q6": q6_template, "q14": q14_template, "q19": q19_template,
+}
+
+TEMPLATE_BINDINGS: Dict[str, Any] = {
+    "q6": [q6_binding(1994, 0.06, 24.0),
+           q6_binding(1995, 0.05, 25.0),
+           q6_binding(1993, 0.07, 24.0)],
+    "q14": [{"date_lo": date("1995-09-01"), "date_hi": date("1995-10-01")},
+            {"date_lo": date("1994-03-01"), "date_hi": date("1994-04-01")},
+            {"date_lo": date("1996-06-01"), "date_hi": date("1996-07-01")}],
+    "q19": [{"qty1": 1.0, "qty2": 10.0, "qty3": 20.0},
+            {"qty1": 5.0, "qty2": 12.0, "qty3": 25.0},
+            {"qty1": 2.0, "qty2": 15.0, "qty3": 22.0}],
+}

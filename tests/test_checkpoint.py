@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess tests: excluded from the CI fast lane
+
 from repro.checkpoint import CheckpointManager
 
 

@@ -6,6 +6,8 @@ first jax init, and the main test process must keep 1 device).
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess tests: excluded from the CI fast lane
+
 from repro.distributed.shardings import (ShardingCtx, make_ctx,
                                          rules_dp_only, rules_tp_fsdp)
 

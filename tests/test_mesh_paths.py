@@ -4,6 +4,8 @@ main pytest process must keep a single device.
 """
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess tests: excluded from the CI fast lane
+
 
 def test_ring_attention_exact(subproc):
     out = subproc(8, r"""

@@ -8,7 +8,11 @@ stage row-for-row.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests need hypothesis installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from conftest import assert_results_equal
 from repro.core import FlareContext, col, flare, lit, when

@@ -43,8 +43,9 @@ def test_tuple_engine_agrees(ctx, qname):
 
 
 def test_q22_two_phase(ctx):
-    rv = Q.q22(ctx, "volcano").collect(engine="volcano")
-    rc = flare(Q.q22(ctx, "compiled")).collect()
+    binding = Q.q22_params(ctx, "volcano")
+    rv = Q.q22(ctx).collect(engine="volcano", params=binding)
+    rc = Q.q22(ctx).lower("compiled").compile().collect(**binding)
     assert_results_equal(rv, rc, msg="q22")
 
 

@@ -4,6 +4,8 @@ import os
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess tests: excluded from the CI fast lane
+
 from repro.launch.supervisor import StepWatchdog, run_supervised
 from repro.launch.train import TrainRun, train_loop
 
