@@ -2,31 +2,32 @@
 
 The paper's Level 3 claim: compiling relational ETL *together with* the
 iterative ML kernel (k-means, LogReg, GDA) is order-of-magnitude faster
-than Spark's treat-UDFs-as-black-boxes execution.  Two configurations:
+than Spark's treat-UDFs-as-black-boxes execution.  Both configurations
+now run through the stages API on the SAME ``df.train(...)`` plan:
 
-* ``staged``: ETL on the stage engine, then a Python training loop where
-  every iteration is its own jit call with host sync between iterations
-  (Spark's per-stage execution of ML pipelines),
-* ``fused`` (Flare L3): ONE jit containing ETL + the full
-  ``until_converged`` training loop (lax.while_loop) -- relational ops
-  and ML fuse into a single XLA program.
+* ``staged`` (``engine="stage"``): the relational half materialises
+  through the host, then the kernel runs as its own jitted stage --
+  Spark's per-stage execution of ML pipelines,
+* ``fused`` (``engine="compiled"``, Flare L3): ONE XLA program holding
+  ETL + the full ``until_converged`` training loop (lax.while_loop).
+
+Emits the usual CSV rows and (for CI artifacts) a JSON report at
+``$BENCH_ML_JSON`` (default ``bench_ml.json``).
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import FlareContext, col, flare
-from repro.core import ml as ML
-from repro.core.lower import build_callable
-from repro.data import synth
+from repro.core import FlareContext, col
 from repro.relational.table import Table
 
 N_DOCS = int(os.environ.get("BENCH_ML_ROWS", "20000"))
+JSON_PATH = os.environ.get("BENCH_ML_JSON", "bench_ml.json")
 
 
 def _features_table(n: int, d: int = 8, seed: int = 0) -> Table:
@@ -40,110 +41,55 @@ def _features_table(n: int, d: int = 8, seed: int = 0) -> Table:
     return Table.from_arrays(data)
 
 
+def _bench_pipeline(name: str, train_df, leaf) -> dict:
+    """Time the same plan fused (compiled) vs staged (stage engine)."""
+    rows = {}
+    for engine in ("compiled", "stage"):
+        compiled = train_df.lower(engine=engine).compile()
+        us = time_call(
+            lambda: jax.block_until_ready(leaf(compiled())), iters=5)
+        rows[engine] = {
+            "us_per_call": round(us, 1),
+            "lower_s": round(compiled.stats.lower_s, 4),
+            "compile_s": round(compiled.stats.compile_s, 4),
+            "cache_hit": compiled.stats.cache_hit,
+        }
+    speedup = rows["stage"]["us_per_call"] / rows["compiled"]["us_per_call"]
+    emit(f"ml_{name}_fused", rows["compiled"]["us_per_call"],
+         staged_us=rows["stage"]["us_per_call"],
+         speedup=round(speedup, 2))
+    rows["speedup"] = round(speedup, 2)
+    return rows
+
+
 def run() -> None:
     ctx = FlareContext()
-    tbl = _features_table(N_DOCS)
-    ctx.register("points", tbl)
+    ctx.register("points", _features_table(N_DOCS))
+    ctx.preload("points")
     feat_cols = [f"f{i}" for i in range(8)]
+    etl = ctx.table("points").filter(col("quality") > 0.1)
 
-    q = (ctx.table("points")
-         .filter(col("quality") > 0.1)
-         .select(*feat_cols, "label"))
-    plan = ctx.optimized(q.plan)
-    fn, layout, _ = build_callable(plan, ctx.catalog)
-    scan_map = {}
+    report = {"rows": N_DOCS, "pipelines": {}}
 
-    def walk(n):
-        import repro.core.plan as PL
-        if isinstance(n, PL.Scan):
-            scan_map[id(n)] = n.table
-        for c in n.children():
-            walk(c)
+    # ---- k-means (Fig 8) ----------------------------------------------------
+    km = etl.to_matrix(*feat_cols).train("kmeans", k=4, max_iter=50)
+    report["pipelines"]["kmeans"] = _bench_pipeline(
+        "kmeans", km, lambda r: r.centroids)
 
-    walk(plan)
-    args = [jnp.asarray(ctx.catalog.table(scan_map[sid])[name])
-            for sid, names in layout for name in names]
+    # ---- LogReg (Fig 13/14) -------------------------------------------------
+    lr = etl.train("logreg", columns=feat_cols, label="label",
+                   max_iter=100)
+    report["pipelines"]["logreg"] = _bench_pipeline(
+        "logreg", lr, lambda r: r.weights)
 
-    def etl_to_matrix():
-        cols, mask = fn(*args)
-        x = jnp.stack([cols[c] for c in feat_cols], axis=1)
-        y = cols["label"].astype(jnp.float32)
-        w = mask.astype(jnp.float32)
-        # masked rows -> zero weight (static-shape relational output)
-        return x * w[:, None], y * w
+    # ---- GDA (Fig 13) -------------------------------------------------------
+    gda = etl.train("gda", columns=feat_cols, label="label")
+    report["pipelines"]["gda"] = _bench_pipeline(
+        "gda", gda, lambda r: r.sigma)
 
-    # ---- k-means (Fig 8) ------------------------------------------------------
-    @jax.jit
-    def kmeans_fused():
-        x, _ = etl_to_matrix()
-        return ML.kmeans(x, k=4, max_iter=50)
-
-    us_fused = time_call(
-        lambda: jax.block_until_ready(kmeans_fused().centroids), iters=5)
-
-    def kmeans_staged():
-        cols = flare(q).collect()                      # ETL materialises
-        x = jnp.stack([jnp.asarray(cols[c], jnp.float32)
-                       for c in feat_cols], axis=1)
-        mu = np.asarray(x[np.random.default_rng(0).integers(
-            0, x.shape[0], 4)])
-        assign_j = jax.jit(lambda x, mu: jnp.argmin(
-            ML.dist(x, mu), axis=1))
-        update_j = jax.jit(lambda x, c: ML.group_by_reduce(c, x, 4))
-        for _ in range(50):                            # per-iter host sync
-            c = np.asarray(assign_j(x, jnp.asarray(mu)))
-            sums, counts = update_j(x, jnp.asarray(c))
-            mu = np.asarray(sums) / np.maximum(
-                np.asarray(counts)[:, None], 1.0)
-        return mu
-
-    us_staged = time_call(kmeans_staged, warmup=1, iters=3)
-    emit("ml_kmeans_fused", us_fused, staged_us=round(us_staged, 1),
-         speedup=round(us_staged / us_fused, 2))
-
-    # ---- LogReg (Fig 13/14) ----------------------------------------------------
-    @jax.jit
-    def logreg_fused():
-        x, y = etl_to_matrix()
-        return ML.logreg(x, y, max_iter=100).weights
-
-    us_f = time_call(lambda: jax.block_until_ready(logreg_fused()),
-                     iters=5)
-
-    def logreg_staged():
-        cols = flare(q).collect()
-        x = jnp.stack([jnp.asarray(cols[c], jnp.float32)
-                       for c in feat_cols], axis=1)
-        y = jnp.asarray(cols["label"], jnp.float32)
-        w = np.zeros(8, np.float32)
-        grad_j = jax.jit(lambda w, x, y: x.T @ (jax.nn.sigmoid(x @ w) - y)
-                         / x.shape[0])
-        for _ in range(100):
-            w = w - 0.1 * np.asarray(grad_j(jnp.asarray(w), x, y))
-        return w
-
-    us_s = time_call(logreg_staged, warmup=1, iters=3)
-    emit("ml_logreg_fused", us_f, staged_us=round(us_s, 1),
-         speedup=round(us_s / us_f, 2))
-
-    # ---- GDA (Fig 13) -----------------------------------------------------------
-    @jax.jit
-    def gda_fused():
-        x, y = etl_to_matrix()
-        return ML.gda(x, y).sigma
-
-    us_g = time_call(lambda: jax.block_until_ready(gda_fused()), iters=5)
-
-    def gda_staged():
-        cols = flare(q).collect()
-        x = jnp.stack([jnp.asarray(cols[c], jnp.float32)
-                       for c in feat_cols], axis=1)
-        y = jnp.asarray(cols["label"], jnp.float32)
-        return np.asarray(jax.jit(ML.gda)(x, y).sigma)
-
-    us_gs = time_call(gda_staged, warmup=1, iters=3)
-    emit("ml_gda_fused", us_g, staged_us=round(us_gs, 1),
-         speedup=round(us_gs / us_g, 2))
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {JSON_PATH}")
 
 
 if __name__ == "__main__":

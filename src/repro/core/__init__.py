@@ -9,11 +9,13 @@ Flare's three integration levels (paper Fig. 1) as an executable system:
   together with the relational pipeline.
 """
 from repro.core.dataframe import (DataFrame, FlareContext, FlareDataFrame,
-                                  any_, avg, count, flare, max_, min_, sum_)
+                                  MatrixView, any_, avg, count, flare, max_,
+                                  min_, sum_)
 from repro.core.engines import CompileStats
 from repro.core.expr import (Col, Expr, Param, WithDomain, cast, col, lit,
                              param, when)
-from repro.core.plan import AggSpec
+from repro.core.ml import TrainKernel, register_kernel, train_kernel
+from repro.core.plan import AggSpec, IterativeKernel, MapBatches
 from repro.core.stages import (Compiled, CompileCache, Lowered,
                                available_engines, register_engine)
 from repro.core.staging import udf
@@ -24,4 +26,6 @@ __all__ = [
     "sum_", "avg", "min_", "max_", "count", "any_", "Col", "Expr", "Param",
     "Lowered", "Compiled", "CompileCache", "CompileStats",
     "available_engines", "register_engine",
+    "MapBatches", "IterativeKernel", "MatrixView",
+    "TrainKernel", "register_kernel", "train_kernel",
 ]

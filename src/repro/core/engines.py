@@ -38,7 +38,11 @@ from repro.core import lower as L
 from repro.core import plan as P
 from repro.relational import table as T
 
-_BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit)
+# Pipeline breakers.  MapBatches breaks on the STAGE engine by design:
+# Spark treats UDFs as black boxes and materialises around them (paper
+# section 5.1) -- the fused whole-query engine is what removes that
+# boundary (Flare Level 3).
+_BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit, P.MapBatches)
 
 
 # ---------------------------------------------------------------------------
@@ -148,16 +152,55 @@ class StageEngine:
         self.stages_run = 0
 
     def execute(self, p: P.Plan, catalog: P.Catalog, cache: DeviceCache,
-                params: Optional[Dict[str, Any]] = None) -> L.Result:
+                params: Optional[Dict[str, Any]] = None):
         self.stages_run = 0
         self._param_env = {
             s.name: jnp.asarray(require_param(params, s), L._JNP_OF[s.dtype])
             for s in P.params_of(p)}
+        if isinstance(p, P.IterativeKernel):
+            # heterogeneous pipeline, Spark-style: the relational half
+            # materialises through the host, then the training kernel
+            # runs as its OWN jitted stage -- the staged baseline the
+            # fused whole-query engine is measured against.
+            cols, mask, info = self._run_stage(p.child, catalog, cache)
+            return self._run_kernel_stage(p, cols, mask, info)
         cols, mask, info = self._run_stage(p, catalog, cache)
         schema = p.schema(catalog)
         dicts = {n: sc.dictionary for n, sc in info.cols.items()}
         cols = {n: cols[n] for n in schema.names}
         return L.Result(cols, mask, schema, dicts)
+
+    def _run_kernel_stage(self, p: "P.IterativeKernel",
+                          cols: Dict[str, np.ndarray],
+                          mask: Optional[np.ndarray],
+                          info: L.StaticInfo) -> L.ValueResult:
+        self.stages_run += 1
+        names = list(p.required_columns())
+        n = info.n_rows
+        specs = tuple({v.name: v for _, v in p.hyper
+                       if isinstance(v, E.Param)}.values())
+
+        def fn(*flat):
+            it = iter(flat)
+            kcols = {m: next(it) for m in names}
+            kmask = next(it)
+            env = {s.name: next(it) for s in specs}
+            stream = L.Stream(kcols, kmask,
+                              L.StaticInfo({m: info.cols[m] for m in names},
+                                           n))
+            return L.apply_kernel(p, stream, env or None)
+
+        key = ("kernel", p.fingerprint(), n)
+        jfn = self._cache.get(key)
+        if jfn is None:
+            jfn = jax.jit(fn)
+            self._cache[key] = jfn
+        args = [jnp.asarray(cols[m]) for m in names]
+        args.append(jnp.asarray(mask if mask is not None
+                                else np.ones(n, np.bool_)))
+        args.extend(self._param_env[s.name] for s in specs)
+        out = jfn(*args)
+        return L.ValueResult(jax.tree_util.tree_map(np.asarray, out))
 
     def _run_stage(self, root: P.Plan, catalog: P.Catalog,
                    cache: DeviceCache):
@@ -263,16 +306,38 @@ class VolcanoEngine:
 
     def execute(self, p: P.Plan, catalog: P.Catalog,
                 cache: DeviceCache = None,
-                params: Optional[Dict[str, Any]] = None) -> L.Result:
+                params: Optional[Dict[str, Any]] = None):
         self._params = {
             s.name: np.asarray(require_param(params, s),
                                T.numpy_dtype(s.dtype))[()]
             for s in P.params_of(p)}
+        if isinstance(p, P.IterativeKernel):
+            return self._train(p, catalog)
         vs = self._run(p, catalog)
         schema = p.schema(catalog)
         cols = {n: vs.cols[n] for n in schema.names}
         return L.Result(cols, None, schema,
                         {n: vs.dicts.get(n) for n in schema.names})
+
+    def _train(self, p: "P.IterativeKernel",
+               catalog: P.Catalog) -> L.ValueResult:
+        """Interpreted heterogeneous fallback: child rows are compacted
+        exact-size, so the kernel sees all-ones weights -- numerically
+        the same math as the fused engine's masked padded batch."""
+        vs = self._run(p.child, catalog)
+        n = len(next(iter(vs.cols.values())))
+        x = (np.stack([vs.cols[c].astype(np.float32) for c in p.features],
+                      axis=1) if n else
+             np.zeros((0, len(p.features)), np.float32))
+        y = (vs.cols[p.label].astype(np.float32)
+             if p.label is not None else None)
+        w = np.ones((n,), np.float32)
+        hyper = {}
+        for k, v in p.hyper:
+            hyper[k] = (self._params[v.name] if isinstance(v, E.Param)
+                        else v)
+        out = p.kernel(x, y, weights=w, **hyper)
+        return L.ValueResult(jax.tree_util.tree_map(np.asarray, out))
 
     # -- operators -----------------------------------------------------------
 
@@ -302,6 +367,29 @@ class VolcanoEngine:
                         dicts[name] = c.dicts.get(e.arg.name)
                 else:
                     doms[name] = None
+            return _VStream(cols, dicts, doms)
+        if isinstance(p, P.MapBatches):
+            c = self._run(p.child, catalog)
+            outs = p.fn({k: np.asarray(c.cols[k]) for k in p.columns})
+            if set(outs) != set(p.out_names):
+                raise TypeError(
+                    f"map_batches {p.name!r} returned {sorted(outs)}, "
+                    f"declared {sorted(p.out_names)}")
+            produced = set(p.out_names)
+            n_in = len(next(iter(c.cols.values())))
+            cols = {n: v for n, v in c.cols.items() if n not in produced}
+            dicts = {n: d for n, d in c.dicts.items() if n not in produced}
+            doms = {n: d for n, d in c.domains.items() if n not in produced}
+            for f in p.out_fields:
+                v = np.asarray(outs[f.name])
+                if v.shape != (n_in,):
+                    raise TypeError(
+                        f"map_batches {p.name!r} output {f.name!r} has "
+                        f"shape {v.shape}; expected ({n_in},) -- batch "
+                        "UDFs must be length-preserving 1-D columns")
+                cols[f.name] = v.astype(T.numpy_dtype(f.dtype))
+                dicts[f.name] = None
+                doms[f.name] = f.domain
             return _VStream(cols, dicts, doms)
         if isinstance(p, P.Join):
             return self._join(p, catalog)

@@ -256,6 +256,13 @@ def static_info(p: P.Plan, catalog: P.Catalog) -> StaticInfo:
         return _static_of_scan(catalog.table(p.table))
     if isinstance(p, P.Filter):
         return static_info(p.child, catalog)
+    if isinstance(p, P.MapBatches):
+        child = static_info(p.child, catalog)
+        produced = set(p.out_names)
+        cols = {n: sc for n, sc in child.cols.items() if n not in produced}
+        for f in p.out_fields:
+            cols[f.name] = StaticCol(f.dtype, None, f.domain)
+        return StaticInfo(cols, child.n_rows)
     if isinstance(p, P.Project):
         child = static_info(p.child, catalog)
         schema = p.child.schema(catalog)
@@ -530,6 +537,28 @@ def lower_node(p: P.Plan, catalog: P.Catalog, scans: Dict[int, Stream],
         pred = eval_expr(p.pred, child, params)
         mask = pred if child.mask is None else (child.mask & pred)
         return Stream(child.cols, mask, child.info)
+    if isinstance(p, P.MapBatches):
+        child = lower_node(p.child, catalog, scans, params)
+        outs = p.fn({c: child.cols[c] for c in p.columns})
+        if set(outs) != set(p.out_names):
+            raise TypeError(
+                f"map_batches {p.name!r} returned columns "
+                f"{sorted(outs)}, declared schema is "
+                f"{sorted(p.out_names)}")
+        produced = set(p.out_names)
+        cols = {n: v for n, v in child.cols.items() if n not in produced}
+        scols = {n: sc for n, sc in child.info.cols.items()
+                 if n not in produced}
+        for f in p.out_fields:
+            v = jnp.asarray(outs[f.name])
+            if v.shape != (child.n,):
+                raise TypeError(
+                    f"map_batches {p.name!r} output {f.name!r} has shape "
+                    f"{v.shape}; expected ({child.n},) -- batch UDFs must "
+                    "be length-preserving 1-D columns")
+            cols[f.name] = v.astype(_JNP_OF[f.dtype])
+            scols[f.name] = StaticCol(f.dtype, None, f.domain)
+        return Stream(cols, child.mask, StaticInfo(scols, child.n))
     if isinstance(p, P.Project):
         child = lower_node(p.child, catalog, scans, params)
         cols = {name: eval_expr(e, child, params) for name, e in p.outputs}
@@ -564,6 +593,57 @@ def lower_node(p: P.Plan, catalog: P.Catalog, scans: Dict[int, Stream],
         mask = None if child.mask is None else child.mask[:n]
         return Stream(cols, mask, StaticInfo(child.info.cols, n))
     raise TypeError(f"cannot lower plan node {p!r}")
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous handoff: relational stream -> matrix -> training kernel
+# ---------------------------------------------------------------------------
+
+
+def resolve_hyper(p: "P.IterativeKernel",
+                  params: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    """Bind the kernel's hyper-parameters: Param placeholders pull their
+    (possibly traced) runtime value from ``params``; literals pass
+    through.  Shape-affecting hypers (e.g. k-means ``k``) must be
+    literals -- a Param there fails inside the kernel, by design."""
+    out: Dict[str, Any] = {}
+    for k, v in p.hyper:
+        if isinstance(v, E.Param):
+            if params is None or v.name not in params:
+                raise KeyError(
+                    f"unbound hyper-parameter {v.name!r} of kernel "
+                    f"{p.kernel.name}; pass a binding, e.g. "
+                    f"compiled({v.name}=...)")
+            out[k] = params[v.name]
+        elif isinstance(v, E.Expr):
+            raise TypeError(
+                f"hyper-parameter {k!r} of {p.kernel.name} must be a "
+                f"literal or param(), got expression {v!r}")
+        else:
+            out[k] = v
+    return out
+
+
+def apply_kernel(p: "P.IterativeKernel", stream: Stream,
+                 params: Optional[Dict[str, Any]] = None):
+    """Stack the feature columns of ``stream`` into an [n, d] float32
+    matrix and run the training kernel on it -- traced, so under the
+    whole-query engine the relational operators and the kernel's
+    ``lax.while_loop`` land in ONE program (paper Fig. 8).
+
+    The validity mask becomes the kernel's sample weights and invalid
+    rows are zeroed (their padded contents are unspecified), so the
+    padded result equals the compacted interpreters' result.
+    """
+    mask = stream.the_mask()
+    w = mask.astype(jnp.float32)
+    x = jnp.stack([stream.cols[c].astype(jnp.float32) for c in p.features],
+                  axis=1)
+    x = x * w[:, None]
+    y = None
+    if p.label is not None:
+        y = stream.cols[p.label].astype(jnp.float32) * w
+    return p.kernel(x, y, weights=w, **resolve_hyper(p, params))
 
 
 # ---------------------------------------------------------------------------
@@ -617,6 +697,15 @@ def required_scan_columns(p: P.Plan, catalog: P.Catalog) -> Dict[int, List[str]]
             if isinstance(node, P.Sort) and needed is not None:
                 need = set(needed) | {n for n, _ in node.by}
             rec(node.child, need)
+        elif isinstance(node, P.MapBatches):
+            if needed is None:
+                need = None  # every pass-through column may be consumed
+            else:
+                need = ((set(needed) - set(node.out_names))
+                        | set(node.columns))
+            rec(node.child, need)
+        elif isinstance(node, P.IterativeKernel):
+            rec(node.child, set(node.required_columns()))
         else:
             raise TypeError(node)
 
@@ -665,9 +754,31 @@ class Result:
         return c[name][0]
 
 
+@dataclasses.dataclass
+class ValueResult:
+    """Non-relational execution result: the output pytree of a plan
+    rooted at :class:`repro.core.plan.IterativeKernel` (e.g. a
+    ``KMeansResult``).  Quacks enough like :class:`Result` for the
+    stages API -- ``compact()`` is the identity on the value."""
+
+    value: Any
+
+    def compact(self):
+        return self.value
+
+    def num_rows(self) -> int:
+        raise TypeError("a trained-kernel result has no row count; "
+                        "use .value / compact()")
+
+    def scalar(self, name: Optional[str] = None):
+        raise TypeError("a trained-kernel result has no scalar columns; "
+                        "use .value / compact()")
+
+
 def build_callable(p: P.Plan, catalog: P.Catalog,
                    param_specs: Sequence[E.Param] = ()
-                   ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]], StaticInfo]:
+                   ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]],
+                              Optional[StaticInfo]]:
     """Build the pure function over flat scan-column arrays.
 
     Returns (fn, arg_layout, out_info) where arg_layout lists
@@ -675,6 +786,12 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
     is non-empty, ``fn`` takes one trailing scalar argument per spec (in
     spec order) -- the runtime values of :class:`repro.core.expr.Param`
     placeholders, traced rather than baked into the program.
+
+    For a relational plan ``fn`` returns ``(out_cols, mask)``.  For a
+    plan rooted at :class:`repro.core.plan.IterativeKernel` -- the
+    heterogeneous-pipeline case -- ``fn`` returns the kernel's result
+    pytree instead, the relational half flowing straight into the
+    training loop within the same trace (``out_info`` is None).
     """
     needed = required_scan_columns(p, catalog)
     scan_nodes: List[P.Scan] = []
@@ -689,7 +806,8 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
     layout = [(id(s), needed[id(s)]) for s in scan_nodes]
     statics = {id(s): _static_of_scan(catalog.table(s.table))
                for s in scan_nodes}
-    out_info = static_info(p, catalog)
+    ml_root = isinstance(p, P.IterativeKernel)
+    out_info = None if ml_root else static_info(p, catalog)
     param_specs = tuple(param_specs)
 
     def fn(*flat_arrays):
@@ -702,6 +820,9 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
                 statics[id(s)].n_rows)
             scans[id(s)] = Stream(cols, None, info)
         env = {spec.name: next(it) for spec in param_specs}
+        if ml_root:
+            stream = lower_node(p.child, catalog, scans, env or None)
+            return apply_kernel(p, stream, env or None)
         stream = lower_node(p, catalog, scans, env or None)
         out_cols = {n: stream.cols[n] for n in p.schema(catalog).names}
         return out_cols, (stream.the_mask())

@@ -103,6 +103,20 @@ def push_predicates(p: P.Plan, catalog: P.Catalog) -> P.Plan:
                     lambda x: mapping[x.name] if isinstance(x, E.Col) else None)
                 return P.Project(P.Filter(child.child, new_pred),
                                  child.outputs)
+        if isinstance(child, P.MapBatches):
+            # the UDF's declared column dependencies are what make this
+            # safe: conjuncts not touching any produced column commute
+            # with a row-wise batch UDF (DESIGN.md section 7)
+            produced = set(child.out_names)
+            below, keep = [], []
+            for c in split_conjuncts(n.pred):
+                (keep if set(E.columns_of(c)) & produced
+                 else below).append(c)
+            if below:
+                pushed = P.MapBatches(
+                    P.Filter(child.child, conjoin(below)), child.fn,
+                    child.columns, child.out_fields, child.name)
+                return P.Filter(pushed, conjoin(keep)) if keep else pushed
         if isinstance(child, P.Join):
             lnames = set(child.left.schema(catalog).names)
             rnames = (set() if child.how in ("semi", "anti")
@@ -182,6 +196,15 @@ def prune_projections(p: P.Plan, catalog: P.Catalog) -> P.Plan:
             return P.Sort(rec(n.child, need), n.by)
         if isinstance(n, P.Limit):
             return P.Limit(rec(n.child, needed), n.n)
+        if isinstance(n, P.MapBatches):
+            need = (None if needed is None
+                    else ((needed - set(n.out_names)) | set(n.columns)))
+            return P.MapBatches(rec(n.child, need), n.fn, n.columns,
+                                n.out_fields, n.name)
+        if isinstance(n, P.IterativeKernel):
+            return P.IterativeKernel(
+                rec(n.child, set(n.required_columns())), n.kernel,
+                n.features, n.label, n.hyper)
         raise TypeError(n)
 
     return rec(p, None)
@@ -207,6 +230,10 @@ def estimate_rows(p: P.Plan, catalog: P.Catalog) -> int:
         return estimate_rows(p.child, catalog)
     if isinstance(p, P.Limit):
         return min(p.n, estimate_rows(p.child, catalog))
+    if isinstance(p, P.MapBatches):
+        return estimate_rows(p.child, catalog)
+    if isinstance(p, P.IterativeKernel):
+        return 1
     raise TypeError(p)
 
 

@@ -14,7 +14,7 @@ executed by one of the three engines in ``repro.core.engines``:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import expr as E
 from repro.relational import table as T
@@ -289,6 +289,117 @@ class Limit(Plan):
         return f"limit({self.child.fingerprint()},{self.n})"
 
 
+@dataclasses.dataclass(eq=False)
+class MapBatches(Plan):
+    """A JAX-traceable batch UDF as a first-class plan node (Flare Level 3).
+
+    ``fn`` maps a dict of column arrays (the declared ``columns``) to a
+    dict of new column arrays matching ``out_fields``.  It must be
+    length-preserving and act row-wise (vectorised per row): under the
+    compiled engine every row of the padded batch reaches ``fn`` --
+    including mask-invalid rows -- and the optimizer is allowed to move
+    filters across this node, so per-row purity is part of the contract.
+
+    All child columns pass through; ``out_fields`` are appended (a
+    same-named output replaces the pass-through column).  The declared
+    ``columns`` are the node's only data dependencies, which is what lets
+    the optimizer push filters below the UDF and prune unused columns
+    out of the child (DESIGN.md section 7).
+    """
+
+    child: Plan
+    fn: Callable[[Dict[str, Any]], Dict[str, Any]]
+    columns: Tuple[str, ...]
+    out_fields: Tuple[T.Field, ...]
+    name: str = "map_batches"
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return MapBatches(kids[0], self.fn, self.columns, self.out_fields,
+                          self.name)
+
+    @property
+    def out_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in self.out_fields)
+
+    def infer_schema(self, catalog):
+        cs = self.child.schema(catalog)
+        missing = [c for c in self.columns if c not in cs]
+        if missing:
+            raise ValueError(
+                f"map_batches {self.name!r} declares input column(s) "
+                f"{missing} absent from the child schema {cs.names}")
+        produced = set(self.out_names)
+        fields = [f for f in cs.fields if f.name not in produced]
+        fields.extend(self.out_fields)
+        return T.Schema(fields)
+
+    def describe(self):
+        outs = ", ".join(f"{f.name}:{f.dtype}" for f in self.out_fields)
+        return (f"MapBatches {self.name}({list(self.columns)}) "
+                f"-> [{outs}]")
+
+    def fingerprint(self):
+        outs = ",".join(f"{f.name}:{f.dtype}:{f.domain}"
+                        for f in self.out_fields)
+        return (f"mapbatches({self.child.fingerprint()},"
+                f"{self.name}@{id(self.fn):x},{self.columns},[{outs}])")
+
+
+@dataclasses.dataclass(eq=False)
+class IterativeKernel(Plan):
+    """A matrix-shaped training kernel as a terminal plan node.
+
+    The relational child feeds ``features`` (and optionally ``label``)
+    into an :class:`repro.core.ml.TrainKernel`; the node's output is the
+    kernel's result pytree, not a relational table, so this node only
+    appears as a plan root (``df.train(...)``).  Hyper-parameter values
+    may be :class:`repro.core.expr.Param` placeholders, which lower to
+    runtime jit arguments exactly like relational params -- one compiled
+    pipeline serves every binding (DESIGN.md section 7).
+    """
+
+    child: Plan
+    kernel: Any  # repro.core.ml.TrainKernel (kept Any: no import cycle)
+    features: Tuple[str, ...]
+    label: Optional[str]
+    hyper: Tuple[Tuple[str, Any], ...]  # sorted (name, literal-or-Param)
+
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, kids):
+        return IterativeKernel(kids[0], self.kernel, self.features,
+                               self.label, self.hyper)
+
+    def infer_schema(self, catalog):
+        raise TypeError(
+            f"train({self.kernel.name}) produces a kernel result pytree, "
+            "not a relational table; it has no schema")
+
+    def required_columns(self) -> Tuple[str, ...]:
+        return self.features + ((self.label,) if self.label else ())
+
+    def describe(self):
+        hyp = ", ".join(f"{k}={v}" for k, v in self.hyper)
+        lab = f", label={self.label}" if self.label else ""
+        return (f"Train {self.kernel.name}({list(self.features)}{lab}"
+                f"{'; ' + hyp if hyp else ''})")
+
+    def fingerprint(self):
+        hyp = ",".join(
+            f"{k}={E.fingerprint(v) if isinstance(v, E.Expr) else repr(v)}"
+            for k, v in self.hyper)
+        # name alone is not identity: two ad-hoc kernels can share
+        # __name__ (lambdas!), so the function object disambiguates --
+        # same convention as MapBatches / expr.Udf
+        kid = f"{self.kernel.name}@{id(self.kernel.fn):x}"
+        return (f"train({self.child.fingerprint()},{kid},"
+                f"{self.features},{self.label},[{hyp}])")
+
+
 # ---------------------------------------------------------------------------
 # catalog
 # ---------------------------------------------------------------------------
@@ -324,6 +435,8 @@ def node_exprs(p: Plan) -> Tuple[E.Expr, ...]:
         return tuple(e for _, e in p.outputs)
     if isinstance(p, Aggregate):
         return tuple(a.arg for a in p.aggs if a.arg is not None)
+    if isinstance(p, IterativeKernel):
+        return tuple(v for _, v in p.hyper if isinstance(v, E.Expr))
     return ()
 
 

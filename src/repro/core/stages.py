@@ -48,9 +48,10 @@ CompileStats = ENG.CompileStats
 
 # An executor is catalog-free: it is (re)bound to a catalog + device cache
 # at every call, so a CompileCache entry can serve any catalog whose table
-# metadata matches the template key.
+# metadata matches the template key.  Relational plans yield a Result;
+# IterativeKernel plans yield a ValueResult (the kernel's pytree).
 Executor = Callable[[P.Catalog, ENG.DeviceCache, Optional[Dict[str, Any]]],
-                    L.Result]
+                    Any]
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +145,11 @@ def bind_params(p: P.Plan, params: Dict[str, Any]) -> P.Plan:
             return P.Aggregate(n.child, n.keys, tuple(
                 dataclasses.replace(a, arg=E.map_expr(a.arg, sub))
                 if a.arg is not None else a for a in n.aggs))
+        if isinstance(n, P.IterativeKernel):
+            return P.IterativeKernel(n.child, n.kernel, n.features, n.label,
+                                     tuple((k, ENG.require_param(params, v)
+                                            if isinstance(v, E.Param) else v)
+                                           for k, v in n.hyper))
         return None
 
     return P.transform(p, rule)
@@ -212,8 +218,10 @@ class _WholeQueryArtifact:
     layout: Tuple[Tuple[str, Tuple[str, ...]], ...]
     avals: Tuple[jax.ShapeDtypeStruct, ...]
     param_specs: Tuple[E.Param, ...]
-    out_info: L.StaticInfo
-    schema: T.Schema
+    # None for IterativeKernel roots: the program returns a kernel
+    # result pytree, not relational columns
+    out_info: Optional[L.StaticInfo]
+    schema: Optional[T.Schema]
     jax_lowered: Any  # jax.stages.Lowered
 
 
@@ -243,8 +251,10 @@ class WholeQueryEngine:
             avals.append(jax.ShapeDtypeStruct(
                 (), jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))))
         jax_lowered = jax.jit(fn).lower(*avals)
+        schema = (None if isinstance(p, P.IterativeKernel)
+                  else p.schema(catalog))
         return _WholeQueryArtifact(fn, layout, tuple(avals), param_specs,
-                                   out_info, p.schema(catalog), jax_lowered)
+                                   out_info, schema, jax_lowered)
 
     def compiler_ir(self, artifact: _WholeQueryArtifact,
                     dialect: Optional[str] = None) -> Any:
@@ -260,7 +270,7 @@ class WholeQueryEngine:
         out_info, schema = artifact.out_info, artifact.schema
 
         def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
-                params: Optional[Dict[str, Any]]) -> L.Result:
+                params: Optional[Dict[str, Any]]):
             args = []
             for tname, names in layout:
                 tbl = catalog.table(tname)
@@ -268,7 +278,11 @@ class WholeQueryEngine:
                     args.append(device_cache.get(tbl, n))
             for s, dt in zip(specs, pdtypes):
                 args.append(jnp.asarray(ENG.require_param(params, s), dt))
-            out_cols, mask = exe(*args)
+            out = exe(*args)
+            if schema is None:  # heterogeneous pipeline: kernel pytree
+                return L.ValueResult(jax.tree_util.tree_map(np.asarray,
+                                                            out))
+            out_cols, mask = out
             out_np = {k: np.asarray(v) for k, v in out_cols.items()}
             dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
             return L.Result(out_np, np.asarray(mask), schema, dicts)

@@ -71,7 +71,9 @@ def _eval_row(e: E.Expr, row: Row):
 
 class TupleEngine:
     def execute(self, p: P.Plan, catalog: P.Catalog,
-                cache=None) -> L.Result:
+                cache=None):
+        if isinstance(p, P.IterativeKernel):
+            return self._train(p, catalog)
         schema = p.schema(catalog)
         rows = list(self._iter(p, catalog))
         cols: Dict[str, np.ndarray] = {}
@@ -84,6 +86,26 @@ class TupleEngine:
                                           dtype=T.numpy_dtype(f.dtype))
         return L.Result(cols, None, schema,
                         {f.name: None for f in schema})
+
+    def _train(self, p: P.IterativeKernel, catalog: P.Catalog):
+        """Row-at-a-time ETL feeding the kernel: rows are gathered one by
+        one (the interpreted baseline), then trained in one batch.  Hyper
+        Params must already be bound (``stages.bind_params``)."""
+        import jax
+        rows = list(self._iter(p.child, catalog))
+        d = len(p.features)
+        x = np.asarray([[row[c] for c in p.features] for row in rows],
+                       np.float32).reshape(len(rows), d)
+        y = (np.asarray([row[p.label] for row in rows], np.float32)
+             if p.label is not None else None)
+        w = np.ones((len(rows),), np.float32)
+        for k, v in p.hyper:
+            if isinstance(v, E.Expr):
+                raise TypeError(
+                    f"tuple engine needs bound hyper-parameters; "
+                    f"{k!r} is still {v!r}")
+        out = p.kernel(x, y, weights=w, **dict(p.hyper))
+        return L.ValueResult(jax.tree_util.tree_map(np.asarray, out))
 
     # -- iterators ---------------------------------------------------------------
 
@@ -104,6 +126,23 @@ class TupleEngine:
         elif isinstance(p, P.Project):
             for row in self._iter(p.child, catalog):
                 yield {name: _eval_row(e, row) for name, e in p.outputs}
+        elif isinstance(p, P.MapBatches):
+            # one-row batches: each row becomes a length-1 column dict --
+            # every per-row call the paper talks about is a real call here
+            produced = set(p.out_names)
+            for row in self._iter(p.child, catalog):
+                outs = p.fn({c: np.asarray([row[c]]) for c in p.columns})
+                new = {n: v for n, v in row.items() if n not in produced}
+                for f in p.out_fields:
+                    arr = np.asarray(outs[f.name])
+                    if arr.shape != (1,):
+                        raise TypeError(
+                            f"map_batches {p.name!r} output {f.name!r} "
+                            f"has shape {arr.shape} for a 1-row batch; "
+                            "batch UDFs must be length-preserving")
+                    v = arr.astype(T.numpy_dtype(f.dtype))[0]
+                    new[f.name] = v.item() if hasattr(v, "item") else v
+                yield new
         elif isinstance(p, P.Join):
             build: Dict[Tuple, Row] = {}
             seen: set = set()

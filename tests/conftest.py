@@ -45,7 +45,11 @@ def assert_results_equal(a, b, rtol=5e-3, atol=1e-6, ordered=True,
             else:
                 assert sorted(x) == sorted(y), (msg, k)
         else:
-            xf, yf = np.float64(x), np.float64(y)
+            # asarray, NOT np.float64(): the scalar constructor collapses
+            # 1-element arrays to 0-d, which breaks np.sort(axis=-1) on
+            # scalar aggregate results (q6/q14)
+            xf = np.asarray(x, dtype=np.float64)
+            yf = np.asarray(y, dtype=np.float64)
             if not ordered:
                 xf, yf = np.sort(xf), np.sort(yf)
             np.testing.assert_allclose(xf, yf, rtol=rtol, atol=atol,

@@ -1,0 +1,252 @@
+"""Heterogeneous-pipeline plan nodes (paper Fig. 8 / Level 3 as an API).
+
+``MapBatches`` (JAX-traceable batch UDF) and ``IterativeKernel``
+(``df.train``) are first-class plan nodes: differential across the
+fused ``compiled`` engine and the ``stage``/``volcano``/``tuple``
+fallbacks, visible to the optimizer (filter pushdown across declared
+columns, projection pruning), cacheable with ``param()``
+hyper-parameters, and fused into ONE XLA program end to end.
+"""
+import re
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import assert_results_equal
+from repro.core import FlareContext, col, param, sum_
+from repro.core import plan as P
+from repro.relational.table import Table
+
+N, D, K = 2_000, 4, 3
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    rng = np.random.default_rng(7)
+    centers = rng.normal(0, 5, (K, D))
+    assign = rng.integers(0, K, N)
+    x = centers[assign] + rng.normal(0, 1, (N, D))
+    data = {f"f{i}": x[:, i] for i in range(D)}
+    data["quality"] = rng.uniform(0, 1, N)
+    data["label"] = (assign % 2).astype(np.int32)
+    c = FlareContext()
+    c.register("points", Table.from_arrays(data))
+    return c
+
+
+FEATURES = [f"f{i}" for i in range(D)]
+
+
+def _etl(ctx):
+    return ctx.table("points").filter(col("quality") > 0.2)
+
+
+# ---------------------------------------------------------------------------
+# MapBatches: differential across all four engines
+# ---------------------------------------------------------------------------
+
+
+def _radius(cols):
+    return {"r": jnp.sqrt(cols["f0"] ** 2 + cols["f1"] ** 2),
+            "s": jnp.tanh(cols["f0"])}
+
+
+def _radius_df(ctx):
+    return (_etl(ctx)
+            .map_batches(_radius, columns=["f0", "f1"],
+                         schema={"r": "float32", "s": "float32"})
+            .filter(col("r") < 5.0)
+            .agg(sum_(col("r"), "total"), sum_(col("s"), "stot")))
+
+
+@pytest.mark.parametrize("engine", ["stage", "compiled", "tuple"])
+def test_map_batches_differential(ctx, engine):
+    q = _radius_df(ctx)
+    oracle = q.lower(engine="volcano").compile()()
+    got = q.lower(engine=engine).compile()()
+    assert_results_equal(oracle, got, msg=f"map_batches {engine}")
+
+
+def test_map_batches_validates_schema(ctx):
+    with pytest.raises(ValueError, match="absent from the child"):
+        ctx.table("points").map_batches(
+            _radius, columns=["nope"], schema={"r": "float32"})
+
+    def wrong(cols):
+        return {"unexpected": cols["f0"]}
+
+    q = ctx.table("points").map_batches(
+        wrong, columns=["f0"], schema={"r": "float32"})
+    with pytest.raises(TypeError, match="declared"):
+        q.lower(engine="compiled").compile()()
+
+
+# ---------------------------------------------------------------------------
+# train(): fused compiled vs stage/volcano/tuple fallbacks
+# ---------------------------------------------------------------------------
+
+
+def _trees_close(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **kw)
+
+
+@pytest.mark.parametrize("engine", ["stage", "volcano", "tuple"])
+def test_kmeans_fallbacks_agree_with_fused(ctx, engine):
+    tr = _etl(ctx).train("kmeans", columns=FEATURES, k=K, max_iter=40)
+    fused = tr.lower(engine="compiled").compile()()
+    other = tr.lower(engine=engine).compile()()
+    # deterministic first-k-valid init => same trajectory, padded or not
+    _trees_close(fused.centroids, other.centroids, rtol=1e-3, atol=1e-3)
+    assert int(fused.iters) == int(other.iters)
+    # assignments compare on valid rows only (fused output is padded)
+    valid = np.asarray(
+        _etl(ctx).select(*FEATURES).lower("compiled").compile()
+        .result().mask)
+    fa = np.asarray(fused.assignments)
+    oa = np.asarray(other.assignments)
+    if engine == "stage":  # stage fallback is padded too
+        assert (fa[valid] == oa[valid]).all()
+    else:
+        assert (fa[valid] == oa).all()
+
+
+@pytest.mark.parametrize("engine", ["stage", "volcano"])
+def test_logreg_and_gda_fallbacks(ctx, engine):
+    lr = _etl(ctx).train("logreg", columns=FEATURES, label="label",
+                         max_iter=60)
+    fused = lr.lower(engine="compiled").compile()()
+    other = lr.lower(engine=engine).compile()()
+    _trees_close(fused.weights, other.weights, rtol=1e-4, atol=1e-5)
+
+    gda = _etl(ctx).train("gda", columns=FEATURES, label="label")
+    gf = gda.lower(engine="compiled").compile()()
+    go = gda.lower(engine=engine).compile()()
+    _trees_close(gf.sigma, go.sigma, rtol=1e-3, atol=1e-4)
+    _trees_close(gf.mu0, go.mu0, rtol=1e-3, atol=1e-4)
+
+
+def test_train_requires_label_when_needed(ctx):
+    with pytest.raises(TypeError, match="needs labels"):
+        ctx.table("points").train("logreg", columns=FEATURES)
+    with pytest.raises(ValueError, match="unknown training kernel"):
+        ctx.table("points").train("not-a-kernel", columns=FEATURES)
+
+
+def test_kmeans_fewer_valid_rows_than_k(ctx):
+    """Surplus seeds duplicate the LAST valid row on padded and
+    compacted paths alike -- never a zeroed padding row."""
+    qcol = np.asarray(ctx.catalog.table("points")["quality"])
+    srt = np.sort(qcol)
+    thr = float((srt[-3] + srt[-4]) / 2)  # 3 rows pass, far from f32 edge
+    tr = (ctx.table("points").filter(col("quality") > thr)
+          .train("kmeans", columns=FEATURES, k=K + 1, max_iter=10))
+    fused = tr.lower(engine="compiled").compile()()
+    oracle = tr.lower(engine="volcano").compile()()
+    _trees_close(fused.centroids, oracle.centroids, rtol=1e-4, atol=1e-4)
+
+
+def test_adhoc_kernels_do_not_share_cache_entries(ctx):
+    """Two same-named (lambda) kernels must fingerprint differently --
+    a shared CompileCache key would serve the first one's program."""
+    import jax.numpy as jnp
+    a = _etl(ctx).train(lambda x, weights=None: {"m": jnp.sum(x)},
+                        columns=["f0"])
+    b = _etl(ctx).train(lambda x, weights=None: {"m": jnp.sum(x) * 1e3},
+                        columns=["f0"])
+    ra = a.lower(engine="compiled").compile()()["m"]
+    rb = b.lower(engine="compiled").compile()()["m"]
+    assert not np.allclose(np.asarray(ra), np.asarray(rb))
+
+
+# ---------------------------------------------------------------------------
+# one fused program + prepared hyper-parameters
+# ---------------------------------------------------------------------------
+
+
+def test_fused_pipeline_is_one_program(ctx):
+    lowered = (_etl(ctx).train("kmeans", columns=FEATURES, k=K,
+                               max_iter=30)
+               .lower(engine="compiled"))
+    jaxpr = str(lowered.compiler_ir())
+    assert re.search(r"\bwhile\b", jaxpr)   # the training loop
+    assert re.search(r"= gt\b", jaxpr)      # the relational filter
+    hlo = str(lowered.compiler_ir("stablehlo"))
+    assert "while" in hlo
+
+
+def test_param_hyper_prepared_pipeline(ctx):
+    tr = _etl(ctx).train("logreg", columns=FEATURES, label="label",
+                         lr=param("lr", "float32"), max_iter=40)
+    compiled = tr.lower(engine="compiled").compile()
+    w1 = np.asarray(compiled(lr=0.05).weights)
+    w2 = np.asarray(compiled(lr=0.5).weights)
+    assert not np.allclose(w1, w2)   # the binding actually matters
+    again = tr.lower(engine="compiled").compile()
+    assert again.stats.cache_hit     # one template, many bindings
+    oracle = tr.lower(engine="volcano").compile()(lr=0.5)
+    _trees_close(w2, oracle.weights, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the optimizer sees across the UDF boundary
+# ---------------------------------------------------------------------------
+
+
+def _find(plan, cls):
+    out = []
+
+    def rec(n):
+        if isinstance(n, cls):
+            out.append(n)
+        for c in n.children():
+            rec(c)
+
+    rec(plan)
+    return out
+
+
+def test_filter_pushdown_across_map_batches(ctx):
+    q = (ctx.table("points")
+         .map_batches(_radius, columns=["f0", "f1"],
+                      schema={"r": "float32", "s": "float32"})
+         .filter((col("quality") > 0.5) & (col("r") < 2.0)))
+    opt = ctx.optimized(q.plan)
+    mbs = _find(opt, P.MapBatches)
+    assert len(mbs) == 1
+    # quality-conjunct crossed the UDF (it avoids produced columns)...
+    below = _find(mbs[0].child, P.Filter)
+    assert len(below) == 1 and "quality" in str(below[0].pred)
+    # ...while the r-conjunct (a produced column) stayed above
+    above = [f for f in _find(opt, P.Filter) if f not in below]
+    assert len(above) == 1 and "r" in str(above[0].pred)
+    # and the rewrite preserves results
+    agg = q.agg(sum_(col("r"), "t"))
+    assert_results_equal(agg.lower(engine="volcano").compile()(),
+                         agg.lower(engine="compiled").compile()(),
+                         msg="pushdown differential")
+
+
+def test_projection_pruned_to_declared_columns(ctx):
+    q = (ctx.table("points")
+         .map_batches(_radius, columns=["f0", "f1"],
+                      schema={"r": "float32", "s": "float32"})
+         .agg(sum_(col("r"), "t")))
+    opt = ctx.optimized(q.plan)
+    mb = _find(opt, P.MapBatches)[0]
+    scan_proj = _find(mb.child, P.Project)
+    assert scan_proj, "expected a pruning Project above the scan"
+    names = [n for n, _ in scan_proj[0].outputs]
+    # only the UDF's declared inputs survive below the boundary
+    assert set(names) == {"f0", "f1"}
+
+
+def test_train_prunes_to_features_and_label(ctx):
+    tr = _etl(ctx).train("logreg", columns=FEATURES[:2], label="label",
+                         max_iter=5)
+    opt = ctx.optimized(tr.plan)
+    scan_proj = _find(opt, P.Project)
+    assert scan_proj
+    names = {n for n, _ in scan_proj[-1].outputs}
+    assert names == {"f0", "f1", "label", "quality"}  # + filter input

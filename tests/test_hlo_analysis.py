@@ -82,6 +82,8 @@ def test_dus_counted_as_update_not_buffer():
 
 
 def test_collectives_in_scan_counted(subproc):
+    # jax.make_mesh without axis_types: that kwarg postdates the pinned
+    # jax (0.4.37) and made this test fail at import, not in the walker
     out = subproc(8, r"""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
@@ -93,8 +95,7 @@ def body(x, w):
     return out
 x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
 w = jax.ShapeDtypeStruct((8, 512, 512), jnp.float32)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 shw = NamedSharding(mesh, P(None, "data", None))
 shx = NamedSharding(mesh, P())
 with mesh:
@@ -102,7 +103,8 @@ with mesh:
         .compile().as_text()
 r = HA.analyze(hlo)
 total = r["collective_bytes_total"]
-# 8 iterations x ~1MB partial results reduced
+# 8 iterations x ~1MB partial results all-reduced inside the while body:
+# the walker must scale the loop-body collective by the trip count
 assert 4e6 < total < 4e7, total
 print("COLL_OK", total)
 """)

@@ -4,13 +4,18 @@ The core reproduction test is differential: all four engines (tuple
 Volcano, vectorized volcano, stage-granular, whole-query compiled) must
 agree on every TPC-H query; the optimizer must not change results; the
 paper's Q6 semantics must match a hand computation.
+
+Everything runs through the stages API (``df.lower(engine=...)
+.compile()``) -- the legacy ``flare()``/``collect(engine=)`` shims have
+their own coverage in tests/test_stages.py.
 """
 import numpy as np
 import pytest
 
 from conftest import assert_results_equal
-from repro.core import FlareContext, col, flare
+from repro.core import FlareContext, col
 from repro.core import engines as ENG
+from repro.core import stages as S
 from repro.relational import queries as Q
 from repro.relational.tpch import date
 
@@ -24,12 +29,17 @@ def ctx():
     return c
 
 
+def run(df, engine, **params):
+    """Stages-API one-shot: lower -> compile -> execute -> compact."""
+    return df.lower(engine=engine).compile()(**params)
+
+
 @pytest.mark.parametrize("qname", list(Q.QUERIES))
 def test_engines_agree(ctx, qname):
     q = Q.QUERIES[qname](ctx)
-    rv = q.collect(engine="volcano")
-    rs = q.collect(engine="stage")
-    rc = flare(q).collect()
+    rv = run(q, "volcano")
+    rs = run(q, "stage")
+    rc = run(q, "compiled")
     assert_results_equal(rv, rs, msg=f"{qname} stage")
     assert_results_equal(rv, rc, msg=f"{qname} compiled")
 
@@ -37,15 +47,15 @@ def test_engines_agree(ctx, qname):
 @pytest.mark.parametrize("qname", ["q1", "q3", "q6", "q13", "q14"])
 def test_tuple_engine_agrees(ctx, qname):
     q = Q.QUERIES[qname](ctx)
-    rv = q.collect(engine="volcano")
-    rt = q.collect(engine="tuple")
+    rv = run(q, "volcano")
+    rt = run(q, "tuple")
     assert_results_equal(rv, rt, ordered=False, msg=qname)
 
 
 def test_q22_two_phase(ctx):
     binding = Q.q22_params(ctx, "volcano")
-    rv = Q.q22(ctx).collect(engine="volcano", params=binding)
-    rc = Q.q22(ctx).lower("compiled").compile().collect(**binding)
+    rv = run(Q.q22(ctx), "volcano", **binding)
+    rc = run(Q.q22(ctx), "compiled", **binding)
     assert_results_equal(rv, rc, msg="q22")
 
 
@@ -57,16 +67,17 @@ def test_q6_matches_hand_computation(ctx):
     pred = ((ship >= date("1994-01-01")) & (ship < date("1995-01-01"))
             & (disc >= 0.05) & (disc <= 0.07) & (qty < 24.0))
     expected = float((price[pred] * disc[pred]).sum())
-    got = float(flare(Q.q6(ctx)).result().scalar("revenue"))
+    got = float(Q.q6(ctx).lower(engine="compiled").compile()
+                .result().scalar("revenue"))
     np.testing.assert_allclose(got, expected, rtol=2e-3)
 
 
 @pytest.mark.parametrize("qname", ["q3", "q5", "q10", "q19"])
 def test_optimizer_preserves_results(ctx, qname):
     q = Q.QUERIES[qname](ctx)
-    r_opt = ENG.execute(ctx.optimized(q.plan), ctx.catalog,
-                        "volcano").compact()
-    r_raw = ENG.execute(q.plan, ctx.catalog, "volcano").compact()
+    r_opt = S.lower_plan(ctx.optimized(q.plan), ctx.catalog,
+                         engine="volcano").compile()()
+    r_raw = S.lower_plan(q.plan, ctx.catalog, engine="volcano").compile()()
     assert_results_equal(r_raw, r_opt, msg=qname)
 
 
@@ -82,33 +93,33 @@ def test_join_reorder_preserves_results(ctx):
     q = Q.q10(ctx)
     re = OPT.optimize(q.plan, ctx.catalog, join_reorder=True)
     base = OPT.optimize(q.plan, ctx.catalog, join_reorder=False)
-    ra = ENG.execute(re, ctx.catalog, "volcano").compact()
-    rb = ENG.execute(base, ctx.catalog, "volcano").compact()
+    ra = S.lower_plan(re, ctx.catalog, engine="volcano").compile()()
+    rb = S.lower_plan(base, ctx.catalog, engine="volcano").compile()()
     assert_results_equal(ra, rb, msg="reorder q10")
 
 
 def test_join_strategies_agree(ctx):
-    a = flare(Q.join_micro(ctx, "sorted")).collect()
-    b = flare(Q.join_micro(ctx, "sortmerge")).collect()
+    a = run(Q.join_micro(ctx, "sorted"), "compiled")
+    b = run(Q.join_micro(ctx, "sortmerge"), "compiled")
     assert_results_equal(a, b, msg="join strategies")
 
 
 def test_compile_cache_hits(ctx):
-    from repro.core.engines import CompileStats
     q = Q.q6(ctx)
-    s1, s2 = CompileStats(), CompileStats()
-    ctx.execute(q.plan, "compiled", s1)
-    ctx.execute(q.plan, "compiled", s2)
-    assert s2.cache_hit
+    c1 = q.lower(engine="compiled").compile()
+    c2 = q.lower(engine="compiled").compile()
+    assert c2.stats.cache_hit
 
 
 def test_semi_anti_duality(ctx):
     orders = ctx.table("orders")
     li = ctx.table("lineitem").filter(col("l_quantity") > 45.0)
-    semi = orders.join(li, on="o_orderkey", right_on="l_orderkey",
-                       how="semi").count(engine="stage")
-    anti = orders.join(li, on="o_orderkey", right_on="l_orderkey",
-                       how="anti").count(engine="stage")
+    semi = (orders.join(li, on="o_orderkey", right_on="l_orderkey",
+                        how="semi")
+            .lower(engine="stage").compile().count())
+    anti = (orders.join(li, on="o_orderkey", right_on="l_orderkey",
+                        how="anti")
+            .lower(engine="stage").compile().count())
     assert semi + anti == ctx.catalog.table("orders").num_rows
 
 
