@@ -7,6 +7,13 @@ pipelines jit'ed per stage, host round-trips between stages) vs
 whole-query compiled (Flare L2) vs the hand-scheduled Pallas kernel (the
 paper's hand-written C row).
 
+``--native`` additionally runs Q6 through the kernel-dispatch subsystem
+(``df.lower(engine="compiled", native=True)``, repro.native): the
+filter+aggregate fragment lowers onto the generalized Pallas kernel
+inside the whole-query program.  Compiled-vs-native times plus the
+dispatch report land in a JSON report at ``$BENCH_Q6_JSON`` (default
+``bench_q6.json``), consistent with bench_ml.py's CI artifact.
+
 Claims validated (EXPERIMENTS.md section Paper-validation):
   * preload >> direct CSV,
   * whole-query compiled is order(s)-of-magnitude over interpreted,
@@ -15,6 +22,8 @@ Claims validated (EXPERIMENTS.md section Paper-validation):
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import tempfile
 
@@ -29,9 +38,10 @@ from repro.relational import queries as Q
 from repro.relational.tpch import date
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
+JSON_PATH = os.environ.get("BENCH_Q6_JSON", "bench_q6.json")
 
 
-def run() -> None:
+def run(native: bool = False) -> None:
     ctx = FlareContext()
     Q.register_tpch(ctx, sf=SF)
     li = ctx.catalog.table("lineitem")
@@ -98,6 +108,40 @@ def run() -> None:
          vs_unparameterized=round(
              (sum(per_binding) / len(per_binding)) / us_comp, 2))
 
+    # --- native kernel dispatch (repro.native, --native) ---------------------
+    report = {"sf": SF, "rows": n, "compiled_us": round(us_comp, 1)}
+    if native:
+        nlowered = q6.lower(engine="compiled", native=True)
+        ncompiled = nlowered.compile(cache=CompileCache())
+        us_native = time_call(ncompiled.collect, iters=9)
+        drep = nlowered.dispatch_report()
+        emit("q6_native", us_native,
+             fired=";".join(drep.fired_patterns()) or "none",
+             native_vs_compiled=round(us_comp / us_native, 2),
+             lower_s=round(ncompiled.stats.lower_s, 3),
+             compile_s=round(ncompiled.stats.compile_s, 3))
+        # prepared NATIVE template: param() bindings ride as
+        # scalar-prefetch arguments -> still one compilation
+        ncache = CompileCache()
+        native_binding_us = []
+        for b in Q.TEMPLATE_BINDINGS["q6"]:
+            prep = tmpl.lower(engine="compiled",
+                              native=True).compile(cache=ncache)
+            native_binding_us.append(
+                time_call(lambda: prep.collect(**b), iters=9))
+        emit("q6_native_prepared",
+             sum(native_binding_us) / len(native_binding_us),
+             bindings=len(native_binding_us), compiles=ncache.misses,
+             cache_hit_rate=round(ncache.hit_rate, 3))
+        report.update({
+            "native_us": round(us_native, 1),
+            "native_vs_compiled": round(us_comp / us_native, 2),
+            "native_prepared_us": round(
+                sum(native_binding_us) / len(native_binding_us), 1),
+            "native_prepared_compiles": ncache.misses,
+            "dispatch": drep.to_dict(),
+        })
+
     # --- hand-scheduled kernel (the hand-written C row) ----------------------
     import jax.numpy as jnp
     qty = jnp.asarray(li["l_quantity"], jnp.float32)
@@ -121,6 +165,21 @@ def run() -> None:
     emit("q6_stage_overhead", us_stage - us_comp,
          overhead_frac=round((us_stage - us_comp) / us_stage, 3))
 
+    if native:  # JSON report only with --native (mirrors bench_tpch)
+        with open(JSON_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {JSON_PATH}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--native", action="store_true",
+                    help="also run Q6 via native kernel dispatch "
+                         "(df.lower(native=True)) and report the "
+                         "dispatch report in the JSON output")
+    args = ap.parse_args(argv)
+    run(native=args.native)
+
 
 if __name__ == "__main__":
-    run()
+    main()

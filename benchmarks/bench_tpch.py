@@ -7,9 +7,16 @@ time are reported separately (paper section 6.1: "less than 1.5s for all
 queries", Flare ~20% above Spark).  The prepared-query templates
 (q6/q14/q19 selectivity variants) additionally report the compile-cache
 hit rate across bindings: one compile, N executions.
+
+``--native`` adds a native-kernel-dispatch row per query
+(``df.lower(engine="compiled", native=True)``, repro.native) and writes
+compiled-vs-native times plus the per-query dispatch reports to
+``$BENCH_TPCH_JSON`` (default ``bench_tpch.json``).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 
 from benchmarks.common import emit, time_call
@@ -17,13 +24,15 @@ from repro.core import CompileCache, FlareContext
 from repro.relational import queries as Q
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
+JSON_PATH = os.environ.get("BENCH_TPCH_JSON", "bench_tpch.json")
 
 
-def run() -> None:
+def run(native: bool = False) -> None:
     ctx = FlareContext()
     Q.register_tpch(ctx, sf=SF)
     ctx.preload()
 
+    report = {"sf": SF, "queries": {}}
     with_tuple = os.environ.get("BENCH_TUPLE", "1") == "1"
     for name, qf in Q.QUERIES.items():
         q = qf(ctx)
@@ -40,6 +49,21 @@ def run() -> None:
         if with_tuple:
             derived["speedup_vs_tuple"] = round(
                 derived["tuple_us"] / us_c, 1)
+        qrep = {"volcano_us": round(us_v, 1), "stage_us": round(us_s, 1),
+                "compiled_us": round(us_c, 1)}
+        if native:
+            nlowered = q.lower(engine="compiled", native=True)
+            ncompiled = nlowered.compile(cache=CompileCache())
+            us_n = time_call(ncompiled.collect, iters=7)
+            drep = nlowered.dispatch_report()
+            derived["native_us"] = round(us_n, 1)
+            derived["native_fired"] = \
+                ";".join(drep.fired_patterns()) or "none"
+            derived["native_vs_compiled"] = round(us_c / us_n, 2)
+            qrep.update({"native_us": round(us_n, 1),
+                         "native_vs_compiled": round(us_c / us_n, 2),
+                         "dispatch": drep.to_dict()})
+        report["queries"][name] = qrep
         emit(f"tpch_{name}", us_c, volcano_us=round(us_v, 1),
              stage_us=round(us_s, 1),
              speedup_vs_volcano=round(us_v / us_c, 2),
@@ -65,14 +89,30 @@ def run() -> None:
         bindings = Q.TEMPLATE_BINDINGS[name]
         run_us = []
         for b in bindings:
-            compiled = tmpl.lower(engine="compiled").compile(cache=cache)
+            compiled = tmpl.lower(engine="compiled",
+                                  native=native).compile(cache=cache)
             run_us.append(time_call(lambda: compiled.collect(**b),
                                     iters=5))
         emit(f"tpch_{name}_prepared", sum(run_us) / len(run_us),
              bindings=len(bindings),
              compiles=cache.misses,
-             cache_hit_rate=round(cache.hit_rate, 3))
+             cache_hit_rate=round(cache.hit_rate, 3),
+             native=int(native))
+
+    if native:
+        with open(JSON_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {JSON_PATH}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--native", action="store_true",
+                    help="add native-kernel-dispatch rows per query and "
+                         "write the JSON report with dispatch details")
+    args = ap.parse_args(argv)
+    run(native=args.native)
 
 
 if __name__ == "__main__":
-    run()
+    main()

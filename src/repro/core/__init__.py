@@ -20,6 +20,10 @@ from repro.core.stages import (Compiled, CompileCache, Lowered,
                                available_engines, register_engine)
 from repro.core.staging import udf
 
+# registers the native kernel-pattern registry + the "compiled-native"
+# engine alias (import side effect; repro.native builds ON repro.core)
+import repro.native  # noqa: E402,F401  isort: skip
+
 __all__ = [
     "DataFrame", "FlareContext", "FlareDataFrame", "flare",
     "col", "lit", "param", "when", "cast", "udf", "AggSpec", "WithDomain",

@@ -75,11 +75,13 @@ class FlareContext:
                            self.cache, stats, params,
                            compile_cache=self.compile_cache)
 
-    def lower(self, plan: P.Plan, engine: str = "compiled") -> S.Lowered:
+    def lower(self, plan: P.Plan, engine: str = "compiled",
+              native: bool = False) -> S.Lowered:
         """Optimize + lower a plan for ``engine`` (stages entry point)."""
         return S.lower_plan(self.optimized(plan), self.catalog,
                             engine=engine, device_cache=self.cache,
-                            compile_cache=self.compile_cache)
+                            compile_cache=self.compile_cache,
+                            native=native)
 
     def preload(self, *names: str) -> None:
         """Paper's ``persist()``: move table columns to device up-front."""
@@ -217,15 +219,22 @@ class DataFrame:
 
     # -- compilation stages (the first-class execution path) ---------------------
 
-    def lower(self, engine: str = "compiled") -> S.Lowered:
+    def lower(self, engine: str = "compiled",
+              native: bool = False) -> S.Lowered:
         """Optimize + lower this query for ``engine``.
 
         Returns a :class:`repro.core.stages.Lowered`: inspect the plan via
         ``.plan()`` / ``.compiler_ir()``, then ``.compile()`` for an
         executable :class:`repro.core.stages.Compiled` that serves any
         number of parameter bindings.
+
+        ``native=True`` (compiled engine only) additionally runs the
+        :mod:`repro.native` kernel-dispatch pass: hot plan fragments
+        (filter+aggregate, grouped aggregate) lower onto Pallas kernels
+        inside the same program; ``lowered.dispatch_report()`` says what
+        fired and what fell back.
         """
-        return self.ctx.lower(self.plan, engine)
+        return self.ctx.lower(self.plan, engine, native=native)
 
     def params(self) -> Tuple[E.Param, ...]:
         """Param placeholders of this query (binding order)."""

@@ -86,6 +86,10 @@ class CompileStats:
     a field for backward compatibility with pre-stages callers.
     ``cache_hit`` is True when :class:`repro.core.stages.CompileCache`
     already held the compiled executable for this template.
+    ``dispatch`` carries the per-query native-kernel dispatch report
+    (:class:`repro.native.registry.DispatchReport`) when the template
+    was lowered with ``native=True`` / the ``compiled-native`` engine:
+    which kernel patterns fired, which fragments fell back, and why.
     """
 
     trace_compile_s: float = 0.0
@@ -95,6 +99,7 @@ class CompileStats:
     run_s: float = 0.0
     engine: str = ""
     cache_key: Optional[Tuple] = None
+    dispatch: Optional[Any] = None
 
 
 def require_param(params: Optional[Dict[str, Any]], spec: E.Param):
@@ -653,7 +658,8 @@ def execute(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     if stats is not None:
         s = compiled.stats
         (stats.trace_compile_s, stats.cache_hit, stats.lower_s,
-         stats.compile_s, stats.run_s, stats.engine, stats.cache_key) = (
+         stats.compile_s, stats.run_s, stats.engine, stats.cache_key,
+         stats.dispatch) = (
             s.trace_compile_s, s.cache_hit, s.lower_s, s.compile_s,
-            s.run_s, s.engine, s.cache_key)
+            s.run_s, s.engine, s.cache_key, s.dispatch)
     return out

@@ -252,6 +252,9 @@ def _match_str(kind: str, s: str, params: Tuple[str, ...]) -> bool:
 
 
 def static_info(p: P.Plan, catalog: P.Catalog) -> StaticInfo:
+    hook = getattr(p, "static_info_hook", None)
+    if hook is not None:  # custom-lowering nodes (see lower_node)
+        return hook(catalog)
     if isinstance(p, P.Scan):
         return _static_of_scan(catalog.table(p.table))
     if isinstance(p, P.Filter):
@@ -530,6 +533,15 @@ def lower_node(p: P.Plan, catalog: P.Catalog, scans: Dict[int, Stream],
     """
     if id(p) in scans:
         return scans[id(p)]
+    # Custom-lowering protocol: plan nodes provided by subsystems outside
+    # the core (e.g. repro.native's NativeOp kernel annotations) lower
+    # themselves instead of growing this isinstance ladder.  Such a node
+    # implements ``lower_stream(catalog, scans, params) -> Stream`` plus
+    # ``static_info_hook(catalog)`` and ``required_columns_hook(rec,
+    # needed)`` for the phase-A analyses.
+    hook = getattr(p, "lower_stream", None)
+    if hook is not None:
+        return hook(catalog, scans, params)
     if isinstance(p, P.Scan):
         raise KeyError(f"unbound scan {p.table}")
     if isinstance(p, P.Filter):
@@ -706,6 +718,8 @@ def required_scan_columns(p: P.Plan, catalog: P.Catalog) -> Dict[int, List[str]]
             rec(node.child, need)
         elif isinstance(node, P.IterativeKernel):
             rec(node.child, set(node.required_columns()))
+        elif hasattr(node, "required_columns_hook"):
+            node.required_columns_hook(rec, needed)
         else:
             raise TypeError(node)
 

@@ -438,7 +438,8 @@ class Lowered:
     def __init__(self, p: P.Plan, catalog: P.Catalog, engine: Engine,
                  param_specs: Tuple[E.Param, ...], key: Tuple,
                  device_cache: ENG.DeviceCache,
-                 compile_cache: CompileCache):
+                 compile_cache: CompileCache,
+                 dispatch_report: Optional[Any] = None):
         self._plan = p
         self._catalog = catalog
         self._engine = engine
@@ -446,6 +447,7 @@ class Lowered:
         self._key = key
         self._device_cache = device_cache
         self._compile_cache = compile_cache
+        self._dispatch_report = dispatch_report
         self._artifact: Any = None
         self._lower_s = 0.0
 
@@ -470,6 +472,13 @@ class Lowered:
         """Param placeholders (sorted by name = binding order)."""
         return self._param_specs
 
+    def dispatch_report(self) -> Optional[Any]:
+        """Native kernel dispatch report
+        (:class:`repro.native.registry.DispatchReport`): which patterns
+        fired and which fragments fell back.  None unless this template
+        was lowered with ``native=True`` / ``compiled-native``."""
+        return self._dispatch_report
+
     def compiler_ir(self, dialect: Optional[str] = None) -> Any:
         """Engine IR: jaxpr/stablehlo (compiled), stage list (stage),
         plan text (interpreters)."""
@@ -489,7 +498,8 @@ class Lowered:
         """Compile (or fetch from ``cache``) the executable for this
         template; returns a :class:`Compiled` with fresh CompileStats."""
         cache = cache if cache is not None else self._compile_cache
-        stats = CompileStats(engine=self._engine.name, cache_key=self._key)
+        stats = CompileStats(engine=self._engine.name, cache_key=self._key,
+                             dispatch=self._dispatch_report)
         exe = cache.lookup(self._key)
         if exe is None:
             artifact = self._force()
@@ -567,13 +577,32 @@ class Compiled:
 
 def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
                device_cache: Optional[ENG.DeviceCache] = None,
-               compile_cache: Optional[CompileCache] = None) -> Lowered:
+               compile_cache: Optional[CompileCache] = None,
+               native: bool = False) -> Lowered:
     """Lower an (already optimized) plan for ``engine``.
 
     The DataFrame front end (``df.lower(engine=...)``) optimizes first
     and passes its context's device + compile caches; direct callers get
     process-wide defaults.
+
+    ``native=True`` (or ``engine="compiled-native"``, the registry
+    alias) runs the :mod:`repro.native` dispatch pass over the plan
+    first: fragments matched by the kernel-pattern registry lower onto
+    Pallas kernels inside the same whole-query program, everything else
+    keeps its jnp lowering, and the per-query
+    :class:`repro.native.registry.DispatchReport` lands on
+    ``Lowered.dispatch_report()`` / ``CompileStats.dispatch``.
     """
+    if native and engine == "compiled":
+        engine = "compiled-native"
+    dispatch_report = None
+    if engine == "compiled-native":
+        # lazy import: registers the patterns + the engine alias
+        from repro.native import dispatch as ND
+        p, dispatch_report = ND.rewrite_plan(p, catalog)
+    elif native:
+        raise ValueError(
+            f"native=True requires the 'compiled' engine, got {engine!r}")
     eng = get_engine(engine)
     specs = P.params_of(p)
     key = template_key(engine, p, catalog)
@@ -581,4 +610,5 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
                    device_cache if device_cache is not None
                    else ENG._DEFAULT_CACHE,
                    compile_cache if compile_cache is not None
-                   else _DEFAULT_COMPILE_CACHE)
+                   else _DEFAULT_COMPILE_CACHE,
+                   dispatch_report=dispatch_report)

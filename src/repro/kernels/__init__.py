@@ -12,5 +12,13 @@ Layout per subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec),
 (pure-jnp oracle used by the allclose sweep tests).
 
 Kernels execute with ``interpret=True`` on CPU (this container) and
-compile natively on TPU; ``ops`` picks the mode from the backend.
+compile natively on TPU; ``ops`` picks the mode from the backend via
+:func:`should_interpret` -- the ONE place the fallback policy lives
+(the native dispatch pass uses it too).
 """
+import jax
+
+
+def should_interpret() -> bool:
+    """Pallas interpret-mode fallback: anything that is not a TPU."""
+    return jax.default_backend() != "tpu"

@@ -21,6 +21,7 @@ block_rows=256 that is 4 * 128 KiB = 512 KiB of VMEM, far under the
 from __future__ import annotations
 
 import functools
+from typing import Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,3 +82,69 @@ def filter_agg_q6(quantity: jnp.ndarray, price: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)],
         interpret=interpret,
     )(quantity, price, discount, shipdate)
+
+
+# ---------------------------------------------------------------------------
+# generalized filter + multi-aggregate scan (repro.native dispatch target)
+# ---------------------------------------------------------------------------
+
+#: value_fn(scal_ref, col_blocks) -> one [block_rows, 128] f32 array per
+#: accumulator, already predicate-masked (failed rows carry 0).  The body
+#: is BUILT from the query's expression tree by ``repro.native.patterns``
+#: -- the per-query specialization Flare gets by generating C, here a
+#: per-fragment Pallas kernel body.
+ValueFn = Callable[..., List[jnp.ndarray]]
+
+
+def filter_agg_general(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
+                       scal: jnp.ndarray, n_out: int, block_rows: int,
+                       interpret: bool = False) -> List[jnp.ndarray]:
+    """Fused filter + N-way accumulate over arbitrary column sets.
+
+    Generalizes :func:`filter_agg_q6`: instead of baked-in query
+    constants, ``scal`` is a 1-D f32 vector of *runtime* parameters
+    delivered via scalar prefetch, so one compiled kernel serves every
+    binding of a prepared-query template.  ``cols`` are [rows, 128]
+    lane-aligned f32 blocks (pre-padded with predicate-failing values by
+    the caller); returns ``n_out`` [1, 128] lane-wise partial sums (the
+    final lane reduce happens in the caller).
+    """
+    rows = cols[0].shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    n_cols = len(cols)
+
+    def kern(scal_ref, *refs):
+        col_refs = refs[:n_cols]
+        out_refs = refs[n_cols:n_cols + n_out]
+        acc_refs = refs[n_cols + n_out:]
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            for a in acc_refs:
+                a[...] = jnp.zeros_like(a)
+
+        vals = value_fn(scal_ref, [r[...] for r in col_refs])
+        assert len(vals) == n_out, (len(vals), n_out)
+        for j in range(n_out):
+            acc_refs[j][...] += jnp.sum(vals[j], axis=0, keepdims=True)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _flush():
+            for j in range(n_out):
+                out_refs[j][...] = acc_refs[j][...]
+
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(rows // block_rows,),
+        in_specs=[spec] * n_cols,
+        out_specs=[pl.BlockSpec((1, LANES), lambda i, s: (0, 0))] * n_out,
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)] * n_out,
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=[jax.ShapeDtypeStruct((1, LANES), jnp.float32)] * n_out,
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(scal, *cols)

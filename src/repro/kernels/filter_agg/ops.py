@@ -2,23 +2,34 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import should_interpret
 from repro.kernels.filter_agg import kernel as K
 
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+_should_interpret = should_interpret  # backward-compatible private alias
 
 
-def _pad_reshape(x: jnp.ndarray, rows_mult: int, fill) -> jnp.ndarray:
+def clamp_block_rows(n: int, block_rows: int) -> int:
+    """Shrink ``block_rows`` for inputs smaller than one full block."""
+    if n < block_rows * K.LANES:
+        block_rows = max(1, n // K.LANES)
+    return block_rows
+
+
+def pad_reshape(x: jnp.ndarray, block_rows: int, fill) -> jnp.ndarray:
+    """Pad a 1-D column to a block multiple and reshape to [rows, 128]."""
     n = x.shape[0]
-    per_block = rows_mult * K.LANES
+    per_block = block_rows * K.LANES
     padded = (n + per_block - 1) // per_block * per_block
     x = jnp.pad(x, (0, padded - n), constant_values=fill)
     return x.reshape(padded // K.LANES, K.LANES)
+
+
+_pad_reshape = pad_reshape  # backward-compatible private alias
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -28,18 +39,21 @@ def filter_agg_q6(quantity, price, discount, shipdate, *,
                   date_lo: int, date_hi: int, disc_lo: float,
                   disc_hi: float, qty_hi: float,
                   block_rows: int = K.DEFAULT_BLOCK_ROWS,
-                  interpret: bool = None) -> jnp.ndarray:
-    """Q6 revenue over 1-D columns of any length; returns a f32 scalar."""
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Q6 revenue over 1-D columns of any length; returns a f32 scalar.
+
+    ``interpret=None`` picks the mode from the backend (Pallas interpret
+    everywhere except TPU); pass an explicit bool to force it.
+    """
     if interpret is None:
-        interpret = _should_interpret()
+        interpret = should_interpret()
     n = quantity.shape[0]
-    if n < block_rows * K.LANES:  # small inputs: one partial block
-        block_rows = max(1, n // K.LANES) or 1
+    block_rows = clamp_block_rows(n, block_rows)
     # pad with values that FAIL the predicate (quantity = +inf)
-    qty = _pad_reshape(quantity.astype(jnp.float32), block_rows, jnp.inf)
-    price_ = _pad_reshape(price.astype(jnp.float32), block_rows, 0.0)
-    disc = _pad_reshape(discount.astype(jnp.float32), block_rows, 0.0)
-    date = _pad_reshape(shipdate.astype(jnp.int32), block_rows, 0)
+    qty = pad_reshape(quantity.astype(jnp.float32), block_rows, jnp.inf)
+    price_ = pad_reshape(price.astype(jnp.float32), block_rows, 0.0)
+    disc = pad_reshape(discount.astype(jnp.float32), block_rows, 0.0)
+    date = pad_reshape(shipdate.astype(jnp.int32), block_rows, 0)
     lanes = K.filter_agg_q6(
         qty, price_, disc, date,
         date_lo=date_lo, date_hi=date_hi, disc_lo=disc_lo,

@@ -18,6 +18,8 @@ it at 8 MiB -- inside budget.  ops.py enforces/falls back.
 """
 from __future__ import annotations
 
+from typing import Callable, List, Sequence
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -70,3 +72,74 @@ def segmented_sum(values: jnp.ndarray, codes: jnp.ndarray, num_groups: int,
         scratch_shapes=[pltpu.VMEM((1, num_groups), jnp.float32)],
         interpret=interpret,
     )(values, codes)
+
+
+# ---------------------------------------------------------------------------
+# multi-aggregate variant (repro.native dispatch target)
+# ---------------------------------------------------------------------------
+
+#: value_fn(scal_ref, col_blocks, code_block) -> one [block_rows, 128]
+#: f32 array per aggregate row, already mask/predicate-weighted.  Built
+#: from the query's expression tree by ``repro.native.patterns``.
+ValueFn = Callable[..., List[jnp.ndarray]]
+
+
+def segmented_multi_sum(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
+                        codes: jnp.ndarray, scal: jnp.ndarray, n_out: int,
+                        num_groups: int, block_rows: int,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Grouped multi-aggregate: ``out[j, g] = sum_i vals_j[i] * [code_i == g]``.
+
+    One one-hot tile per block is shared by all ``n_out`` aggregates --
+    the scatter becomes a single ``[n_out, N] @ [N, G]`` MXU matmul per
+    block (the Q1 hot loop with every sum/count/avg accumulated in one
+    pass).  ``scal`` carries runtime query parameters via scalar
+    prefetch, so prepared templates keep ONE compilation across
+    bindings.  Inputs are [rows, 128] pre-padded blocks (padded elements
+    must carry value 0; out-of-range codes never match a group).
+    Returns [n_out, G] f32 group sums.
+    """
+    rows = codes.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert num_groups <= MAX_GROUPS
+    n_cols = len(cols)
+
+    def kern(scal_ref, *refs):
+        col_refs = refs[:n_cols]
+        code_ref = refs[n_cols]
+        o_ref, acc_ref = refs[n_cols + 1], refs[n_cols + 2]
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        code_block = code_ref[...]
+        vals = value_fn(scal_ref, [r[...] for r in col_refs], code_block)
+        assert len(vals) == n_out, (len(vals), n_out)
+        flat_v = jnp.stack([v.reshape(-1) for v in vals])   # [n_out, N]
+        flat_c = code_block.reshape(-1)                     # [N]
+        onehot = (jax.lax.broadcasted_iota(
+            jnp.int32, (flat_c.shape[0], num_groups), 1)
+            == flat_c[:, None]).astype(jnp.float32)
+        acc_ref[...] += jnp.dot(flat_v, onehot,
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _flush():
+            o_ref[...] = acc_ref[...]
+
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(rows // block_rows,),
+        in_specs=[spec] * (n_cols + 1),
+        out_specs=pl.BlockSpec((n_out, num_groups), lambda i, s: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((n_out, num_groups), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n_out, num_groups), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(scal, *cols, codes)

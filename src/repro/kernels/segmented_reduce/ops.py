@@ -2,32 +2,36 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import should_interpret
 from repro.kernels.segmented_reduce import kernel as K
 from repro.kernels.segmented_reduce.ref import segmented_sum_ref
 
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+_should_interpret = should_interpret  # backward-compatible private alias
 
 
 @functools.partial(jax.jit,
                    static_argnames=("num_groups", "block_rows", "interpret"))
 def segmented_sum(values: jnp.ndarray, codes: jnp.ndarray, num_groups: int,
                   block_rows: int = K.DEFAULT_BLOCK_ROWS,
-                  interpret: bool = None) -> jnp.ndarray:
-    """Group sums of 1-D ``values`` by 1-D int ``codes`` in [0, G)."""
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Group sums of 1-D ``values`` by 1-D int ``codes`` in [0, G).
+
+    ``interpret=None`` picks the mode from the backend (Pallas interpret
+    everywhere except TPU); pass an explicit bool to force it.
+    """
     if interpret is None:
-        interpret = _should_interpret()
+        interpret = should_interpret()
     if num_groups > K.MAX_GROUPS:
         # one-hot tile would blow VMEM; scatter path (XLA handles it)
         return segmented_sum_ref(values, codes, num_groups)
     n = values.shape[0]
     if n < block_rows * K.LANES:
-        block_rows = max(1, n // K.LANES) or 1
+        block_rows = max(1, n // K.LANES)
     per_block = block_rows * K.LANES
     padded = (n + per_block - 1) // per_block * per_block
     v = jnp.pad(values.astype(jnp.float32), (0, padded - n))

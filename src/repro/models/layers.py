@@ -523,7 +523,18 @@ def moe_shardmap(p: Dict, c: MoEConfig, x: jnp.ndarray, sc: ShardingCtx
         top_p, top_e = jax.lax.top_k(probs, k)
         top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
         assign = jax.nn.one_hot(top_e[:, 0], e, dtype=F32)
-        aux = e * jnp.mean(assign.mean(0) * probs.mean(0))
+        # Switch aux loss over GLOBAL token statistics: the per-expert
+        # fractions and mean probs must be pmean'd over the data axes
+        # BEFORE the product, else each data shard contributes
+        # f_e^local * P_e^local and the product of local means diverges
+        # from the dense reference's global f_e * P_e.
+        am, pm = assign.mean(0), probs.mean(0)
+        data_axes = ((bspec,) if isinstance(bspec, str)
+                     else tuple(bspec or ()))
+        if data_axes:
+            am = jax.lax.pmean(am, data_axes)
+            pm = jax.lax.pmean(pm, data_axes)
+        aux = e * jnp.mean(am * pm)
         aux = jax.lax.pmean(aux, "model")
 
         onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)

@@ -1,0 +1,34 @@
+"""repro.native -- native kernel dispatch for the compiled engine.
+
+The subsystem that turns the whole-query engine from "fused interpreter
+over XLA" into the paper's "generates specialized native operators"
+(sections 1, 4.1): a registry of :class:`KernelPattern` entries
+(``registry``), built-in patterns that pattern-match Filter/Project/
+Aggregate fragments onto the Pallas kernels in ``repro.kernels``
+(``patterns``), and the post-optimizer rewrite pass + ``compiled-native``
+engine alias that hook the matched fragments into
+``lower.build_callable`` (``dispatch``).
+
+Use via the stages API::
+
+    lowered  = df.lower(engine="compiled", native=True)
+    lowered.dispatch_report()        # which patterns fired / fell back
+    compiled = lowered.compile()     # ONE XLA program incl. the kernels
+    compiled(**params)               # prepared bindings, zero recompiles
+
+Importing this package registers the built-in patterns and the
+``compiled-native`` engine.
+"""
+from repro.native.dispatch import (NativeOp, NativeWholeQueryEngine,
+                                   has_native_ops, rewrite_plan)
+from repro.native.patterns import ExprCompiler, UnsupportedExpr
+from repro.native.registry import (Decision, DispatchReport, Fragment,
+                                   KernelPattern, available_patterns,
+                                   get_pattern, patterns, register_pattern)
+
+__all__ = [
+    "NativeOp", "NativeWholeQueryEngine", "has_native_ops", "rewrite_plan",
+    "ExprCompiler", "UnsupportedExpr",
+    "Decision", "DispatchReport", "Fragment", "KernelPattern",
+    "available_patterns", "get_pattern", "patterns", "register_pattern",
+]

@@ -1,0 +1,150 @@
+"""The dispatch pass: annotate matched fragments, hook into lowering.
+
+Runs AFTER the optimizer (``repro.core.stages.lower_plan`` with
+``native=True`` or the ``compiled-native`` engine alias): every
+dispatchable fragment is wrapped in a :class:`NativeOp` annotation node
+carrying the pattern's pre-built emitter; everything else keeps its
+generic jnp lowering.  ``NativeOp`` implements the custom-lowering
+protocol of ``repro.core.lower`` (``lower_stream`` /
+``static_info_hook`` / ``required_columns_hook``), so
+``lower.build_callable`` traces the kernel call into the SAME
+whole-query XLA program as the surrounding operators.
+
+Off-TPU the emitters run the Pallas kernels in interpret mode
+(automatic fallback, recorded as the decision's ``mode``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+from repro.core import lower as L
+from repro.core import plan as P
+from repro.core import stages as S
+from repro.kernels import should_interpret
+from repro.native import patterns as PAT
+from repro.native import registry as R
+
+
+@dataclasses.dataclass(eq=False)
+class NativeOp(P.Plan):
+    """Annotation node: ``child`` (the matched fragment root, subtree
+    intact) lowers through ``emitter`` onto a Pallas kernel instead of
+    the generic jnp path.  Transparent for schema/static-info/column
+    analysis; opaque (and pattern-tagged) for fingerprints, so native
+    templates never share a compile-cache entry with plain compiled
+    ones."""
+
+    child: P.Plan
+    pattern: str
+    emitter: R.Emitter
+    interpret: bool
+
+    def children(self) -> Tuple[P.Plan, ...]:
+        return (self.child,)
+
+    def with_children(self, kids):
+        return NativeOp(kids[0], self.pattern, self.emitter, self.interpret)
+
+    def infer_schema(self, catalog):
+        return self.child.schema(catalog)
+
+    def describe(self):
+        mode = "interpret" if self.interpret else "pallas"
+        return f"NativeKernel[{self.pattern}/{mode}]"
+
+    def fingerprint(self):
+        mode = "interpret" if self.interpret else "pallas"
+        return f"native[{self.pattern}:{mode}]({self.child.fingerprint()})"
+
+    # -- repro.core.lower custom-lowering protocol ---------------------------
+
+    def static_info_hook(self, catalog) -> L.StaticInfo:
+        return L.static_info(self.child, catalog)
+
+    def required_columns_hook(self, rec, needed) -> None:
+        rec(self.child, needed)
+
+    def lower_stream(self, catalog, scans, params) -> L.Stream:
+        boundary = PAT.boundary_of(self.child)
+        bstream = L.lower_node(boundary, catalog, scans, params)
+        return self.emitter(bstream, params, self.interpret)
+
+
+def has_native_ops(p: P.Plan) -> bool:
+    if isinstance(p, NativeOp):
+        return True
+    return any(has_native_ops(c) for c in p.children())
+
+
+def rewrite_plan(p: P.Plan, catalog: P.Catalog,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[P.Plan, R.DispatchReport]:
+    """Pattern-match the optimized plan bottom-up; wrap every eligible
+    fragment in a :class:`NativeOp`.  Returns the annotated plan and the
+    per-query :class:`repro.native.registry.DispatchReport` (which
+    patterns fired, which fragments fell back, and why)."""
+    if interpret is None:
+        interpret = should_interpret()  # same policy as the kernel ops
+    mode = "interpret" if interpret else "pallas"
+    report = R.DispatchReport()
+
+    def rule(n: P.Plan) -> Optional[P.Plan]:
+        if not isinstance(n, P.Aggregate):
+            return None
+        reasons = []
+        # one fragment walk per node, shared by the sibling matchers
+        # (and, via Fragment.analysis, by eligibility + emitter)
+        shared = PAT.match_fragment(n, catalog)
+        for pat in R.patterns():
+            frag = pat.matcher(n, catalog, shared)
+            if frag is None:
+                continue
+            if interpret and not pat.supports_interpret:
+                reasons.append(f"{pat.name}: no interpret-mode support "
+                               "off-TPU")
+                continue
+            ok, reason = pat.eligibility(frag, catalog)
+            if not ok:
+                reasons.append(f"{pat.name}: {reason}")
+                continue
+            emitter = pat.emitter(frag, catalog)
+            report.add(R.Decision(pattern=pat.name, node=n.describe(),
+                                  fired=True, mode=mode, reason="ok"))
+            return NativeOp(n, pat.name, emitter, interpret)
+        report.add(R.Decision(
+            pattern="", node=n.describe(), fired=False, mode="",
+            reason="; ".join(reasons) if reasons else "no pattern matched"))
+        return None
+
+    out = P.transform(p, rule)
+    # mark the root so NativeWholeQueryEngine.lower can tell "dispatch
+    # ran, everything fell back" from "dispatch never ran" without
+    # re-running the whole pass on all-fallback plans
+    out._native_dispatched = True
+    return out, report
+
+
+# ---------------------------------------------------------------------------
+# the "compiled-native" registry alias
+# ---------------------------------------------------------------------------
+
+
+class NativeWholeQueryEngine(S.WholeQueryEngine):
+    """Whole-query compilation with native kernel dispatch.
+
+    Registered as ``compiled-native`` so the Engine-protocol surface
+    works standalone; ``stages.lower_plan`` normally annotates the plan
+    (and captures the dispatch report) before this engine sees it, in
+    which case ``lower`` is exactly the whole-query path."""
+
+    name = "compiled-native"
+
+    def lower(self, p: P.Plan, catalog: P.Catalog,
+              param_specs) -> Any:
+        if not getattr(p, "_native_dispatched", False):
+            p, _ = rewrite_plan(p, catalog)
+        return super().lower(p, catalog, param_specs)
+
+
+S.register_engine(NativeWholeQueryEngine())

@@ -1,0 +1,617 @@
+"""Built-in kernel patterns: plan fragments the Pallas kernels can serve.
+
+Three patterns register at import (HiFrames-style pattern matching of
+dataframe plan fragments onto specialized parallel implementations):
+
+* ``filter-scalar-agg``    -- keyless Aggregate over a Filter/Project
+  prologue rooted at a Scan: the paper's Fig. 3 Q6 loop, generalized.
+  The predicate tree and the aggregate value expressions are compiled
+  into the kernel body; :func:`repro.core.expr.param` placeholders
+  become *scalar-prefetch* runtime arguments, so a prepared template
+  (q6 and friends) stays ONE compilation across bindings.
+* ``grouped-agg``          -- keyed Aggregate over the same prologue,
+  lowered onto the one-hot-matmul segmented reduction
+  (``kernels/segmented_reduce``), multi-aggregate: every sum/count/avg
+  accumulates in a single ``[n_out, N] @ [N, G]`` MXU pass over the
+  dense group layout ``lower.py`` already computes.
+* ``masked-filter-project`` -- either of the above where the fragment
+  sits mid-pipeline (its boundary stream carries a validity mask, e.g.
+  downstream of a join): the mask streams into the kernel as a weight
+  column and the same emitters apply.
+
+Expression support inside the kernel body mirrors the compiled engine's
+TPU-legal lowering: arithmetic/comparison/boolean trees, dictionary-code
+comparisons against string literals, ``isin`` as code tests, and string
+predicates evaluated on the (sorted) dictionary at dispatch time and
+baked in as *code ranges*.  Anything else (LUT gathers that will not
+vectorise, staged UDFs, truncating int casts) makes the fragment
+ineligible -- it keeps its generic jnp lowering and the dispatch report
+says why.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core import lower as L
+from repro.core import plan as P
+from repro.kernels.filter_agg import kernel as FA_K
+from repro.kernels.filter_agg import ops as FA_OPS
+from repro.kernels.segmented_reduce import kernel as SR_K
+from repro.native import registry as R
+from repro.relational import table as T
+
+LANES = R.LANES
+
+#: Largest f32-exactly-representable integer: int columns streamed into a
+#: kernel are cast to f32, so their domain must stay below this.
+F32_EXACT = 1 << 24
+
+#: A string predicate whose dictionary LUT fragments into more code
+#: ranges than this is cheaper as the generic LUT gather -- fall back.
+MAX_STRPRED_RANGES = 16
+
+
+class UnsupportedExpr(TypeError):
+    """Expression form the kernel body cannot express; fragment falls
+    back to the generic jnp lowering (recorded in the dispatch report)."""
+
+
+class _NoMatch(Exception):
+    """Structural mismatch while walking a fragment (not an error)."""
+
+
+# ---------------------------------------------------------------------------
+# expression tree -> kernel-body closure
+# ---------------------------------------------------------------------------
+
+_CMP_OPS = {"<": jnp.less, "<=": jnp.less_equal, ">": jnp.greater,
+            ">=": jnp.greater_equal, "==": jnp.equal, "!=": jnp.not_equal}
+_FLIP = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "==": "==", "!=": "!="}
+
+
+def _as_bool(x):
+    """Coerce an f32 0/1 column (bool columns stream as f32) to bool."""
+    if hasattr(x, "dtype") and x.dtype == jnp.bool_:
+        return x
+    return x > 0.5
+
+
+class ExprCompiler:
+    """Compile an expression tree (in boundary-column terms) into a
+    closure ``fn(cols, scal) -> block`` evaluated *inside* the kernel
+    body, where ``cols`` maps column name -> [rows, 128] f32 block and
+    ``scal`` maps param name -> scalar-prefetch value.
+
+    Dictionary contents come from the boundary's phase-A static info, so
+    string comparisons resolve to integer code tests at dispatch time --
+    the same specialization the whole-query engine bakes in, now baked
+    into a Pallas kernel.  Referenced columns and params are collected
+    on ``self.cols`` / ``self.params`` for the emitter's input layout.
+    """
+
+    def __init__(self, binfo: L.StaticInfo):
+        self.binfo = binfo
+        self.schema = T.Schema([T.Field(n, sc.dtype, sc.domain)
+                                for n, sc in binfo.cols.items()])
+        self.cols: Set[str] = set()
+        self.params: Set[str] = set()
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _dict_of(self, e: E.Expr):
+        if isinstance(e, E.Col):
+            return self.binfo.cols[e.name].dictionary
+        return None
+
+    def compile(self, e: E.Expr) -> Callable[[Dict, Dict], Any]:
+        if isinstance(e, E.Col):
+            self.cols.add(e.name)
+            name = e.name
+            return lambda cols, scal: cols[name]
+        if isinstance(e, E.Lit):
+            if isinstance(e.value, str):
+                raise UnsupportedExpr("string literal outside comparison")
+            v = float(e.value)
+            return lambda cols, scal: v
+        if isinstance(e, E.Param):
+            self.params.add(e.name)
+            name = e.name
+            return lambda cols, scal: scal[name]
+        if isinstance(e, E.BinOp):
+            lf, rf = self.compile(e.left), self.compile(e.right)
+            op = e.op
+            if op == "+":
+                return lambda cols, scal: lf(cols, scal) + rf(cols, scal)
+            if op == "-":
+                return lambda cols, scal: lf(cols, scal) - rf(cols, scal)
+            if op == "*":
+                return lambda cols, scal: lf(cols, scal) * rf(cols, scal)
+            if op == "/":
+                # everything streams as f32: true division, like the
+                # compiled engine's float-promoting "/"
+                return lambda cols, scal: lf(cols, scal) / rf(cols, scal)
+            raise UnsupportedExpr(f"binop {op!r}")
+        if isinstance(e, E.Cmp):
+            return self._compile_cmp(e)
+        if isinstance(e, E.BoolOp):
+            fns = [self.compile(a) for a in e.args]
+            is_and = e.op == "and"
+
+            def run_bool(cols, scal):
+                out = _as_bool(fns[0](cols, scal))
+                for fn in fns[1:]:
+                    v = _as_bool(fn(cols, scal))
+                    out = (out & v) if is_and else (out | v)
+                return out
+
+            return run_bool
+        if isinstance(e, E.Not):
+            f = self.compile(e.arg)
+            return lambda cols, scal: ~_as_bool(f(cols, scal))
+        if isinstance(e, E.InSet):
+            return self._compile_inset(e)
+        if isinstance(e, E.StrPred):
+            return self._compile_strpred(e)
+        if isinstance(e, E.IfThenElse):
+            cf = self.compile(e.cond)
+            tf, of = self.compile(e.then), self.compile(e.other)
+            return lambda cols, scal: jnp.where(_as_bool(cf(cols, scal)),
+                                                tf(cols, scal),
+                                                of(cols, scal))
+        if isinstance(e, E.Cast):
+            src = E.infer_dtype(e.arg, self.schema)
+            if e.dtype in (T.INT32, T.INT64, T.DATE) and \
+                    src in (T.FLOAT32, T.FLOAT64):
+                raise UnsupportedExpr("truncating float->int cast")
+            f = self.compile(e.arg)
+            if e.dtype == T.BOOL and src != T.BOOL:
+                # astype(bool) is `!= 0`, NOT the 0/1-column `> 0.5`
+                # coercion _as_bool applies to stored bool columns
+                return lambda cols, scal: f(cols, scal) != 0
+            # numeric casts are identities: all kernel values are f32
+            return f
+        if isinstance(e, E.WithDomain):
+            return self.compile(e.arg)
+        raise UnsupportedExpr(type(e).__name__)
+
+    def _compile_cmp(self, e: E.Cmp):
+        ldict, rdict = self._dict_of(e.left), self._dict_of(e.right)
+        if ldict is not None and isinstance(e.right, E.Lit) \
+                and isinstance(e.right.value, str):
+            return self._code_cmp(e.op, self.compile(e.left), ldict,
+                                  e.right.value)
+        if rdict is not None and isinstance(e.left, E.Lit) \
+                and isinstance(e.left.value, str):
+            return self._code_cmp(_FLIP[e.op], self.compile(e.right), rdict,
+                                  e.left.value)
+        if ldict is not None and rdict is not None and ldict != rdict:
+            raise UnsupportedExpr("cross-dictionary string comparison")
+        lf, rf = self.compile(e.left), self.compile(e.right)
+        opf = _CMP_OPS[e.op]
+        return lambda cols, scal: opf(lf(cols, scal), rf(cols, scal))
+
+    def _code_cmp(self, op: str, codes_fn, dictionary, value: str):
+        """String-literal comparison as an integer code test (codes are
+        in sorted-dictionary == lexical order), absent-literal semantics
+        identical to ``lower._cmp_with_code``."""
+        code = L._str_code(dictionary, value)
+        if code < 0:
+            if op == "==":
+                return lambda cols, scal: jnp.zeros_like(
+                    codes_fn(cols, scal), jnp.bool_)
+            if op == "!=":
+                return lambda cols, scal: jnp.ones_like(
+                    codes_fn(cols, scal), jnp.bool_)
+            ins = float(np.searchsorted(np.asarray(dictionary, dtype=object),
+                                        value))
+            if op in ("<", "<="):
+                return lambda cols, scal: codes_fn(cols, scal) < ins
+            return lambda cols, scal: codes_fn(cols, scal) >= ins
+        opf = _CMP_OPS[op]
+        c = float(code)
+        return lambda cols, scal: opf(codes_fn(cols, scal), c)
+
+    def _compile_inset(self, e: E.InSet):
+        d = self._dict_of(e.arg)
+        arg_fn = self.compile(e.arg)
+        if d is not None:
+            vals = [float(c) for c in (L._str_code(d, v) for v in e.values)
+                    if c >= 0]
+            if not vals:
+                return lambda cols, scal: jnp.zeros_like(
+                    arg_fn(cols, scal), jnp.bool_)
+        else:
+            if any(isinstance(v, str) for v in e.values):
+                raise UnsupportedExpr("isin(strings) on non-dict column")
+            vals = [float(v) for v in e.values]
+
+        def run_inset(cols, scal):
+            a = arg_fn(cols, scal)
+            out = a == vals[0]
+            for v in vals[1:]:
+                out = out | (a == v)
+            return out
+
+        return run_inset
+
+    def _compile_strpred(self, e: E.StrPred):
+        d = self._dict_of(e.arg)
+        if d is None:
+            raise UnsupportedExpr(f"{e.kind} on non-string column")
+        lut = [L._match_str(e.kind, s, e.params) for s in d]
+        ranges = _lut_ranges(lut)
+        if len(ranges) > MAX_STRPRED_RANGES:
+            raise UnsupportedExpr(
+                f"{e.kind} LUT fragments into {len(ranges)} code ranges")
+        arg_fn = self.compile(e.arg)
+
+        def run_strpred(cols, scal):
+            a = arg_fn(cols, scal)
+            out = jnp.zeros_like(a, jnp.bool_)
+            for lo, hi in ranges:
+                if hi == lo + 1:
+                    out = out | (a == float(lo))
+                else:
+                    out = out | ((a >= float(lo)) & (a < float(hi)))
+            return out
+
+        return run_strpred
+
+
+def _lut_ranges(lut: List[bool]) -> List[Tuple[int, int]]:
+    """Maximal [lo, hi) runs of True in a boolean dictionary LUT.  The
+    dictionary is sorted, so prefix predicates compress to ONE range."""
+    ranges: List[Tuple[int, int]] = []
+    i, n = 0, len(lut)
+    while i < n:
+        if lut[i]:
+            j = i
+            while j < n and lut[j]:
+                j += 1
+            ranges.append((i, j))
+            i = j
+        else:
+            i += 1
+    return ranges
+
+
+# ---------------------------------------------------------------------------
+# fragment matching
+# ---------------------------------------------------------------------------
+
+_PROLOGUE = (P.Filter, P.Project)
+
+
+def boundary_of(root: P.Plan) -> P.Plan:
+    """First non-Filter/Project descendant below an Aggregate root: the
+    node whose stream the kernel consumes."""
+    node = root.child if isinstance(root, P.Aggregate) else root
+    while isinstance(node, _PROLOGUE):
+        node = node.child
+    return node
+
+
+def match_fragment(node: P.Plan, catalog: P.Catalog) -> Optional[R.Fragment]:
+    """Walk the Filter/Project prologue under an Aggregate and rebase
+    every expression (filter conjuncts, aggregate args, group keys) onto
+    boundary-column terms.  Returns None on structural mismatch."""
+    if not isinstance(node, P.Aggregate):
+        return None
+    chain: List[P.Plan] = []
+    cur = node.child
+    while isinstance(cur, _PROLOGUE):
+        chain.append(cur)
+        cur = cur.child
+    boundary = cur
+    try:
+        binfo = L.static_info(boundary, catalog)
+    except TypeError:
+        return None
+    mapping: Dict[str, E.Expr] = {n: E.col(n) for n in binfo.cols}
+
+    def sub(e: E.Expr) -> E.Expr:
+        def repl(x: E.Expr) -> Optional[E.Expr]:
+            if isinstance(x, E.Col):
+                if x.name not in mapping:
+                    raise _NoMatch()
+                return mapping[x.name]
+            return None
+
+        return E.map_expr(e, repl)
+
+    preds: List[E.Expr] = []
+    try:
+        for nd in reversed(chain):
+            if isinstance(nd, P.Filter):
+                preds.append(sub(nd.pred))
+            else:
+                mapping = {name: sub(expr) for name, expr in nd.outputs}
+        agg_args = tuple(sub(a.arg) if a.arg is not None else None
+                         for a in node.aggs)
+        for k in node.keys:
+            if k not in mapping:
+                raise _NoMatch()
+        key_exprs = tuple(mapping[k] for k in node.keys)
+    except _NoMatch:
+        return None
+    return R.Fragment(root=node, boundary=boundary, preds=tuple(preds),
+                      agg_args=agg_args, key_exprs=key_exprs,
+                      masked=not isinstance(boundary, P.Scan), binfo=binfo)
+
+
+#: Sentinel distinguishing "caller did not pre-compute the walk" from
+#: "the walk ran and found no fragment" (an explicit None must NOT
+#: trigger a re-walk -- the dispatch pass shares one walk per node).
+_UNSET = object()
+
+
+def _match_scalar(node, catalog, frag=_UNSET):
+    if frag is _UNSET:
+        frag = match_fragment(node, catalog)
+    if frag is None or frag.root.keys or frag.masked:
+        return None
+    return frag
+
+
+def _match_grouped(node, catalog, frag=_UNSET):
+    if frag is _UNSET:
+        frag = match_fragment(node, catalog)
+    if frag is None or not frag.root.keys or frag.masked:
+        return None
+    return frag
+
+
+def _match_masked(node, catalog, frag=_UNSET):
+    if frag is _UNSET:
+        frag = match_fragment(node, catalog)
+    if frag is None or not frag.masked:
+        return None
+    return frag
+
+
+# ---------------------------------------------------------------------------
+# eligibility
+# ---------------------------------------------------------------------------
+
+_SUPPORTED_AGGS = ("sum", "count", "avg")
+
+
+def _col_f32_safe(sc: L.StaticCol) -> bool:
+    """Can this column stream into the kernel as exact f32?  Floats and
+    bools trivially; dates are bounded days-since-1970 (< 2^24 by
+    construction); other ints need a dictionary or declared domain."""
+    if sc.dtype in (T.FLOAT32, T.FLOAT64, T.BOOL, T.DATE):
+        return True
+    bound = sc.group_domain
+    return bound is not None and bound <= F32_EXACT
+
+
+def _acc_plan(aggs: Tuple[P.AggSpec, ...], force_count: bool
+              ) -> Tuple[List[Tuple[str, Optional[int]]], Optional[int], int]:
+    """Accumulator layout: one slot per sum/avg argument plus ONE shared
+    count slot (grouped fragments always count: the group mask needs
+    it).  Returns (per-agg plan, count slot index, slot count)."""
+    plan: List[Tuple[str, Optional[int]]] = []
+    k = 0
+    for a in aggs:
+        if a.op in ("sum", "avg"):
+            plan.append((a.op, k))
+            k += 1
+        else:
+            plan.append(("count", None))
+    need_count = force_count or any(a.op in ("count", "avg") for a in aggs)
+    cnt_slot = k if need_count else None
+    return plan, cnt_slot, (k + 1 if need_count else k)
+
+
+@dataclasses.dataclass
+class _Analysis:
+    """Everything static the emitter needs, computed ONCE per fragment
+    (memoized on ``Fragment.analysis``): compiled expression closures,
+    accumulator plan, input-column layout, group layout, block shape --
+    or the reason the fragment is ineligible."""
+
+    reason: Optional[str] = None  # None = eligible
+    plan_: Any = None
+    cnt_slot: Optional[int] = None
+    n_out: int = 0
+    pred_fns: Any = None
+    val_fns: Any = None
+    col_names: Any = None
+    param_names: Any = None
+    strides: Any = None
+    domain: Optional[int] = None
+    key_doms: Any = None
+    block_default: Optional[int] = None
+
+
+def _analyze(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
+    if frag.analysis is not None:
+        return frag.analysis
+    frag.analysis = out = _analyze_uncached(frag, catalog)
+    return out
+
+
+def _analyze_uncached(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
+    bad = sorted({a.op for a in frag.root.aggs
+                  if a.op not in _SUPPORTED_AGGS})
+    if bad:
+        return _Analysis(reason=f"unsupported aggregate op(s) {bad}")
+    if frag.binfo.n_rows <= 0:
+        return _Analysis(reason="empty input stream")
+    grouped = bool(frag.root.keys)
+    plan_, cnt_slot, n_out = _acc_plan(frag.root.aggs, force_count=grouped)
+    comp = ExprCompiler(frag.binfo)
+    try:
+        pred_fns = [comp.compile(pr) for pr in frag.preds]
+        val_fns = [comp.compile(a.arg) for a in frag.root.aggs
+                   if a.op in ("sum", "avg")]
+    except UnsupportedExpr as ex:
+        return _Analysis(reason=f"unsupported expression: {ex}")
+    for name in sorted(comp.cols):
+        if not _col_f32_safe(frag.binfo.cols[name]):
+            return _Analysis(reason=(
+                f"column {name!r} has no f32-exact encoding "
+                "(int without dictionary/domain <= 2^24)"))
+    out = _Analysis(plan_=plan_, cnt_slot=cnt_slot, n_out=n_out,
+                    pred_fns=pred_fns, val_fns=val_fns,
+                    col_names=sorted(comp.cols),
+                    param_names=sorted(comp.params))
+    n_in = len(out.col_names) + 1  # + validity/mask weight column
+    if grouped:
+        try:
+            child_info = L.static_info(frag.root.child, catalog)
+            out.strides, out.domain = L._group_layout(frag.root,
+                                                      child_info)
+        except (TypeError, ValueError) as ex:
+            return _Analysis(reason=f"no dense group layout: {ex}")
+        if out.domain > SR_K.MAX_GROUPS:
+            return _Analysis(reason=(f"group domain {out.domain} > "
+                                     f"MAX_GROUPS {SR_K.MAX_GROUPS}"))
+        out.key_doms = [child_info.cols[k].group_domain
+                        for k in frag.root.keys]
+        out.block_default = R.choose_block_rows(n_in + 1, n_out,
+                                                out.domain)
+        if out.block_default is None:
+            return _Analysis(reason="one-hot tile exceeds VMEM budget")
+    else:
+        out.block_default = R.choose_block_rows(n_in, n_out)
+        if out.block_default is None:
+            return _Analysis(reason="input blocks exceed VMEM budget")
+    return out
+
+
+def _eligibility(frag: R.Fragment, catalog: P.Catalog) -> Tuple[bool, str]:
+    a = _analyze(frag, catalog)
+    return (a.reason is None), (a.reason or "ok")
+
+
+# ---------------------------------------------------------------------------
+# emitters
+# ---------------------------------------------------------------------------
+
+
+def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
+    """Build the trace-time emitter for a matched fragment.
+
+    Everything static happened at dispatch time in :func:`_analyze`
+    (shared with eligibility): expressions compiled to closures over
+    kernel blocks, dictionaries resolved to code tests, accumulator
+    layout and block shape fixed.  The returned emitter only does the
+    traced work: pad/reshape the boundary columns, pack the param
+    vector, call the kernel, assemble the output stream."""
+    aggs = frag.root.aggs
+    ana = _analyze(frag, catalog)
+    assert ana.reason is None, ana.reason  # eligibility checked it
+    plan_, cnt_slot, n_out = ana.plan_, ana.cnt_slot, ana.n_out
+    pred_fns, val_fns = ana.pred_fns, ana.val_fns
+    col_names, param_names = ana.col_names, ana.param_names
+    strides, domain, key_doms = ana.strides, ana.domain, ana.key_doms
+    block_default = ana.block_default
+    masked = frag.masked
+    out_info = L.static_info(frag.root, catalog)
+
+    def value_fn(scal_ref, blocks, code_block=None):
+        cols = dict(zip(col_names, blocks))
+        scal = {name: scal_ref[i] for i, name in enumerate(param_names)}
+        # weight = validity (mask + padding) AND the compiled predicate
+        pred = _as_bool(blocks[len(col_names)])
+        for fn in pred_fns:
+            pred = pred & _as_bool(fn(cols, scal))
+        w = pred.astype(jnp.float32)
+        outs = [(fn(cols, scal) * w).astype(jnp.float32) for fn in val_fns]
+        if cnt_slot is not None:
+            outs.append(w)
+        return outs
+
+    def run(bstream: L.Stream, params: Optional[Dict[str, Any]],
+            interpret: bool) -> L.Stream:
+        n = bstream.n
+
+        def _param(name):
+            if params is None or name not in params:
+                raise KeyError(
+                    f"unbound query parameter {name!r}; pass a binding, "
+                    f"e.g. lowered.compile()({name}=...)")
+            return jnp.asarray(params[name]).astype(jnp.float32)
+
+        scal = (jnp.stack([_param(p) for p in param_names])
+                if param_names else jnp.zeros((1,), jnp.float32))
+        block_rows = min(block_default, max(1, n // LANES))
+        blocks = [FA_OPS.pad_reshape(bstream.cols[c].astype(jnp.float32),
+                                     block_rows, 0.0)
+                  for c in col_names]
+        # validity column: real rows carry the stream mask (all-ones when
+        # unmasked); padding rows carry 0 so they never contribute
+        valid = (bstream.the_mask() if masked
+                 else jnp.ones((n,), jnp.bool_)).astype(jnp.float32)
+        blocks.append(FA_OPS.pad_reshape(valid, block_rows, 0.0))
+
+        out_cols: Dict[str, jnp.ndarray] = {}
+        if grouped:
+            code = jnp.zeros((n,), jnp.int32)
+            for ke, s in zip(frag.key_exprs, strides):
+                kv = L.eval_expr(ke, bstream, params)
+                code = code + kv.astype(jnp.int32) * np.int32(s)
+            codes = FA_OPS.pad_reshape(code, block_rows, 0)
+            out = SR_K.segmented_multi_sum(
+                value_fn, blocks, codes, scal, n_out, domain, block_rows,
+                interpret)
+            cnt = out[cnt_slot]
+            gidx = jnp.arange(domain, dtype=jnp.int32)
+            for k, s, dk in zip(frag.root.keys, strides, key_doms):
+                out_cols[k] = (gidx // np.int32(s)) % np.int32(dk)
+            for a, (kind, slot) in zip(aggs, plan_):
+                if kind == "sum":
+                    out_cols[a.name] = out[slot]
+                elif kind == "avg":
+                    out_cols[a.name] = out[slot] / jnp.maximum(cnt, 1.0)
+                else:
+                    out_cols[a.name] = cnt.astype(jnp.int32)
+            return L.Stream(out_cols, cnt > 0, out_info)
+
+        outs = FA_K.filter_agg_general(value_fn, blocks, scal, n_out,
+                                       block_rows, interpret)
+        sums = [jnp.sum(o) for o in outs]
+        cnt = sums[cnt_slot] if cnt_slot is not None else None
+        for a, (kind, slot) in zip(aggs, plan_):
+            if kind == "sum":
+                out_cols[a.name] = sums[slot][None]
+            elif kind == "avg":
+                out_cols[a.name] = (sums[slot] / jnp.maximum(cnt, 1.0))[None]
+            else:
+                out_cols[a.name] = cnt.astype(jnp.int32)[None]
+        return L.Stream(out_cols, None, out_info)
+
+    return run
+
+
+def _emit_scalar(frag, catalog):
+    return _emit(frag, catalog, grouped=False)
+
+
+def _emit_grouped(frag, catalog):
+    return _emit(frag, catalog, grouped=True)
+
+
+def _emit_masked(frag, catalog):
+    # "streaming into either": the mask is just another weight column,
+    # so the keyed/keyless emitters apply unchanged
+    return _emit(frag, catalog, grouped=bool(frag.root.keys))
+
+
+R.register_pattern(R.KernelPattern(
+    name="filter-scalar-agg", matcher=_match_scalar,
+    eligibility=_eligibility, emitter=_emit_scalar))
+R.register_pattern(R.KernelPattern(
+    name="grouped-agg", matcher=_match_grouped,
+    eligibility=_eligibility, emitter=_emit_grouped))
+R.register_pattern(R.KernelPattern(
+    name="masked-filter-project", matcher=_match_masked,
+    eligibility=_eligibility, emitter=_emit_masked))

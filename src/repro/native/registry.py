@@ -1,0 +1,199 @@
+"""The kernel-pattern registry: plan fragments -> Pallas kernels.
+
+The paper's headline claim (sections 1, 4.1) is that Flare generates
+*specialized native operators* for hot plan fragments instead of stitching
+generic library calls.  Our ``compiled`` engine fuses the whole plan into
+one XLA program, but every operator lowers to generic ``jnp`` ops; this
+registry is where hand-scheduled Pallas kernels plug in.
+
+A :class:`KernelPattern` is (HiFrames-style) a *matcher* over
+:class:`repro.core.plan.Plan` fragments plus an *emitter* that replaces
+the fragment's generic lowering with a kernel call, guarded by an
+*eligibility* predicate (supported aggregate ops / expression forms,
+f32-exactness of the streamed columns, backend + interpret-mode support,
+and a VMEM budget check for the chosen block shape).  The dispatch pass
+(``repro.native.dispatch``) runs the registry over the optimized plan and
+records every decision in a :class:`DispatchReport` -- which patterns
+fired, which fell back, and why -- surfaced on
+``CompileStats.dispatch``.
+
+Future kernels (join probe, sort, top-k) land here as new
+``register_pattern`` entries instead of engine forks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import expr as E
+from repro.core import lower as L
+from repro.core import plan as P
+
+LANES = 128
+
+#: Conservative per-core VMEM budget for kernel working sets: ~16 MiB
+#: physical, kept at 12 MiB to leave room for double buffering.
+VMEM_BUDGET_BYTES = 12 * (1 << 20)
+
+#: Emitter signature: (boundary stream, param env, interpret) -> output
+#: stream of the fragment root.  Built at dispatch time, called at trace
+#: time inside the whole-query program.
+Emitter = Callable[[L.Stream, Optional[Dict[str, Any]], bool], L.Stream]
+
+
+@dataclasses.dataclass
+class Fragment:
+    """A matched plan fragment: an Aggregate root plus its Filter/Project
+    prologue, rebased onto the *boundary* node whose stream the kernel
+    consumes.  All expressions are substituted into boundary-column
+    terms, so the emitter can compile them straight into the kernel body.
+    """
+
+    root: P.Aggregate
+    boundary: P.Plan
+    preds: Tuple[E.Expr, ...]                 # prologue filter conjuncts
+    agg_args: Tuple[Optional[E.Expr], ...]    # per AggSpec (None = count)
+    key_exprs: Tuple[E.Expr, ...]             # group keys, boundary terms
+    masked: bool                              # boundary may carry a mask
+    binfo: L.StaticInfo                       # boundary static info
+    # memo slot: the expression-compilation/layout analysis shared by
+    # eligibility and emitter (patterns._analyze) -- computed once
+    analysis: Any = dataclasses.field(default=None, repr=False)
+
+
+@dataclasses.dataclass
+class KernelPattern:
+    """A registry entry: name + matcher + eligibility + emitter factory.
+
+    ``matcher(node, catalog)`` returns a :class:`Fragment` or None;
+    ``eligibility(fragment, catalog)`` returns ``(ok, reason)``;
+    ``emitter(fragment, catalog)`` builds the trace-time
+    :data:`Emitter`.  ``supports_interpret`` gates dispatch off-TPU
+    (every built-in pattern runs under Pallas interpret mode there).
+    """
+
+    name: str
+    # matcher(node, catalog, frag=...): the dispatch pass pre-computes
+    # the standard Aggregate fragment walk ONCE per node and passes it
+    # as ``frag`` (possibly None = walk found no fragment) so sibling
+    # patterns don't re-analyze; when ``frag`` is omitted the matcher
+    # walks itself.  Custom matchers may ignore it entirely.
+    matcher: Callable[..., Optional[Fragment]]
+    eligibility: Callable[[Fragment, P.Catalog], Tuple[bool, str]]
+    emitter: Callable[[Fragment, P.Catalog], Emitter]
+    supports_interpret: bool = True
+
+
+_REGISTRY: Dict[str, KernelPattern] = {}
+
+
+def register_pattern(pattern: KernelPattern) -> KernelPattern:
+    """Register ``pattern`` (last registration wins on name collision).
+    Patterns are tried in registration order; first eligible match wins.
+    """
+    _REGISTRY[pattern.name] = pattern
+    return pattern
+
+
+def get_pattern(name: str) -> KernelPattern:
+    return _REGISTRY[name]
+
+
+def patterns() -> List[KernelPattern]:
+    return list(_REGISTRY.values())
+
+
+def available_patterns() -> List[str]:
+    return list(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budgeting
+# ---------------------------------------------------------------------------
+
+
+def vmem_estimate(n_cols: int, block_rows: int, n_out: int,
+                  num_groups: Optional[int] = None) -> int:
+    """Bytes of VMEM the kernel's working set needs at ``block_rows``.
+
+    Input blocks are double-buffered (x2); the grouped variant adds the
+    per-block one-hot tile and the [n_out, G] accumulator."""
+    block = block_rows * LANES * 4
+    total = n_cols * block * 2
+    if num_groups is None:
+        total += n_out * LANES * 4 * 2          # out + scratch rows
+    else:
+        total += block_rows * LANES * num_groups * 4   # one-hot tile
+        total += n_out * num_groups * 4 * 2            # out + scratch
+    return total
+
+
+def choose_block_rows(n_cols: int, n_out: int,
+                      num_groups: Optional[int] = None,
+                      default: int = 256) -> Optional[int]:
+    """Largest block_rows (halving from ``default``, floor 8) whose
+    working set fits :data:`VMEM_BUDGET_BYTES`; None if even 8 spills."""
+    block_rows = default
+    while block_rows >= 8:
+        if vmem_estimate(n_cols, block_rows, n_out,
+                         num_groups) <= VMEM_BUDGET_BYTES:
+            return block_rows
+        block_rows //= 2
+    return None
+
+
+# ---------------------------------------------------------------------------
+# dispatch telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Decision:
+    """One dispatch decision for one plan fragment."""
+
+    pattern: str   # pattern name ("" when no pattern was eligible)
+    node: str      # fragment root, human-readable (plan.describe())
+    fired: bool
+    mode: str      # "pallas" | "interpret" | "" (fallback)
+    reason: str    # "ok" or why the fragment fell back to jnp lowering
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class DispatchReport:
+    """Per-query dispatch report: which patterns fired, which fragments
+    fell back to the generic jnp lowering, and why.  Attached to
+    ``Lowered.dispatch_report`` / ``CompileStats.dispatch``."""
+
+    decisions: List[Decision] = dataclasses.field(default_factory=list)
+
+    def add(self, d: Decision) -> None:
+        self.decisions.append(d)
+
+    @property
+    def fired(self) -> List[Decision]:
+        return [d for d in self.decisions if d.fired]
+
+    @property
+    def fallbacks(self) -> List[Decision]:
+        return [d for d in self.decisions if not d.fired]
+
+    def fired_patterns(self) -> List[str]:
+        return [d.pattern for d in self.fired]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"fired": [d.to_dict() for d in self.fired],
+                "fallbacks": [d.to_dict() for d in self.fallbacks]}
+
+    def __str__(self) -> str:
+        if not self.decisions:
+            return "native dispatch: no dispatchable fragments"
+        lines = ["native dispatch:"]
+        for d in self.decisions:
+            if d.fired:
+                lines.append(f"  + {d.node} -> {d.pattern} [{d.mode}]")
+            else:
+                lines.append(f"  - {d.node} -> jnp fallback ({d.reason})")
+        return "\n".join(lines)

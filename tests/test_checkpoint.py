@@ -94,8 +94,7 @@ with tempfile.TemporaryDirectory() as d:
     mgr.save(1, host)
     _, restored, _ = mgr.restore(host)
     # place on a 4x2 mesh (different from any prior placement)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
     sc = make_ctx(mesh, cfg.sharding_profile)
     placed = remesh(restored, m.spec, mesh, sc.rules)
     leaf = jax.tree.leaves(placed)[0]

@@ -63,8 +63,12 @@ for qname in ("q6", "q1"):
         if a.dtype == object:
             assert sorted(a) == sorted(b), (qname, k)
         else:
+            # asarray, NOT np.float64(): the scalar constructor collapses
+            # 1-element arrays (q6's scalar aggregate) to 0-d, breaking
+            # np.sort(axis=-1) -- same fix as conftest.assert_results_equal
             np.testing.assert_allclose(
-                np.sort(np.float64(a)), np.sort(np.float64(b)),
+                np.sort(np.asarray(a, np.float64)),
+                np.sort(np.asarray(b, np.float64)),
                 rtol=2e-3, err_msg=f"{qname}/{k}")
 print("PARALLEL_OK")
 """)
@@ -79,8 +83,7 @@ import jax
 from repro.configs import get
 from repro.configs.base import SHAPES
 from repro.launch.steps import build_cell
-mesh = jax.make_mesh((8, 8), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((8, 8), ("data", "model"))
 cfg = get("qwen3_0_6b")
 cell = build_cell(cfg, SHAPES["train_4k"], mesh)
 with mesh:

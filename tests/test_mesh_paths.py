@@ -12,8 +12,7 @@ def test_ring_attention_exact(subproc):
 import numpy as np, jax, jax.numpy as jnp
 from repro.models import layers as L
 from repro.distributed.shardings import make_ctx
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 sc = make_ctx(mesh, "tp_fsdp")
 rng = np.random.default_rng(0)
 # 6 heads / 2 kv deliberately indivisible by the 4-way model axis
@@ -41,8 +40,7 @@ def test_ring_attention_grads(subproc):
 import numpy as np, jax, jax.numpy as jnp
 from repro.models import layers as L
 from repro.distributed.shardings import make_ctx
-mesh = jax.make_mesh((1, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((1, 4), ("data", "model"))
 sc = make_ctx(mesh, "tp_fsdp")
 rng = np.random.default_rng(1)
 b, s, h, kh, d = 1, 32, 4, 2, 8
@@ -69,8 +67,7 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.models import layers as L
 from repro.models.param import init_params
 from repro.distributed.shardings import make_ctx, null_ctx
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 sc = make_ctx(mesh, "tp_fsdp")
 c = L.MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=32,
                 capacity_factor=8.0)

@@ -80,8 +80,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)),
                 jnp.float32)
 def f(xs):

@@ -162,6 +162,44 @@ def test_optimizer_invariance(tbl_dom, pred):
 
 
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.data())
+def test_segmented_sum_matches_ref_on_adversarial_codes(data):
+    """The one-hot-matmul Pallas kernel == jax.ops.segment_sum for ANY
+    code layout: skewed/constant codes (every row in one group), codes
+    hugging the 0 and G-1 boundaries, lengths straddling the lane/block
+    padding seams, and empty groups."""
+    from repro.kernels.segmented_reduce.ops import segmented_sum
+    from repro.kernels.segmented_reduce.ref import segmented_sum_ref
+
+    g = data.draw(st.integers(1, 70), label="num_groups")
+    # lengths around the 128-lane and block_rows*128 seams are the
+    # adversarial sizes: padding rows must never leak into group 0
+    n = data.draw(st.one_of(
+        st.integers(1, 300),
+        st.sampled_from([127, 128, 129, 1023, 1024, 1025, 8191, 8192]),
+        ), label="n")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    kind = data.draw(st.sampled_from(
+        ["uniform", "constant", "boundary", "skewed"]), label="codes")
+    if kind == "uniform":
+        codes = rng.integers(0, g, n)
+    elif kind == "constant":
+        codes = np.full(n, data.draw(st.integers(0, g - 1)))
+    elif kind == "boundary":
+        codes = rng.choice([0, g - 1], n)
+    else:  # skewed: almost everything in one hot group
+        hot = data.draw(st.integers(0, g - 1))
+        codes = np.where(rng.random(n) < 0.95, hot, rng.integers(0, g, n))
+    import jax.numpy as jnp
+    v = jnp.asarray(np.round(rng.uniform(-100, 100, n), 2), jnp.float32)
+    c = jnp.asarray(codes, jnp.int32)
+    got = segmented_sum(v, c, g, interpret=True)
+    want = segmented_sum_ref(v, c, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
 @given(st.lists(st.text(alphabet="abcdef", min_size=0, max_size=6),
                 min_size=1, max_size=50))
 def test_dictionary_roundtrip(strings):
