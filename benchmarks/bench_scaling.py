@@ -1,21 +1,25 @@
 """Paper Figs. 11/12: parallel scaling + data-partitioning placement.
 
-Runs Q6 and Q1 through the mesh-parallel relational engine
-(repro.core.parallel: row-partitioned scans, psum-merged partial
-aggregates -- the paper's OpenMP/NUMA scheme on a device mesh) at
-1/2/4/8 devices.  Each device count runs in a fresh subprocess because
-the host platform device count is fixed at first jax init.
+Runs Q6 and Q1 through the first-class ``parallel`` engine
+(``df.lower(engine="parallel", mesh=...)``: row-partitioned spine scans,
+psum/pmin/pmax-merged partial aggregates -- the paper's OpenMP/NUMA
+scheme on a device mesh) at 1/2/4/8 shards.  Each device count runs in a
+fresh subprocess because the host platform device count is fixed at
+first jax init.
 
 Reports absolute time AND the paper's COST lens: speedup vs the
-single-device whole-query engine.
+single-device whole-query engine.  ``$BENCH_SCALING_JSON`` (default
+``bench_scaling.json``) gets the full per-shard-count table -- compile
+split included -- as a CI artifact next to bench_ml/bench_q6.
 
 IMPORTANT caveat for interpreting the numbers on THIS container: forced
 host-platform devices share the same physical CPU cores, so a >1x
 speedup is physically impossible here.  What the measurement validates
-is that the mesh-partitioned program (row shards + psum merges) adds
-near-zero overhead vs the single-device program (ratio ~= 1.0) -- i.e.
-the parallelization is free, and the speedup on real chips is bounded
-by the collective term in the roofline table, not by this code path.
+is that the mesh-partitioned program (row shards + collective merges)
+adds near-zero overhead vs the single-device program (ratio ~= 1.0) --
+i.e. the parallelization is free, and the speedup on real chips is
+bounded by the collective term in the roofline table, not by this code
+path.
 """
 from __future__ import annotations
 
@@ -30,37 +34,34 @@ _CHILD = r"""
 import os, sys, json, time
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                            + sys.argv[1])
-import numpy as np, jax
+import jax
 from repro.core import FlareContext
-from repro.core.parallel import execute_parallel
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_data_mesh
 from repro.relational import queries as Q
-import repro.core.plan as PL
 
 sf = float(sys.argv[2])
 ctx = FlareContext()
 Q.register_tpch(ctx, sf=sf)
-mesh = make_host_mesh()
-out = {}
+ctx.preload()
+mesh = make_data_mesh()
+out = {"n_devices": len(jax.devices())}
 for qname in ("q6", "q1"):
-    plan = ctx.optimized(Q.QUERIES[qname](ctx).plan)
-    agg = plan
-    while not isinstance(agg, PL.Aggregate):
-        agg = agg.child
-    # avg is non-distributive; drop avg columns for the scaling kernel
-    aggs = tuple(a for a in agg.aggs if a.op != "avg")
-    agg = PL.Aggregate(agg.child, agg.keys, aggs)
-    execute_parallel(agg, ctx.catalog, mesh)  # warm
+    compiled = Q.QUERIES[qname](ctx).lower(engine="parallel",
+                                           mesh=mesh).compile()
+    compiled()  # warm (first call materialises padded columns)
     times = []
     for _ in range(5):
         t0 = time.perf_counter()
-        execute_parallel(agg, ctx.catalog, mesh)
+        compiled()
         times.append(time.perf_counter() - t0)
-    out[qname] = sorted(times)[len(times)//2] * 1e6
+    out[qname] = {"run_us": sorted(times)[len(times) // 2] * 1e6,
+                  "lower_s": round(compiled.stats.lower_s, 3),
+                  "compile_s": round(compiled.stats.compile_s, 3)}
 print(json.dumps(out))
 """
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
+JSON_PATH = os.environ.get("BENCH_SCALING_JSON", "bench_scaling.json")
 
 
 def run() -> None:
@@ -76,12 +77,21 @@ def run() -> None:
                  error=proc.stderr.strip()[-160:].replace(",", ";"))
             continue
         results[ndev] = json.loads(proc.stdout.strip().splitlines()[-1])
+    report = {"sf": SF, "engine": "parallel", "shards": {}}
     for q in ("q6", "q1"):
-        base = results.get(1, {}).get(q)
+        base = results.get(1, {}).get(q, {}).get("run_us")
         for ndev, r in sorted(results.items()):
-            if q in r:
-                emit(f"scaling_{q}_{ndev}dev", r[q],
-                     speedup=round(base / r[q], 2) if base else "n/a")
+            if q not in r:
+                continue
+            us = r[q]["run_us"]
+            speedup = round(base / us, 2) if base else "n/a"
+            emit(f"scaling_{q}_{ndev}dev", us, speedup=speedup,
+                 compile_s=r[q]["compile_s"])
+            report["shards"].setdefault(str(ndev), {})[q] = {
+                **r[q], "speedup_vs_1dev": speedup}
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {JSON_PATH}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,11 @@ hit rate across bindings: one compile, N executions.
 (``df.lower(engine="compiled", native=True)``, repro.native) and writes
 compiled-vs-native times plus the per-query dispatch reports to
 ``$BENCH_TPCH_JSON`` (default ``bench_tpch.json``).
+
+``--parallel`` adds a sharded-engine row per query
+(``df.lower(engine="parallel")``, repro.core.parallel) over a data mesh
+of every host device -- set ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N`` for a simulated N-shard run.
 """
 from __future__ import annotations
 
@@ -27,7 +32,7 @@ SF = float(os.environ.get("BENCH_SF", "0.05"))
 JSON_PATH = os.environ.get("BENCH_TPCH_JSON", "bench_tpch.json")
 
 
-def run(native: bool = False) -> None:
+def run(native: bool = False, parallel: bool = False) -> None:
     ctx = FlareContext()
     Q.register_tpch(ctx, sf=SF)
     ctx.preload()
@@ -63,6 +68,14 @@ def run(native: bool = False) -> None:
             qrep.update({"native_us": round(us_n, 1),
                          "native_vs_compiled": round(us_c / us_n, 2),
                          "dispatch": drep.to_dict()})
+        if parallel:
+            pcompiled = q.lower(engine="parallel").compile(
+                cache=CompileCache())
+            us_p = time_call(pcompiled.collect, iters=7)
+            derived["parallel_us"] = round(us_p, 1)
+            derived["parallel_vs_compiled"] = round(us_c / us_p, 2)
+            qrep.update({"parallel_us": round(us_p, 1),
+                         "parallel_vs_compiled": round(us_c / us_p, 2)})
         report["queries"][name] = qrep
         emit(f"tpch_{name}", us_c, volcano_us=round(us_v, 1),
              stage_us=round(us_s, 1),
@@ -99,7 +112,7 @@ def run(native: bool = False) -> None:
              cache_hit_rate=round(cache.hit_rate, 3),
              native=int(native))
 
-    if native:
+    if native or parallel:
         with open(JSON_PATH, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {JSON_PATH}")
@@ -110,8 +123,11 @@ def main(argv=None) -> None:
     ap.add_argument("--native", action="store_true",
                     help="add native-kernel-dispatch rows per query and "
                          "write the JSON report with dispatch details")
+    ap.add_argument("--parallel", action="store_true",
+                    help="add sharded parallel-engine rows per query "
+                         "(data mesh over every host device)")
     args = ap.parse_args(argv)
-    run(native=args.native)
+    run(native=args.native, parallel=args.parallel)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,10 @@ from repro.core.staging import udf
 # engine alias (import side effect; repro.native builds ON repro.core)
 import repro.native  # noqa: E402,F401  isort: skip
 
+# registers the mesh-sharded "parallel" engine (import side effect;
+# repro.core.parallel builds on stages + repro.native)
+import repro.core.parallel  # noqa: E402,F401  isort: skip
+
 __all__ = [
     "DataFrame", "FlareContext", "FlareDataFrame", "flare",
     "col", "lit", "param", "when", "cast", "udf", "AggSpec", "WithDomain",

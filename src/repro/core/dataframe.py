@@ -76,12 +76,13 @@ class FlareContext:
                            compile_cache=self.compile_cache)
 
     def lower(self, plan: P.Plan, engine: str = "compiled",
-              native: bool = False) -> S.Lowered:
+              native: bool = False, mesh=None,
+              axis: str = "data") -> S.Lowered:
         """Optimize + lower a plan for ``engine`` (stages entry point)."""
         return S.lower_plan(self.optimized(plan), self.catalog,
                             engine=engine, device_cache=self.cache,
                             compile_cache=self.compile_cache,
-                            native=native)
+                            native=native, mesh=mesh, axis=axis)
 
     def preload(self, *names: str) -> None:
         """Paper's ``persist()``: move table columns to device up-front."""
@@ -220,7 +221,8 @@ class DataFrame:
     # -- compilation stages (the first-class execution path) ---------------------
 
     def lower(self, engine: str = "compiled",
-              native: bool = False) -> S.Lowered:
+              native: bool = False, mesh=None,
+              axis: str = "data") -> S.Lowered:
         """Optimize + lower this query for ``engine``.
 
         Returns a :class:`repro.core.stages.Lowered`: inspect the plan via
@@ -228,13 +230,20 @@ class DataFrame:
         executable :class:`repro.core.stages.Compiled` that serves any
         number of parameter bindings.
 
-        ``native=True`` (compiled engine only) additionally runs the
-        :mod:`repro.native` kernel-dispatch pass: hot plan fragments
+        ``native=True`` (compiled/parallel engines) additionally runs
+        the :mod:`repro.native` kernel-dispatch pass: hot plan fragments
         (filter+aggregate, grouped aggregate) lower onto Pallas kernels
         inside the same program; ``lowered.dispatch_report()`` says what
         fired and what fell back.
+
+        ``engine="parallel"`` shards the query over a device ``mesh``
+        (default: all host devices) along the named ``axis``: the spine
+        table is row-partitioned, per-shard partial aggregates merge
+        with collectives, and one SPMD program serves every parameter
+        binding per mesh shape (DESIGN.md section 9).
         """
-        return self.ctx.lower(self.plan, engine, native=native)
+        return self.ctx.lower(self.plan, engine, native=native,
+                              mesh=mesh, axis=axis)
 
     def params(self) -> Tuple[E.Param, ...]:
         """Param placeholders of this query (binding order)."""

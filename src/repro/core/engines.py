@@ -16,7 +16,12 @@
                lives in ``repro.core.stages``; this module's :func:`execute`
                front door delegates to it.
 
-All three return a :class:`repro.core.lower.Result` with identical row
+Two more engines register behind the same stages API: ``tuple`` (the
+row-at-a-time Volcano baseline, ``repro.core.tuple_engine``) and
+``parallel`` (the mesh-sharded whole-query engine, paper section 4.3 --
+``repro.core.parallel``).
+
+All five return a :class:`repro.core.lower.Result` with identical row
 semantics, so the engines can be differentially tested against each other
 (tests/test_system.py, tests/test_stages.py, and the hypothesis property
 tests in tests/test_property.py).  The explicit ``Query -> Lowered ->
@@ -58,13 +63,33 @@ class DeviceCache:
     """
 
     def __init__(self):
-        self._cache: Dict[Tuple[int, str], jnp.ndarray] = {}
+        # (id(table), column) or (id(table), column, pad_to) -> device array
+        self._cache: Dict[Tuple, jnp.ndarray] = {}
 
     def get(self, tbl: T.Table, name: str) -> jnp.ndarray:
         key = (id(tbl), name)
         arr = self._cache.get(key)
         if arr is None:
             arr = jnp.asarray(tbl[name])
+            self._cache[key] = arr
+        return arr
+
+    def get_padded(self, tbl: T.Table, name: str, pad_to: int) -> jnp.ndarray:
+        """Column padded with zeros to ``pad_to`` rows, cached per pad
+        length.  The sharded ``parallel`` engine row-partitions the spine
+        table across the mesh, so its columns must be padded to a
+        multiple of the shard count; padding rows are masked off inside
+        the program (repro.core.parallel)."""
+        n = tbl.num_rows
+        if pad_to == n:
+            return self.get(tbl, name)
+        if pad_to < n:
+            raise ValueError(f"pad_to {pad_to} < table rows {n}")
+        key = (id(tbl), name, pad_to)
+        arr = self._cache.get(key)
+        if arr is None:
+            arr = jnp.asarray(np.pad(np.asarray(tbl[name]),
+                                     (0, pad_to - n)))
             self._cache[key] = arr
         return arr
 

@@ -433,7 +433,11 @@ def _lower_aggregate(p: P.Aggregate, child: Stream, catalog: P.Catalog,
 
     def masked(vals, fill=None):
         if fill is None:
-            return vals * maskf.astype(vals.dtype)
+            # where, NOT multiply-by-mask: invalid rows may hold
+            # arbitrary values (shard padding is zero-filled, so e.g. a
+            # division yields inf/nan there) and nan * 0 would poison
+            # the sum
+            return jnp.where(mask, vals, jnp.zeros((), vals.dtype))
         return jnp.where(mask, vals, jnp.asarray(fill, vals.dtype))
 
     if not p.keys:  # global aggregate
@@ -790,7 +794,8 @@ class ValueResult:
 
 
 def build_callable(p: P.Plan, catalog: P.Catalog,
-                   param_specs: Sequence[E.Param] = ()
+                   param_specs: Sequence[E.Param] = (),
+                   scan_stream_fn: Optional[Callable[..., Stream]] = None
                    ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]],
                               Optional[StaticInfo]]:
     """Build the pure function over flat scan-column arrays.
@@ -800,6 +805,14 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
     is non-empty, ``fn`` takes one trailing scalar argument per spec (in
     spec order) -- the runtime values of :class:`repro.core.expr.Param`
     placeholders, traced rather than baked into the program.
+
+    ``scan_stream_fn(scan_node, cols, static)``, when given, builds the
+    leaf :class:`Stream` for each Scan instead of the default (full
+    catalog-length, unmasked) construction.  The sharded ``parallel``
+    engine uses this to run the SAME traced function per mesh shard:
+    leaf streams take their row count from the actual (shard-local)
+    arrays and the partitioned spine scan carries a validity mask for
+    its padding rows (DESIGN.md section 9).
 
     For a relational plan ``fn`` returns ``(out_cols, mask)``.  For a
     plan rooted at :class:`repro.core.plan.IterativeKernel` -- the
@@ -829,10 +842,13 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
         scans: Dict[int, Stream] = {}
         for s in scan_nodes:
             cols = {name: next(it) for name in needed[id(s)]}
-            info = StaticInfo(
+            static = StaticInfo(
                 {n: statics[id(s)].cols[n] for n in needed[id(s)]},
                 statics[id(s)].n_rows)
-            scans[id(s)] = Stream(cols, None, info)
+            if scan_stream_fn is not None:
+                scans[id(s)] = scan_stream_fn(s, cols, static)
+            else:
+                scans[id(s)] = Stream(cols, None, static)
         env = {spec.name: next(it) for spec in param_specs}
         if ml_root:
             stream = lower_node(p.child, catalog, scans, env or None)

@@ -23,9 +23,12 @@ Separating the stages buys three things the paper's evaluation relies on:
   protocol can be registered and driven through the same API
   (DESIGN.md section 4).
 
-All three built-in engines (``volcano``, ``stage``, ``compiled``) plus the
-row-interpreted ``tuple`` engine run behind this API and return
-differentially-comparable :class:`repro.core.lower.Result` objects.
+All built-in engines (``volcano``, ``stage``, ``compiled``, the
+row-interpreted ``tuple`` and the mesh-sharded ``parallel`` engine of
+``repro.core.parallel``) run behind this API and return
+differentially-comparable :class:`repro.core.lower.Result` objects --
+the engine differential matrix (``tests/test_engine_matrix.py``) drives
+every registered engine through this one surface.
 """
 from __future__ import annotations
 
@@ -578,7 +581,8 @@ class Compiled:
 def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
                device_cache: Optional[ENG.DeviceCache] = None,
                compile_cache: Optional[CompileCache] = None,
-               native: bool = False) -> Lowered:
+               native: bool = False, mesh: Optional[Any] = None,
+               axis: str = "data") -> Lowered:
     """Lower an (already optimized) plan for ``engine``.
 
     The DataFrame front end (``df.lower(engine=...)``) optimizes first
@@ -592,17 +596,37 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     keeps its jnp lowering, and the per-query
     :class:`repro.native.registry.DispatchReport` lands on
     ``Lowered.dispatch_report()`` / ``CompileStats.dispatch``.
+
+    ``engine="parallel"`` runs the :mod:`repro.core.parallel` shard
+    planner first: the plan is split into a row-partitioned parallel
+    section and a merge/gather finish over ``mesh`` (default: a 1-D
+    data mesh over every host device) along the named ``axis``.  The
+    mesh shape is part of the template fingerprint -- one compiled SPMD
+    program per mesh shape.  ``native=True`` composes: each shard
+    dispatches its fragment onto the Pallas kernels, and the per-shard
+    report lands on ``Lowered.dispatch_report()``.
     """
-    if native and engine == "compiled":
-        engine = "compiled-native"
     dispatch_report = None
-    if engine == "compiled-native":
-        # lazy import: registers the patterns + the engine alias
-        from repro.native import dispatch as ND
-        p, dispatch_report = ND.rewrite_plan(p, catalog)
-    elif native:
-        raise ValueError(
-            f"native=True requires the 'compiled' engine, got {engine!r}")
+    if engine == "parallel":
+        # lazy import: registers the parallel engine; the shard planner
+        # handles native annotation itself (partial aggregates first)
+        from repro.core import parallel as PAR
+        p, dispatch_report = PAR.shard_plan(p, catalog, mesh=mesh,
+                                            axis=axis, native=native)
+    else:
+        if mesh is not None:
+            raise ValueError(
+                f"mesh= applies to the 'parallel' engine, got {engine!r}")
+        if native and engine == "compiled":
+            engine = "compiled-native"
+        if engine == "compiled-native":
+            # lazy import: registers the patterns + the engine alias
+            from repro.native import dispatch as ND
+            p, dispatch_report = ND.rewrite_plan(p, catalog)
+        elif native:
+            raise ValueError(
+                f"native=True requires the 'compiled' or 'parallel' "
+                f"engine, got {engine!r}")
     eng = get_engine(engine)
     specs = P.params_of(p)
     key = template_key(engine, p, catalog)

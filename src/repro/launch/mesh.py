@@ -6,6 +6,8 @@ never touches jax device state -- required because the dry-run must set
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 
 
@@ -32,3 +34,19 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return _make_mesh((n // model, model), ("data", "model"))
+
+
+def make_data_mesh(n_shards: int = None, axis: str = "data"):
+    """1-D mesh over ``n_shards`` devices (default: all) on one named
+    axis -- the default mesh of the sharded relational ``parallel``
+    engine (repro.core.parallel, DESIGN.md section 9)."""
+    n_avail = len(jax.devices())
+    if n_shards is None:
+        n_shards = n_avail
+    if n_shards > n_avail:
+        raise ValueError(f"requested {n_shards} shards but only "
+                         f"{n_avail} devices exist")
+    # Mesh directly (not jax.make_mesh): a subset of the host devices is
+    # a legal data mesh, e.g. 2 shards on a 4-device host.
+    devs = np.asarray(jax.devices()[:n_shards])
+    return jax.sharding.Mesh(devs, (axis,))

@@ -12,6 +12,15 @@ whole-query XLA program as the surrounding operators.
 
 Off-TPU the emitters run the Pallas kernels in interpret mode
 (automatic fallback, recorded as the decision's ``mode``).
+
+Composition with the sharded ``parallel`` engine: its shard planner
+(``repro.core.parallel.shard_plan``) calls :func:`rewrite_plan` on the
+shard-planned plan, AFTER rewriting merge-point aggregates into their
+partial (avg -> sum+count) form -- so the pattern that fires is the one
+each shard actually computes, the ``transform`` pass re-wraps the
+``ShardMerge`` child automatically, and the kernel runs once per shard
+inside the SPMD program (the per-shard report is
+``repro.core.parallel.ShardedDispatchReport``).
 """
 from __future__ import annotations
 

@@ -514,7 +514,6 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
     col_names, param_names = ana.col_names, ana.param_names
     strides, domain, key_doms = ana.strides, ana.domain, ana.key_doms
     block_default = ana.block_default
-    masked = frag.masked
     out_info = L.static_info(frag.root, catalog)
 
     def value_fn(scal_ref, blocks, code_block=None):
@@ -525,7 +524,11 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
         for fn in pred_fns:
             pred = pred & _as_bool(fn(cols, scal))
         w = pred.astype(jnp.float32)
-        outs = [(fn(cols, scal) * w).astype(jnp.float32) for fn in val_fns]
+        # where, NOT multiply-by-weight: excluded/padding rows can hold
+        # values whose expressions go inf/nan (division on zero-filled
+        # shard padding), and nan * 0 would poison the accumulator
+        outs = [jnp.where(pred, fn(cols, scal), 0.0).astype(jnp.float32)
+                for fn in val_fns]
         if cnt_slot is not None:
             outs.append(w)
         return outs
@@ -548,9 +551,12 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
                                      block_rows, 0.0)
                   for c in col_names]
         # validity column: real rows carry the stream mask (all-ones when
-        # unmasked); padding rows carry 0 so they never contribute
-        valid = (bstream.the_mask() if masked
-                 else jnp.ones((n,), jnp.bool_)).astype(jnp.float32)
+        # unmasked); padding rows carry 0 so they never contribute.  A
+        # Scan boundary is maskless when matched, but under the sharded
+        # ``parallel`` engine the SAME fragment re-lowers per shard with
+        # a padding mask on the spine scan -- so always honor the stream
+        # mask, not just the dispatch-time ``masked`` flag.
+        valid = bstream.the_mask().astype(jnp.float32)
         blocks.append(FA_OPS.pad_reshape(valid, block_rows, 0.0))
 
         out_cols: Dict[str, jnp.ndarray] = {}

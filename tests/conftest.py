@@ -10,16 +10,23 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+TESTS = os.path.dirname(os.path.abspath(__file__))
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 
 def run_with_devices(n_devices: int, code: str, timeout: int = 420) -> str:
-    """Run ``code`` in a subprocess with N host devices; returns stdout."""
+    """Run ``code`` in a subprocess with N host devices; returns stdout.
+
+    The tests directory rides on PYTHONPATH so subprocess snippets can
+    ``from conftest import assert_results_equal`` instead of re-rolling
+    result comparison inline.
+    """
     env = dict(os.environ)
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
                         f"{n_devices}")
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = (SRC + os.pathsep + TESTS + os.pathsep
+                         + env.get("PYTHONPATH", ""))
     proc = subprocess.run([sys.executable, "-c", code],
                           capture_output=True, text=True, env=env,
                           timeout=timeout)
@@ -34,7 +41,16 @@ def subproc():
 
 def assert_results_equal(a, b, rtol=5e-3, atol=1e-6, ordered=True,
                          msg=""):
-    """Compare two collect() dicts."""
+    """Compare two collect() dicts.
+
+    The ONE place result comparison is normalised: columns pass through
+    ``np.atleast_1d(np.asarray(...))`` so 0-d scalars (scalar aggregates
+    like q6/q14, or values that went through a float constructor) never
+    reach ``np.sort(axis=-1)`` -- the fragility class that used to need
+    per-test ``np.asarray`` workarounds.
+    """
+    a = {k: np.atleast_1d(np.asarray(v)) for k, v in a.items()}
+    b = {k: np.atleast_1d(np.asarray(v)) for k, v in b.items()}
     assert set(a) == set(b), msg
     for k in a:
         x, y = a[k], b[k]
@@ -45,11 +61,8 @@ def assert_results_equal(a, b, rtol=5e-3, atol=1e-6, ordered=True,
             else:
                 assert sorted(x) == sorted(y), (msg, k)
         else:
-            # asarray, NOT np.float64(): the scalar constructor collapses
-            # 1-element arrays to 0-d, which breaks np.sort(axis=-1) on
-            # scalar aggregate results (q6/q14)
-            xf = np.asarray(x, dtype=np.float64)
-            yf = np.asarray(y, dtype=np.float64)
+            xf = np.atleast_1d(np.asarray(x, dtype=np.float64))
+            yf = np.atleast_1d(np.asarray(y, dtype=np.float64))
             if not ordered:
                 xf, yf = np.sort(xf), np.sort(yf)
             np.testing.assert_allclose(xf, yf, rtol=rtol, atol=atol,

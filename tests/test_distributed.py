@@ -3,7 +3,6 @@
 Multi-device tests run in subprocesses (the host device count is fixed at
 first jax init, and the main test process must keep 1 device).
 """
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow  # multi-device subprocess tests: excluded from the CI fast lane
@@ -38,38 +37,44 @@ def test_param_pspecs_fallback_records():
 
 
 def test_parallel_relational_engine(subproc):
+    """The first-class parallel engine on an 8-shard host mesh: full
+    queries (avg and sort finish included -- no more avg-stripping),
+    prepared templates with one compile per mesh shape, and native
+    per-shard kernel dispatch, all via the stages API."""
     out = subproc(8, r"""
-import numpy as np
-from repro.core import FlareContext
-from repro.core.parallel import execute_parallel
+from conftest import assert_results_equal
+from repro.core import CompileCache, FlareContext
 from repro.launch.mesh import make_host_mesh
 from repro.relational import queries as Q
-import repro.core.plan as PL
 
 ctx = FlareContext()
 Q.register_tpch(ctx, sf=0.005)
-mesh = make_host_mesh()
-for qname in ("q6", "q1"):
-    plan = ctx.optimized(Q.QUERIES[qname](ctx).plan)
-    agg = plan
-    while not isinstance(agg, PL.Aggregate):
-        agg = agg.child
-    aggs = tuple(a for a in agg.aggs if a.op != "avg")
-    agg = PL.Aggregate(agg.child, agg.keys, aggs)
-    rp = execute_parallel(agg, ctx.catalog, mesh).compact()
-    rs = ctx.execute(agg, "volcano").compact()
-    for k in rs:
-        a, b = rs[k], rp[k]
-        if a.dtype == object:
-            assert sorted(a) == sorted(b), (qname, k)
-        else:
-            # asarray, NOT np.float64(): the scalar constructor collapses
-            # 1-element arrays (q6's scalar aggregate) to 0-d, breaking
-            # np.sort(axis=-1) -- same fix as conftest.assert_results_equal
-            np.testing.assert_allclose(
-                np.sort(np.asarray(a, np.float64)),
-                np.sort(np.asarray(b, np.float64)),
-                rtol=2e-3, err_msg=f"{qname}/{k}")
+mesh = make_host_mesh()   # (data, model) axes; shard along "data"
+for qname in ("q6", "q1", "q5", "q13", "q14", "q19"):
+    q = Q.QUERIES[qname](ctx)
+    rp = q.lower(engine="parallel", mesh=mesh).compile()()
+    rv = q.collect(engine="volcano")
+    assert_results_equal(rv, rp, rtol=2e-3, msg=qname)
+
+# two template bindings, one compilation for this mesh shape
+cache = CompileCache()
+tmpl = Q.q6_template(ctx)
+hits = []
+for binding in Q.TEMPLATE_BINDINGS["q6"][:2]:
+    compiled = tmpl.lower(engine="parallel", mesh=mesh).compile(cache=cache)
+    hits.append(compiled.stats.cache_hit)
+    assert_results_equal(tmpl.collect(engine="volcano", params=binding),
+                         compiled(**binding), rtol=2e-3, msg="q6 template")
+assert hits == [False, True], hits
+
+# native dispatch fires per shard
+lowered = Q.q6(ctx).lower(engine="parallel", mesh=mesh, native=True)
+rep = lowered.dispatch_report()
+assert rep.fired_patterns() == ["filter-scalar-agg"]
+assert rep.n_shards == mesh.shape["data"]
+assert len(rep.per_shard) == rep.n_shards
+assert_results_equal(Q.q6(ctx).collect(engine="volcano"),
+                     lowered.compile()(), rtol=2e-3, msg="q6 native")
 print("PARALLEL_OK")
 """)
     assert "PARALLEL_OK" in out

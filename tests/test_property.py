@@ -200,6 +200,82 @@ def test_segmented_sum_matches_ref_on_adversarial_codes(data):
 
 
 @settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.data())
+def test_sharded_grouped_merge_matches_unsharded(data):
+    """The parallel engine's merge rules (repro.core.parallel._MERGE_OPS)
+    are sound: per-shard dense group-vector partials -- computed with the
+    engines' masked-fill semantics -- merged across ragged partitions
+    (empty shards included) equal the unsharded reference for
+    sum/count/avg/min/max/any, on adversarial group-code layouts."""
+    from repro.core import parallel as PAR
+    from repro.core import plan as PLAN
+
+    # the merge table must cover every distributive aggregate op; avg is
+    # the ONE non-distributive op and is recomposed from sum/count
+    assert set(PAR._MERGE_OPS) == set(PLAN.AGG_OPS) - {"avg"}
+
+    g = data.draw(st.integers(1, 9), label="num_groups")
+    n = data.draw(st.integers(0, 80), label="n_rows")
+    n_shards = data.draw(st.integers(1, 5), label="n_shards")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    kind = data.draw(st.sampled_from(
+        ["uniform", "constant", "boundary", "skewed"]), label="codes")
+    if n == 0 or kind == "uniform":
+        codes = rng.integers(0, g, n)
+    elif kind == "constant":
+        codes = np.full(n, data.draw(st.integers(0, g - 1)))
+    elif kind == "boundary":
+        codes = rng.choice([0, g - 1], n)
+    else:
+        hot = data.draw(st.integers(0, g - 1))
+        codes = np.where(rng.random(n) < 0.95, hot, rng.integers(0, g, n))
+    codes = codes.astype(np.int64)
+    vals = np.round(rng.uniform(-100, 100, n), 1)
+    valid = rng.random(n) < 0.8  # padding/filter mask, engine-style
+
+    # ragged partition: rows 0..n split at sorted random cuts; adjacent
+    # equal cuts make EMPTY shards (the adversarial case: their partials
+    # must be exact identity elements of each merge)
+    cuts = sorted(data.draw(st.lists(st.integers(0, n),
+                                     min_size=n_shards - 1,
+                                     max_size=n_shards - 1)))
+    bounds = [0] + cuts + [n]
+
+    HI, LO = np.finfo(np.float64).max, np.finfo(np.float64).min
+
+    def dense_partials(c, v, m):
+        cv, vv = c[m], v[m]
+        mn = np.full(g, HI)
+        np.minimum.at(mn, cv, vv)
+        mx = np.full(g, LO)
+        np.maximum.at(mx, cv, vv)
+        return {
+            "count": np.bincount(cv, minlength=g).astype(np.float64),
+            "sum": np.bincount(cv, weights=vv, minlength=g),
+            "min": mn, "max": mx, "any": mx.copy(),
+        }
+
+    shard_partials = [
+        dense_partials(codes[lo:hi], vals[lo:hi], valid[lo:hi])
+        for lo, hi in zip(bounds[:-1], bounds[1:])]
+    collective = {"psum": lambda s: s.sum(axis=0),
+                  "pmin": lambda s: s.min(axis=0),
+                  "pmax": lambda s: s.max(axis=0)}
+    merged = {op: collective[PAR._MERGE_OPS[op]](
+                  np.stack([sp[op] for sp in shard_partials]))
+              for op in PAR._MERGE_OPS}
+    reference = dense_partials(codes, vals, valid)
+    for op in PAR._MERGE_OPS:
+        np.testing.assert_allclose(merged[op], reference[op], rtol=1e-12,
+                                   err_msg=op)
+    # avg recomposition: merged sum / max(merged count, 1) -- identical
+    # to the unsharded avg, including count-0 groups (both sides 0/1)
+    np.testing.assert_allclose(
+        merged["sum"] / np.maximum(merged["count"], 1),
+        reference["sum"] / np.maximum(reference["count"], 1), rtol=1e-12)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
 @given(st.lists(st.text(alphabet="abcdef", min_size=0, max_size=6),
                 min_size=1, max_size=50))
 def test_dictionary_roundtrip(strings):

@@ -1,0 +1,72 @@
+"""Regenerate the golden-answer fixtures under tests/golden/.
+
+The fixtures anchor the engine differential matrix
+(tests/test_engine_matrix.py) to ABSOLUTE values: q1/q6/q13/q14 at
+SF-0.01, seed 0, computed by the volcano oracle (float64, compacted).
+Engines agreeing with each other is necessary but not sufficient -- a
+shared semantics bug would slip through; agreeing with checked-in
+numbers is what pins the semantics down.
+
+Usage::
+
+    PYTHONPATH=src python tools/regen_golden.py
+
+Rerun (and commit the diff) only when the TPC-H generator or the query
+definitions intentionally change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import FlareContext  # noqa: E402
+from repro.relational import queries as Q  # noqa: E402
+
+SF = 0.01
+SEED = 0
+QUERIES = ("q1", "q6", "q13", "q14")
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "tests", "golden")
+
+
+def _py(v):
+    """JSON-safe scalar: numpy ints/floats/strs -> python builtins."""
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.str_, bytes)):
+        return str(v)
+    return v
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    ctx = FlareContext()
+    Q.register_tpch(ctx, sf=SF, seed=SEED)
+    for qname in QUERIES:
+        cols = Q.QUERIES[qname](ctx).lower(engine="volcano").compile()()
+        payload = {
+            "query": qname,
+            "sf": SF,
+            "seed": SEED,
+            "engine": "volcano",
+            "columns": {k: [_py(v) for v in arr.tolist()]
+                        for k, arr in cols.items()},
+        }
+        path = os.path.join(GOLDEN_DIR, f"{qname}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        n = len(next(iter(cols.values()))) if cols else 0
+        print(f"wrote {path} ({n} rows)")
+
+
+if __name__ == "__main__":
+    main()
