@@ -55,9 +55,10 @@ class FlareContext:
             raise KeyError(f"unknown table {name!r}")
         return DataFrame(self, P.Scan(name))
 
-    def from_arrays(self, name: str, data, dtypes=None, domains=None
-                    ) -> "DataFrame":
-        self.register(name, T.Table.from_arrays(data, dtypes, domains))
+    def from_arrays(self, name: str, data, dtypes=None, domains=None,
+                    uniques=None) -> "DataFrame":
+        self.register(name, T.Table.from_arrays(data, dtypes, domains,
+                                                uniques))
         return self.table(name)
 
     # -- execution ---------------------------------------------------------------
@@ -77,19 +78,35 @@ class FlareContext:
 
     def lower(self, plan: P.Plan, engine: str = "compiled",
               native: bool = False, mesh=None,
-              axis: str = "data") -> S.Lowered:
+              axis: str = "data", join_index: bool = True) -> S.Lowered:
         """Optimize + lower a plan for ``engine`` (stages entry point)."""
         return S.lower_plan(self.optimized(plan), self.catalog,
                             engine=engine, device_cache=self.cache,
                             compile_cache=self.compile_cache,
-                            native=native, mesh=mesh, axis=axis)
+                            native=native, mesh=mesh, axis=axis,
+                            join_index=join_index)
 
-    def preload(self, *names: str) -> None:
-        """Paper's ``persist()``: move table columns to device up-front."""
+    def preload(self, *names: str, indexes: bool = True) -> None:
+        """Paper's ``persist()``: move table columns to device up-front.
+
+        Loading is also when indexing happens (paper section 4, Fig. 6:
+        Flare separates data loading/indexing from query execution):
+        every declared-unique integer key column (``Field.unique`` --
+        the TPC-H primary keys) gets its build-side join index built
+        here, so compiled joins probe a device-resident sorted index
+        instead of re-sorting the build side per execution (DESIGN.md
+        section 10).  ``indexes=False`` restores column-only preload.
+        """
         for name in names or self.catalog.names():
             tbl = self.catalog.table(name)
             for f in tbl.schema:
                 self.cache.get(tbl, f.name)
+                if indexes and f.unique and f.dtype in (
+                        T.INT32, T.INT64, T.DATE):
+                    try:
+                        self.cache.get_index(tbl, (f.name,))
+                    except ENG.UnindexableKeyError:
+                        pass  # int32-overflowing key: joins stay inline
 
 
 class DataFrame:
@@ -222,7 +239,7 @@ class DataFrame:
 
     def lower(self, engine: str = "compiled",
               native: bool = False, mesh=None,
-              axis: str = "data") -> S.Lowered:
+              axis: str = "data", join_index: bool = True) -> S.Lowered:
         """Optimize + lower this query for ``engine``.
 
         Returns a :class:`repro.core.stages.Lowered`: inspect the plan via
@@ -241,9 +258,13 @@ class DataFrame:
         table is row-partitioned, per-shard partial aggregates merge
         with collectives, and one SPMD program serves every parameter
         binding per mesh shape (DESIGN.md section 9).
+
+        ``join_index=False`` disables the build-side join index cache:
+        joins re-sort their build keys inside the program (the
+        cold-path baseline of DESIGN.md section 10).
         """
         return self.ctx.lower(self.plan, engine, native=native,
-                              mesh=mesh, axis=axis)
+                              mesh=mesh, axis=axis, join_index=join_index)
 
     def params(self) -> Tuple[E.Param, ...]:
         """Param placeholders of this query (binding order)."""

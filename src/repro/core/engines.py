@@ -55,16 +55,122 @@ _BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit, P.MapBatches)
 # ---------------------------------------------------------------------------
 
 
+class UnindexableKeyError(ValueError):
+    """Key column(s) cannot back a cached join index (values outside
+    the engine's int32 key range).  ``preload`` skips such columns;
+    joins over them keep their in-program lowering."""
+
+
+@dataclasses.dataclass
+class JoinIndex:
+    """A build-side join index: the sorted permutation + sorted combined
+    keys of a base table's key columns -- the device-resident "hash
+    table" of the sorted-array join (DESIGN.md section 10).  Built ONCE
+    per (table, key columns) at preload/first use and closed over by
+    every compiled program that probes this build side; the in-program
+    ``argsort`` the join would otherwise re-run per execution is gone.
+    """
+
+    perm: jnp.ndarray     # int32 [n]: stable argsort of the combined keys
+    keys: jnp.ndarray     # int32 [n]: combined keys, sorted
+    unique: bool          # verified at build: no duplicate combined keys
+
+
+class IndexCache:
+    """Caches :class:`JoinIndex` entries per (table object, key columns).
+
+    The Flare lesson (paper section 4, Fig. 6) is that the join hash
+    table belongs to the *data*, not the query: indexing happens at load
+    time, execution only probes.  ``hits``/``misses`` give the same
+    telemetry surface as :class:`repro.core.stages.CompileCache`.
+
+    Declared-unique key columns (:attr:`repro.relational.table.Field.
+    unique`) are *verified* against the data here: a false declaration
+    fails loudly instead of silently mis-validating filtered build
+    sides.
+    """
+
+    def __init__(self):
+        self._entries: Dict[Tuple, JoinIndex] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(tbl: T.Table, key_cols: Tuple[str, ...],
+             doms: Tuple[int, ...]) -> Tuple:
+        # single-column keys combine to the raw column values, so the
+        # domain bounds are not part of the index identity there
+        return (id(tbl), tuple(key_cols),
+                tuple(doms) if len(key_cols) > 1 else ())
+
+    def get(self, tbl: T.Table, key_cols: Tuple[str, ...],
+            doms: Tuple[int, ...] = ()) -> JoinIndex:
+        key = self._key(tbl, key_cols, doms)
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            entry = self._build(tbl, tuple(key_cols), tuple(doms))
+            self._entries[key] = entry
+        else:
+            self.hits += 1
+        return entry
+
+    @staticmethod
+    def _build(tbl: T.Table, key_cols: Tuple[str, ...],
+               doms: Tuple[int, ...]) -> JoinIndex:
+        # combine in int64 first: casting to the engine's int32 keys
+        # must be exact, and the uniqueness check must see the TRUE
+        # values (an int64 PK that truncates into collisions is
+        # unindexable, not a false "duplicate keys" declaration error)
+        kb = np.asarray(tbl[key_cols[0]]).astype(np.int64)
+        for c, d in zip(key_cols[1:], doms[1:]):
+            kb = kb * np.int64(d) + np.asarray(tbl[c]).astype(np.int64)
+        if len(kb) and (kb.min() < -(2 ** 31) or kb.max() >= 2 ** 31):
+            raise UnindexableKeyError(
+                f"combined join key over {list(key_cols)} exceeds the "
+                f"engine's int32 key range")
+        kb = kb.astype(np.int32)
+        # stable, matching jnp.argsort/np "stable": cached-index and
+        # in-program probes resolve duplicate keys to the SAME row
+        perm = np.argsort(kb, kind="stable")
+        keys = kb[perm]
+        unique = bool(np.all(keys[1:] != keys[:-1])) if len(keys) else True
+        declared = any(tbl.schema[c].unique for c in key_cols)
+        if declared and not unique:
+            raise ValueError(
+                f"column(s) {list(key_cols)} are declared unique "
+                f"(Field.unique) but hold duplicate keys")
+        return JoinIndex(jnp.asarray(perm.astype(np.int32)),
+                         jnp.asarray(keys), unique)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
 class DeviceCache:
     """Caches device-resident columns per (table object, column name).
 
     The paper's experiments distinguish "direct CSV" from "preloaded"
     execution; with a warm cache our engines run purely in-memory.
+    ``indexes`` is the companion :class:`IndexCache` holding build-side
+    join indexes (sorted permutation + sorted keys) with the same
+    lifetime as the cached columns.
     """
 
     def __init__(self):
         # (id(table), column) or (id(table), column, pad_to) -> device array
         self._cache: Dict[Tuple, jnp.ndarray] = {}
+        self.indexes = IndexCache()
 
     def get(self, tbl: T.Table, name: str) -> jnp.ndarray:
         key = (id(tbl), name)
@@ -93,8 +199,15 @@ class DeviceCache:
             self._cache[key] = arr
         return arr
 
+    def get_index(self, tbl: T.Table, key_cols: Tuple[str, ...],
+                  doms: Tuple[int, ...] = ()) -> JoinIndex:
+        """The build-side join index for ``key_cols`` of ``tbl``
+        (built lazily on first use, cached device-resident)."""
+        return self.indexes.get(tbl, key_cols, doms)
+
     def clear(self):
         self._cache.clear()
+        self.indexes.clear()
 
 
 # ---------------------------------------------------------------------------

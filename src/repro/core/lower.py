@@ -353,6 +353,108 @@ def _combine_keys(keys: Sequence[jnp.ndarray], doms: Sequence[int]) -> jnp.ndarr
 
 
 # ---------------------------------------------------------------------------
+# phase A: build-side join index resolution (DESIGN.md section 10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinIndexSpec:
+    """A join whose build side resolves to a cached base-table index.
+
+    ``table``/``key_cols`` name the scan-level key columns the index is
+    built over (after mapping the join's ``right_on`` names back through
+    any Project renames); ``doms`` are the per-key combine domains (the
+    same ``max(left, right)`` bounds the traced join uses, so cached and
+    in-program combined keys agree bit-for-bit).  ``masked`` marks a
+    filtered build side: the cached index covers the UNFILTERED table
+    and the probe validates the matched row's filter mask post-probe --
+    exact because the keys are unique (declared via ``Field.unique``,
+    verified at index build time).
+    """
+
+    table: str
+    key_cols: Tuple[str, ...]
+    doms: Tuple[int, ...]
+    masked: bool
+
+
+def resolve_build_index(p: P.Join, catalog: P.Catalog
+                        ) -> Tuple[Optional[JoinIndexSpec], str]:
+    """Can this join's build side be served by a cached base-table
+    index?  Returns ``(spec, reason)`` -- spec None when the join must
+    keep its in-program argsort, with the reason for the report."""
+    node = p.right
+    mapping = {k: k for k in p.right_on}  # right_on name -> current name
+    masked = False
+    while not isinstance(node, P.Scan):
+        if isinstance(node, P.Filter):
+            masked = True
+            node = node.child
+            continue
+        if isinstance(node, P.Project):
+            outs = dict(node.outputs)
+            new = {}
+            for orig, cur in mapping.items():
+                e = outs.get(cur)
+                if isinstance(e, E.WithDomain):
+                    e = e.arg  # domain annotations pass values through
+                if not isinstance(e, E.Col):
+                    return None, (f"build key {orig!r} is computed, not a "
+                                  "base-table column")
+                new[orig] = e.name
+            mapping = new
+            node = node.child
+            continue
+        return None, (f"build side is {node.describe()}, not a base-table "
+                      "scan")
+    tbl = catalog.table(node.table)
+    if tbl.num_rows == 0:
+        return None, "empty build table"
+    key_cols = tuple(mapping[k] for k in p.right_on)
+    left_i = static_info(p.left, catalog)
+    right_i = static_info(p.right, catalog)
+    ldoms = [left_i.cols[k].group_domain or int(_I32_MAX) for k in p.left_on]
+    rdoms = [right_i.cols[k].group_domain or int(_I32_MAX) for k in p.right_on]
+    doms = tuple(max(a, b) for a, b in zip(ldoms, rdoms))
+    if len(key_cols) > 1 and any(d >= int(_I32_MAX) for d in doms):
+        return None, "composite join keys need Field.domain bounds"
+    if masked and not any(tbl.schema[c].unique for c in key_cols):
+        return None, ("filtered build side without a declared-unique key "
+                      "(Field.unique): post-probe mask validation would "
+                      "be inexact under duplicate keys")
+    return JoinIndexSpec(node.table, key_cols, doms, masked), "ok"
+
+
+def join_index_plan(p: P.Plan, catalog: P.Catalog
+                    ) -> Tuple[Dict[int, JoinIndexSpec],
+                               List[Tuple[P.Join, Optional[JoinIndexSpec],
+                                          str]]]:
+    """Resolve every Join in ``p`` against the index cache.  Returns
+    (id(join) -> spec for cache-served joins, per-join decisions in plan
+    walk order for the dispatch report)."""
+    specs: Dict[int, JoinIndexSpec] = {}
+    decisions: List[Tuple[P.Join, Optional[JoinIndexSpec], str]] = []
+
+    def rec(node: P.Plan):
+        if isinstance(node, P.Join):
+            spec, reason = resolve_build_index(node, catalog)
+            if spec is not None:
+                specs[id(node)] = spec
+            decisions.append((node, spec, reason))
+        for c in node.children():
+            rec(c)
+
+    rec(p)
+    return specs, decisions
+
+
+def index_stream_key(p: P.Join) -> Tuple[str, int]:
+    """The ``scans``-dict key under which a join's cached index streams
+    ride into the traced program (``build_callable`` populates it)."""
+    return ("joinidx", id(p))
+
+
+# ---------------------------------------------------------------------------
 # phase B: traced operators
 # ---------------------------------------------------------------------------
 
@@ -371,7 +473,9 @@ def _join_info(p: P.Join, left: StaticInfo, right: StaticInfo
 
 
 def _lower_join(p: P.Join, left: Stream, right: Stream,
-                catalog: P.Catalog) -> Stream:
+                catalog: P.Catalog,
+                jindex: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+                ) -> Stream:
     strategy = p.strategy or "sorted"
     # --- combined integer keys ------------------------------------------------
     ldoms = [left.info.cols[k].group_domain or int(_I32_MAX) for k in p.left_on]
@@ -382,13 +486,24 @@ def _lower_join(p: P.Join, left: Stream, right: Stream,
             if d >= int(_I32_MAX):
                 raise TypeError("composite join keys need Field.domain bounds")
     kp = _combine_keys([left.cols[k] for k in p.left_on], doms)
-    kb = _combine_keys([right.cols[k] for k in p.right_on], doms)
 
-    # --- build side: sort keys once (the 'hash table' analogue) ---------------
-    if right.mask is not None:
-        kb = jnp.where(right.mask, kb, _I32_MAX)  # invalid rows never match
-    perm = jnp.argsort(kb)
-    kb_sorted = kb[perm]
+    # --- build side: the 'hash table' analogue --------------------------------
+    if jindex is not None:
+        # cached index (DESIGN.md section 10): the sorted permutation +
+        # sorted keys were built ONCE at preload/first use and enter the
+        # program as arguments -- no in-program argsort.  The index
+        # covers the unfiltered base table; a filtered build side is
+        # validated post-probe against the matched row's mask (exact:
+        # keys are unique, see resolve_build_index).
+        perm, kb_sorted = jindex
+        validate_mask = right.mask
+    else:
+        kb = _combine_keys([right.cols[k] for k in p.right_on], doms)
+        if right.mask is not None:
+            kb = jnp.where(right.mask, kb, _I32_MAX)  # invalid rows never match
+        perm = jnp.argsort(kb)
+        kb_sorted = kb[perm]
+        validate_mask = None
 
     pmask = left.the_mask()
     if strategy == "sortmerge":
@@ -403,7 +518,10 @@ def _lower_join(p: P.Join, left: Stream, right: Stream,
         idx = jnp.searchsorted(kb_sorted, kp)
 
     idx_c = jnp.clip(idx, 0, kb_sorted.shape[0] - 1)
+    pos = perm[idx_c]  # build-table row of each (tentative) match
     matched = (kb_sorted[idx_c] == kp) & pmask
+    if validate_mask is not None:
+        matched = matched & validate_mask[pos]
 
     if p.how == "semi":
         return Stream(dict(left.cols), matched,
@@ -416,7 +534,7 @@ def _lower_join(p: P.Join, left: Stream, right: Stream,
     for name in right.cols:
         if name in p.right_on:
             continue
-        gathered = right.cols[name][perm][idx_c]
+        gathered = right.cols[name][pos]
         if p.how == "left":
             gathered = jnp.where(matched, gathered,
                                  jnp.zeros((), gathered.dtype))
@@ -595,7 +713,8 @@ def lower_node(p: P.Plan, catalog: P.Catalog, scans: Dict[int, Stream],
     if isinstance(p, P.Join):
         left = lower_node(p.left, catalog, scans, params)
         right = lower_node(p.right, catalog, scans, params)
-        return _lower_join(p, left, right, catalog)
+        return _lower_join(p, left, right, catalog,
+                           scans.get(index_stream_key(p)))
     if isinstance(p, P.Aggregate):
         child = lower_node(p.child, catalog, scans, params)
         return _lower_aggregate(p, child, catalog, params)
@@ -797,14 +916,25 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
                    param_specs: Sequence[E.Param] = (),
                    scan_stream_fn: Optional[Callable[..., Stream]] = None
                    ) -> Tuple[Callable[..., Any], List[Tuple[int, List[str]]],
-                              Optional[StaticInfo]]:
+                              List[JoinIndexSpec], Optional[StaticInfo]]:
     """Build the pure function over flat scan-column arrays.
 
-    Returns (fn, arg_layout, out_info) where arg_layout lists
-    (scan_node_id, column_names) in argument order.  If ``param_specs``
-    is non-empty, ``fn`` takes one trailing scalar argument per spec (in
-    spec order) -- the runtime values of :class:`repro.core.expr.Param`
-    placeholders, traced rather than baked into the program.
+    Returns (fn, arg_layout, index_layout, out_info) where arg_layout
+    lists (scan_node_id, column_names) in argument order.  If
+    ``param_specs`` is non-empty, ``fn`` takes one trailing scalar
+    argument per spec (in spec order) -- the runtime values of
+    :class:`repro.core.expr.Param` placeholders, traced rather than
+    baked into the program.
+
+    ``index_layout`` lists the :class:`JoinIndexSpec` of every join
+    whose build side is served by the cached base-table index (DESIGN.md
+    section 10): between the scan columns and the params, ``fn`` takes
+    one (perm, sorted-keys) int32 array pair per entry, in layout order.
+    Engines fetch those from :class:`repro.core.engines.IndexCache` at
+    call time, so the "hash table" is built at load time and the
+    program only probes.  Setting ``p._join_index_disabled`` (the
+    ``lower(join_index=False)`` escape hatch) keeps every join on its
+    in-program argsort.
 
     ``scan_stream_fn(scan_node, cols, static)``, when given, builds the
     leaf :class:`Stream` for each Scan instead of the default (full
@@ -833,13 +963,19 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
     layout = [(id(s), needed[id(s)]) for s in scan_nodes]
     statics = {id(s): _static_of_scan(catalog.table(s.table))
                for s in scan_nodes}
+    if getattr(p, "_join_index_disabled", False):
+        index_specs: Dict[int, JoinIndexSpec] = {}
+    else:
+        index_specs, _ = join_index_plan(p, catalog)
+    index_items = list(index_specs.items())  # plan-walk order = arg order
+    index_layout = [spec for _, spec in index_items]
     ml_root = isinstance(p, P.IterativeKernel)
     out_info = None if ml_root else static_info(p, catalog)
     param_specs = tuple(param_specs)
 
     def fn(*flat_arrays):
         it = iter(flat_arrays)
-        scans: Dict[int, Stream] = {}
+        scans: Dict[Any, Any] = {}
         for s in scan_nodes:
             cols = {name: next(it) for name in needed[id(s)]}
             static = StaticInfo(
@@ -849,6 +985,10 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
                 scans[id(s)] = scan_stream_fn(s, cols, static)
             else:
                 scans[id(s)] = Stream(cols, None, static)
+        for jid, _spec in index_items:
+            perm = next(it)
+            keys = next(it)
+            scans[("joinidx", jid)] = (perm, keys)
         env = {spec.name: next(it) for spec in param_specs}
         if ml_root:
             stream = lower_node(p.child, catalog, scans, env or None)
@@ -857,4 +997,4 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
         out_cols = {n: stream.cols[n] for n in p.schema(catalog).names}
         return out_cols, (stream.the_mask())
 
-    return fn, layout, out_info
+    return fn, layout, index_layout, out_info

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core import expr as E
 from repro.core import plan as P
+from repro.core.lower import _match_str as L_match
 
 # ---------------------------------------------------------------------------
 # expression rules
@@ -215,11 +216,97 @@ def prune_projections(p: P.Plan, catalog: P.Catalog) -> P.Plan:
 # ---------------------------------------------------------------------------
 
 
+#: Selectivity guess for predicate shapes with no usable statistics
+#: (range comparisons, UDFs, ...): the classic 1/3.
+_DEFAULT_SELECTIVITY = 1.0 / 3.0
+
+
+def _pred_stats(e: E.Expr, p: P.Plan, catalog: P.Catalog
+                ) -> Tuple[Optional[Tuple[str, ...]], Optional[int]]:
+    """(dictionary, domain) of the column a predicate side references,
+    walking simple Project aliases down to the backing Scan for the
+    dictionary (domains ride on the schema already)."""
+    if not isinstance(e, E.Col):
+        return None, None
+    schema = p.schema(catalog)
+    if e.name not in schema:
+        return None, None
+    domain = schema[e.name].domain
+    name, node = e.name, p
+    while True:
+        if isinstance(node, P.Scan):
+            return catalog.table(node.table).dictionary(name), domain
+        if isinstance(node, P.Filter):
+            node = node.child
+            continue
+        if isinstance(node, P.Project):
+            target = dict(node.outputs).get(name)
+            if isinstance(target, E.WithDomain):
+                target = target.arg
+            if not isinstance(target, E.Col):
+                return None, domain
+            name, node = target.name, node.child
+            continue
+        return None, domain
+
+
+def _conjunct_selectivity(c: E.Expr, p: P.Plan,
+                          catalog: P.Catalog) -> float:
+    """Dictionary/domain-aware selectivity of one filter conjunct.
+
+    Equality against a literal on a dictionary column hits 1/|dict| of
+    the rows (uniform-dictionary assumption); dense-domain ints
+    likewise 1/domain; ``isin`` scales by the member count; string
+    predicates evaluate their LUT over the dictionary EXACTLY (the same
+    dispatch-time evaluation the compiled engine bakes in).  Everything
+    else keeps the 1/3 guess.
+    """
+    if isinstance(c, E.Cmp) and c.op in ("==", "!="):
+        sides = ((c.left, c.right), (c.right, c.left))
+        for colside, litside in sides:
+            if not isinstance(litside, E.Lit):
+                continue
+            d, dom = _pred_stats(colside, p, catalog)
+            card = len(d) if d is not None else dom
+            if card:
+                sel = 1.0 / card
+                return sel if c.op == "==" else 1.0 - sel
+    if isinstance(c, E.InSet):
+        d, dom = _pred_stats(c.arg, p, catalog)
+        card = len(d) if d is not None else dom
+        if card:
+            return min(1.0, len(c.values) / card)
+    if isinstance(c, E.StrPred):
+        d, _ = _pred_stats(c.arg, p, catalog)
+        if d:
+            lut = [L_match(c.kind, s, c.params) for s in d]
+            return max(sum(lut) / len(lut), 1e-6)
+    if isinstance(c, E.BoolOp) and c.op == "or":
+        disj = 1.0
+        for a in c.args:
+            disj *= 1.0 - _conjunct_selectivity(a, p, catalog)
+        return 1.0 - disj
+    if isinstance(c, E.Not):
+        return 1.0 - _conjunct_selectivity(c.arg, p, catalog)
+    return _DEFAULT_SELECTIVITY
+
+
+def filter_selectivity(pred: E.Expr, child: P.Plan,
+                       catalog: P.Catalog) -> float:
+    """Estimated surviving fraction of a Filter (conjuncts independent)."""
+    sel = 1.0
+    for c in split_conjuncts(pred):
+        sel *= _conjunct_selectivity(c, child, catalog)
+    return sel
+
+
 def estimate_rows(p: P.Plan, catalog: P.Catalog) -> int:
     if isinstance(p, P.Scan):
         return catalog.table(p.table).num_rows
     if isinstance(p, P.Filter):
-        return max(1, estimate_rows(p.child, catalog) // 3)  # naive selectivity
+        child = estimate_rows(p.child, catalog)
+        return max(1, int(child * filter_selectivity(p.pred, p.child,
+                                                     catalog)))
     if isinstance(p, P.Project):
         return estimate_rows(p.child, catalog)
     if isinstance(p, P.Join):
@@ -273,7 +360,6 @@ def reorder_joins(p: P.Plan, catalog: P.Catalog) -> P.Plan:
         probe = cur
         probe_names = set(probe.schema(catalog).names)
         builds = []
-        avail = set(probe_names)
         for j in reversed(chain):
             # keys must come from the original probe side for safe reorder
             if not set(j.left_on) <= probe_names:

@@ -339,7 +339,8 @@ def _partial_of(agg: PL.Aggregate) -> Tuple[PL.Aggregate, Tuple, Tuple,
 
 
 def shard_plan(p: PL.Plan, catalog: PL.Catalog, mesh: Optional[Mesh] = None,
-               axis: str = "data", native: bool = False
+               axis: str = "data", native: bool = False,
+               join_index: bool = True
                ) -> Tuple[PL.Plan, Optional[ShardedDispatchReport]]:
     """Rewrite an optimized plan for sharded execution on ``mesh``.
 
@@ -392,7 +393,8 @@ def shard_plan(p: PL.Plan, catalog: PL.Catalog, mesh: Optional[Mesh] = None,
         from repro.native import dispatch as ND
         # annotation AFTER shard planning: the partial aggregate (not
         # the original avg form) is what each shard's kernel computes
-        sharded, base = ND.rewrite_plan(sharded, catalog)
+        sharded, base = ND.rewrite_plan(sharded, catalog,
+                                        join_index=join_index)
         report = ShardedDispatchReport(decisions=list(base.decisions),
                                        n_shards=n_shards, axis=axis)
     return sharded, report
@@ -408,6 +410,9 @@ class _ParallelArtifact:
     wrapped: Any                     # shard_map-wrapped traced function
     # (table, columns, is_spine) per scan, in argument order
     layout: Tuple[Tuple[str, Tuple[str, ...], bool], ...]
+    # build-side join indexes, replicated across the mesh (the build
+    # tables are replicated, so their indexes are too)
+    index_layout: Tuple[L.JoinIndexSpec, ...]
     avals: Tuple[jax.ShapeDtypeStruct, ...]
     param_specs: Tuple[E.Param, ...]
     out_info: L.StaticInfo
@@ -450,7 +455,7 @@ class ParallelEngine:
                 mask = gidx < np.int32(true_rows)
             return L.Stream(cols, mask, L.StaticInfo(static.cols, n))
 
-        fn, id_layout, out_info = L.build_callable(
+        fn, id_layout, index_layout, out_info = L.build_callable(
             p, catalog, param_specs, scan_stream_fn=scan_stream)
         smap = ENG.scan_map(p)
         layout: List[Tuple[str, Tuple[str, ...], bool]] = []
@@ -465,6 +470,13 @@ class ParallelEngine:
                 avals.append(jax.ShapeDtypeStruct(
                     (n,), jax.dtypes.canonicalize_dtype(tbl[name].dtype)))
                 in_specs.append(P(axis) if is_spine else P())
+        for spec in index_layout:
+            # replicated like the build tables they index (the spine is
+            # always the probe side, never a build side)
+            n = catalog.table(spec.table).num_rows
+            for _ in range(2):  # perm, keys
+                avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+                in_specs.append(P())
         for s in param_specs:
             avals.append(jax.ShapeDtypeStruct(
                 (), jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))))
@@ -475,7 +487,8 @@ class ParallelEngine:
         wrapped = shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
                             out_specs=out_specs, check_rep=False)
         jax_lowered = jax.jit(wrapped).lower(*avals)
-        return _ParallelArtifact(wrapped, tuple(layout), tuple(avals),
+        return _ParallelArtifact(wrapped, tuple(layout),
+                                 tuple(index_layout), tuple(avals),
                                  tuple(param_specs), out_info, schema,
                                  pad_to, jax_lowered)
 
@@ -488,6 +501,7 @@ class ParallelEngine:
     def compile(self, artifact: _ParallelArtifact) -> S.Executor:
         exe = artifact.jax_lowered.compile()
         layout, specs = artifact.layout, artifact.param_specs
+        index_layout = artifact.index_layout
         pdtypes = [a.dtype for a in artifact.avals[len(artifact.avals)
                                                    - len(specs):]]
         out_info, schema, pad_to = (artifact.out_info, artifact.schema,
@@ -501,6 +515,7 @@ class ParallelEngine:
                 for n in names:
                     args.append(device_cache.get_padded(tbl, n, pad_to)
                                 if is_spine else device_cache.get(tbl, n))
+            args.extend(S.index_args(index_layout, catalog, device_cache))
             for s, dt in zip(specs, pdtypes):
                 args.append(jnp.asarray(ENG.require_param(params, s), dt))
             out_cols, mask = exe(*args)

@@ -62,7 +62,8 @@ Executor = Callable[[P.Catalog, ENG.DeviceCache, Optional[Dict[str, Any]]],
 # ---------------------------------------------------------------------------
 
 
-def template_key(engine: str, p: P.Plan, catalog: P.Catalog) -> Tuple:
+def template_key(engine: str, p: P.Plan, catalog: P.Catalog,
+                 index_specs: Optional[Dict[int, Any]] = None) -> Tuple:
     """Structural cache key of a (engine, plan, table-metadata) template.
 
     Param placeholders fingerprint structurally (``p:name:dtype``), so two
@@ -70,14 +71,29 @@ def template_key(engine: str, p: P.Plan, catalog: P.Catalog) -> Tuple:
     Dictionary CONTENTS are baked into compiled programs (string-predicate
     LUTs, comparison codes, decode tables), so the key must cover them,
     not just their lengths.
+
+    Join-index identity is part of the key: which joins lower against a
+    cached build-side index (and over which table/key columns) changes
+    the program's argument layout, so an index-served template and an
+    argsort template never share an executable -- while every parameter
+    binding of one template still does (the index rides as runtime
+    arguments, not baked constants).
     """
     parts: List[Any] = [engine, p.fingerprint()]
     for name in sorted(set(ENG.scan_tables(p))):
         tbl = catalog.table(name)
         parts.append((name, tbl.num_rows,
-                      tuple((f.name, f.dtype, f.domain,
+                      tuple((f.name, f.dtype, f.domain, f.unique,
                              hash(tbl.dictionary(f.name) or ()))
                             for f in tbl.schema)))
+    if getattr(p, "_join_index_disabled", False):
+        parts.append(("joinidx", "disabled"))
+    else:
+        if index_specs is None:  # direct callers; lower_plan passes its own
+            index_specs, _ = L.join_index_plan(p, catalog)
+        parts.append(("joinidx", tuple(
+            (s.table, s.key_cols, s.doms, s.masked)
+            for s in index_specs.values())))
     return tuple(parts)
 
 
@@ -219,6 +235,9 @@ class _WholeQueryArtifact:
     fn: Callable
     # (table_name, column_names) per scan, in argument order
     layout: Tuple[Tuple[str, Tuple[str, ...]], ...]
+    # cached build-side join indexes: one (perm, keys) argument pair per
+    # spec, between the scan columns and the params (DESIGN.md sec. 10)
+    index_layout: Tuple[L.JoinIndexSpec, ...]
     avals: Tuple[jax.ShapeDtypeStruct, ...]
     param_specs: Tuple[E.Param, ...]
     # None for IterativeKernel roots: the program returns a kernel
@@ -226,6 +245,21 @@ class _WholeQueryArtifact:
     out_info: Optional[L.StaticInfo]
     schema: Optional[T.Schema]
     jax_lowered: Any  # jax.stages.Lowered
+
+
+def index_args(index_layout: Tuple[L.JoinIndexSpec, ...],
+               catalog: P.Catalog, device_cache: ENG.DeviceCache
+               ) -> List[jnp.ndarray]:
+    """Fetch the (perm, sorted-keys) pairs for an executable's join-index
+    layout from the device cache (built on first use, then device-
+    resident -- the IndexCache hit-rate telemetry counts this)."""
+    args: List[jnp.ndarray] = []
+    for spec in index_layout:
+        idx = device_cache.get_index(catalog.table(spec.table),
+                                     spec.key_cols, spec.doms)
+        args.append(idx.perm)
+        args.append(idx.keys)
+    return args
 
 
 class WholeQueryEngine:
@@ -240,7 +274,8 @@ class WholeQueryEngine:
 
     def lower(self, p: P.Plan, catalog: P.Catalog,
               param_specs: Tuple[E.Param, ...]) -> _WholeQueryArtifact:
-        fn, id_layout, out_info = L.build_callable(p, catalog, param_specs)
+        fn, id_layout, index_layout, out_info = L.build_callable(
+            p, catalog, param_specs)
         smap = ENG.scan_map(p)
         layout = tuple((smap[sid], tuple(names)) for sid, names in id_layout)
         avals: List[jax.ShapeDtypeStruct] = []
@@ -250,13 +285,18 @@ class WholeQueryEngine:
                 avals.append(jax.ShapeDtypeStruct(
                     (tbl.num_rows,),
                     jax.dtypes.canonicalize_dtype(tbl[n].dtype)))
+        for spec in index_layout:
+            n = catalog.table(spec.table).num_rows
+            avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # perm
+            avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # keys
         for s in param_specs:
             avals.append(jax.ShapeDtypeStruct(
                 (), jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))))
         jax_lowered = jax.jit(fn).lower(*avals)
         schema = (None if isinstance(p, P.IterativeKernel)
                   else p.schema(catalog))
-        return _WholeQueryArtifact(fn, layout, tuple(avals), param_specs,
+        return _WholeQueryArtifact(fn, layout, tuple(index_layout),
+                                   tuple(avals), param_specs,
                                    out_info, schema, jax_lowered)
 
     def compiler_ir(self, artifact: _WholeQueryArtifact,
@@ -268,6 +308,7 @@ class WholeQueryEngine:
     def compile(self, artifact: _WholeQueryArtifact) -> Executor:
         exe = artifact.jax_lowered.compile()
         layout, specs = artifact.layout, artifact.param_specs
+        index_layout = artifact.index_layout
         pdtypes = [a.dtype for a in artifact.avals[len(artifact.avals)
                                                    - len(specs):]]
         out_info, schema = artifact.out_info, artifact.schema
@@ -279,6 +320,7 @@ class WholeQueryEngine:
                 tbl = catalog.table(tname)
                 for n in names:
                     args.append(device_cache.get(tbl, n))
+            args.extend(index_args(index_layout, catalog, device_cache))
             for s, dt in zip(specs, pdtypes):
                 args.append(jnp.asarray(ENG.require_param(params, s), dt))
             out = exe(*args)
@@ -478,8 +520,12 @@ class Lowered:
     def dispatch_report(self) -> Optional[Any]:
         """Native kernel dispatch report
         (:class:`repro.native.registry.DispatchReport`): which patterns
-        fired and which fragments fell back.  None unless this template
-        was lowered with ``native=True`` / ``compiled-native``."""
+        fired and which fragments fell back -- populated by
+        ``native=True`` / ``compiled-native``.  Its ``index_decisions``
+        name, per join, whether the build side probes the cached join
+        index or rebuilds in-program (present for any compiled/parallel
+        template with joins).  None for interpreted engines and for
+        join-free non-native templates."""
         return self._dispatch_report
 
     def compiler_ir(self, dialect: Optional[str] = None) -> Any:
@@ -578,16 +624,61 @@ class Compiled:
 # ---------------------------------------------------------------------------
 
 
+def _add_index_decisions(p: P.Plan, catalog: P.Catalog,
+                         report: Optional[Any], join_index: bool,
+                         decisions: Optional[List] = None
+                         ) -> Optional[Any]:
+    """Record, per join, whether the build side probes the cached index
+    or rebuilds in-program -- on the template's dispatch report (created
+    when absent, so every compiled/parallel template with joins carries
+    one even without ``native=True``)."""
+    if not join_index:
+        decisions = [(j, None, "join index cache disabled "
+                      "(join_index=False)")
+                     for j in _joins_of(p)]
+    elif decisions is None:
+        _, decisions = L.join_index_plan(p, catalog)
+    if not decisions:
+        return report
+    from repro.native import registry as NR  # lazy: telemetry types only
+    if report is None:
+        report = NR.DispatchReport()
+    for join, spec, reason in decisions:
+        report.index_decisions.append(NR.Decision(
+            pattern="join-index", node=join.describe(),
+            fired=spec is not None, mode="cached" if spec else "",
+            reason="ok" if spec else reason))
+    return report
+
+
+def _joins_of(p: P.Plan) -> List[P.Plan]:
+    out: List[P.Plan] = []
+
+    def rec(n: P.Plan):
+        if isinstance(n, P.Join):
+            out.append(n)
+        for c in n.children():
+            rec(c)
+
+    rec(p)
+    return out
+
+
 def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
                device_cache: Optional[ENG.DeviceCache] = None,
                compile_cache: Optional[CompileCache] = None,
                native: bool = False, mesh: Optional[Any] = None,
-               axis: str = "data") -> Lowered:
+               axis: str = "data", join_index: bool = True) -> Lowered:
     """Lower an (already optimized) plan for ``engine``.
 
     The DataFrame front end (``df.lower(engine=...)``) optimizes first
     and passes its context's device + compile caches; direct callers get
     process-wide defaults.
+
+    ``join_index=False`` disables the build-side join index cache
+    (DESIGN.md section 10): every join keeps its in-program argsort.
+    This is the cold/baseline path benchmarks compare against; templates
+    lowered with and without the cache get distinct cache keys.
 
     ``native=True`` (or ``engine="compiled-native"``, the registry
     alias) runs the :mod:`repro.native` dispatch pass over the plan
@@ -612,7 +703,8 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
         # handles native annotation itself (partial aggregates first)
         from repro.core import parallel as PAR
         p, dispatch_report = PAR.shard_plan(p, catalog, mesh=mesh,
-                                            axis=axis, native=native)
+                                            axis=axis, native=native,
+                                            join_index=join_index)
     else:
         if mesh is not None:
             raise ValueError(
@@ -622,14 +714,32 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
         if engine == "compiled-native":
             # lazy import: registers the patterns + the engine alias
             from repro.native import dispatch as ND
-            p, dispatch_report = ND.rewrite_plan(p, catalog)
+            p, dispatch_report = ND.rewrite_plan(p, catalog,
+                                                 join_index=join_index)
         elif native:
             raise ValueError(
                 f"native=True requires the 'compiled' or 'parallel' "
                 f"engine, got {engine!r}")
+    index_specs: Optional[Dict[int, Any]] = None
+    if engine in ("compiled", "compiled-native", "parallel"):
+        if join_index:
+            # resolved ONCE here; template_key and the report consume
+            # it (build_callable re-resolves lazily at artifact time)
+            index_specs, index_decisions = L.join_index_plan(p, catalog)
+        else:
+            index_specs, index_decisions = {}, None
+            if _joins_of(p):
+                # disable on a PRIVATE root copy: the marker must not
+                # leak onto a plan object the caller may re-lower with
+                # the cache enabled
+                p = p.with_children(p.children())
+                p._join_index_disabled = True
+        dispatch_report = _add_index_decisions(p, catalog, dispatch_report,
+                                               join_index,
+                                               decisions=index_decisions)
     eng = get_engine(engine)
     specs = P.params_of(p)
-    key = template_key(engine, p, catalog)
+    key = template_key(engine, p, catalog, index_specs=index_specs)
     return Lowered(p, catalog, eng, specs, key,
                    device_cache if device_cache is not None
                    else ENG._DEFAULT_CACHE,

@@ -182,7 +182,7 @@ def write_flarecol(tbl: T.Table, path: str) -> None:
             buf = np.ascontiguousarray(col.data).tobytes()
             meta["columns"].append({
                 "name": fld.name, "dtype": fld.dtype,
-                "domain": fld.domain,
+                "domain": fld.domain, "unique": fld.unique,
                 "offset": f.tell(), "nbytes": len(buf),
                 "np_dtype": str(col.data.dtype),
                 "dictionary": list(col.dictionary) if col.dictionary else None,
@@ -212,5 +212,6 @@ def read_flarecol(path: str,
             arr = np.frombuffer(raw, dtype=np.dtype(cm["np_dtype"])).copy()
             d = tuple(cm["dictionary"]) if cm["dictionary"] else None
             cols[cm["name"]] = T.Column(arr, cm["dtype"], d)
-            fields.append(T.Field(cm["name"], cm["dtype"], cm["domain"]))
+            fields.append(T.Field(cm["name"], cm["dtype"], cm["domain"],
+                                  cm.get("unique", False)))
     return T.Table(cols, T.Schema(fields))

@@ -1,0 +1,222 @@
+"""Fused join probe + gather + residual filter + partial aggregate.
+
+The compiled engine's sorted-array join (paper Fig. 6: the in-memory
+hash-join analogue) probes with a vectorised binary search against the
+build side's sorted keys.  With the build index hoisted into the
+device-resident :class:`repro.core.engines.IndexCache` (DESIGN.md
+section 10), the steady-state work of a join-bearing fragment is
+exactly: probe, gather the matched build row, apply the residual
+predicate, accumulate.  This kernel fuses those four steps into ONE
+Pallas pass over the probe stream -- the join never materialises.
+
+Layout: probe-side columns stream as [rows, 128] lane-aligned f32
+blocks (the grid walks row blocks); the cached build-side arrays
+(sorted keys, sorted filter mask, sorted payload columns -- all small,
+the N:1 build side) ride in whole, pinned across grid steps by a
+constant-index BlockSpec; runtime query parameters arrive via scalar
+prefetch like the other kernels, so prepared templates stay ONE
+compilation across bindings.
+
+Accumulation:
+
+* keyless -- per-output [1, 128] lane partial sums (the
+  ``filter_agg`` scheme), final lane-reduce in the caller;
+* grouped, ``accum="onehot"`` -- the ``segmented_reduce`` one-hot MXU
+  scheme, group domains up to MAX_GROUPS, with "max" rows for the FD
+  ``any_`` carry-along;
+* grouped, ``accum="scatter"`` -- ``.at[].add/.max`` into the
+  [n_out, G] accumulator, for group domains far beyond the one-hot
+  VMEM budget (TPC-H Q3 groups by l_orderkey: ~15k groups at SF 0.01).
+  Scatter is hostile to the TPU vector memory model, so this path is
+  *interpret-mode only* (eligibility in ``repro.native.patterns``
+  enforces it); on real TPUs such fragments keep the generic lowering.
+
+The in-kernel binary search (``probe_sorted``) and payload gathers use
+``jnp.searchsorted``/``jnp.take``; Mosaic support for dynamic gathers
+is the TPU-native caveat here -- this container exercises the kernels
+in interpret mode, where both are exact and fast.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+
+#: Scatter-accumulated group domains are bounded only by the [n_out, G]
+#: accumulator, not a one-hot tile; this is a sanity backstop.
+SCATTER_MAX_GROUPS = 1 << 20
+
+
+def pad_build(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """Pad a 1-D build-side array to a lane multiple, as a [rows, 128]
+    resident block.  Key arrays pad with +inf (no probe ever matches),
+    masks and payload with 0."""
+    n = x.shape[0]
+    padded = (n + LANES - 1) // LANES * LANES
+    x = jnp.pad(x, (0, padded - n), constant_values=fill)
+    return x.reshape(padded // LANES, LANES)
+
+
+def probe_sorted(kb_flat: jnp.ndarray, kp: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary-search probe: left-insertion positions of ``kp`` in the
+    sorted ``kb_flat`` plus the exact-hit mask.  Clipped so gathers stay
+    in range; padded +inf build slots never report a hit."""
+    idx = jnp.clip(jnp.searchsorted(kb_flat, kp), 0,
+                   kb_flat.shape[0] - 1).astype(jnp.int32)
+    hit = jnp.take(kb_flat, idx, mode="clip") == kp
+    return idx, hit
+
+
+#: body_fn(scal_ref, probe_blocks, build_arrays) -> (vals, codes).
+#: ``vals`` is one [block_rows, 128] f32 array per accumulator slot,
+#: already probe/predicate-weighted ("sum" slots carry 0 for excluded
+#: rows, "max" slots their fill); ``codes`` is the int32 group-code
+#: block (None for keyless fragments).  Built from the query's join +
+#: expression tree by ``repro.native.patterns``.
+BodyFn = Callable[..., Tuple[List[jnp.ndarray], Optional[jnp.ndarray]]]
+
+
+def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
+                   build_arrays: Sequence[jnp.ndarray], scal: jnp.ndarray,
+                   n_out: int, block_rows: int, *,
+                   num_groups: Optional[int] = None,
+                   ops: Optional[Sequence[str]] = None,
+                   fills: Optional[Sequence[float]] = None,
+                   accum: str = "onehot",
+                   interpret: bool = False):
+    """Run the fused probe/gather/filter/aggregate pass.
+
+    ``probe_cols`` are [rows, 128] pre-padded blocks; ``build_arrays``
+    [brows, 128] resident blocks (see :func:`pad_build`).  Keyless
+    (``num_groups=None``): returns ``n_out`` [1, 128] lane partials.
+    Grouped: returns the [n_out, G] f32 group accumulator.
+    """
+    rows = probe_cols[0].shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    n_probe = len(probe_cols)
+    n_build = len(build_arrays)
+    grid = (rows // block_rows,)
+    pspec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
+    bspecs = [pl.BlockSpec(b.shape, lambda i, s: (0, 0))
+              for b in build_arrays]
+
+    if num_groups is None:
+        def kern(scal_ref, *refs):
+            p_refs = refs[:n_probe]
+            b_refs = refs[n_probe:n_probe + n_build]
+            out_refs = refs[n_probe + n_build:n_probe + n_build + n_out]
+            acc_refs = refs[n_probe + n_build + n_out:]
+            i = pl.program_id(0)
+
+            @pl.when(i == 0)
+            def _init():
+                for a in acc_refs:
+                    a[...] = jnp.zeros_like(a)
+
+            vals, _ = body_fn(scal_ref, [r[...] for r in p_refs],
+                              [r[...] for r in b_refs])
+            assert len(vals) == n_out, (len(vals), n_out)
+            for j in range(n_out):
+                acc_refs[j][...] += jnp.sum(vals[j], axis=0, keepdims=True)
+
+            @pl.when(i == pl.num_programs(0) - 1)
+            def _flush():
+                for j in range(n_out):
+                    out_refs[j][...] = acc_refs[j][...]
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pspec] * n_probe + bspecs,
+            out_specs=[pl.BlockSpec((1, LANES),
+                                    lambda i, s: (0, 0))] * n_out,
+            scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)] * n_out,
+        )
+        return pl.pallas_call(
+            kern,
+            out_shape=[jax.ShapeDtypeStruct((1, LANES),
+                                            jnp.float32)] * n_out,
+            grid_spec=grid_spec,
+            interpret=interpret,
+        )(scal, *probe_cols, *build_arrays)
+
+    # -- grouped ---------------------------------------------------------------
+    assert accum in ("onehot", "scatter"), accum
+    assert num_groups <= SCATTER_MAX_GROUPS, num_groups
+    ops = tuple(ops) if ops is not None else ("sum",) * n_out
+    assert len(ops) == n_out and set(ops) <= {"sum", "max"}, ops
+    fills = tuple(fills) if fills is not None else (0.0,) * n_out
+    max_rows = [j for j, op in enumerate(ops) if op == "max"]
+
+    def kern(scal_ref, *refs):
+        p_refs = refs[:n_probe]
+        b_refs = refs[n_probe:n_probe + n_build]
+        o_ref, acc_ref = refs[n_probe + n_build], refs[n_probe + n_build + 1]
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            # scalar-literal init: Pallas kernels must not capture
+            # array constants
+            acc_ref[...] = jnp.stack(
+                [jnp.full((num_groups,), fills[j] if op == "max"
+                          else 0.0, jnp.float32)
+                 for j, op in enumerate(ops)])
+
+        vals, codes = body_fn(scal_ref, [r[...] for r in p_refs],
+                              [r[...] for r in b_refs])
+        assert len(vals) == n_out, (len(vals), n_out)
+        flat_v = jnp.stack([v.reshape(-1) for v in vals])   # [n_out, N]
+        flat_c = codes.reshape(-1)                          # [N] int32
+        if accum == "onehot":
+            flat_sum = jnp.stack([v.reshape(-1) if op == "sum"
+                                  else jnp.zeros_like(v.reshape(-1))
+                                  for v, op in zip(vals, ops)])
+            onehot = (jax.lax.broadcasted_iota(
+                jnp.int32, (flat_c.shape[0], num_groups), 1)
+                == flat_c[:, None])
+            acc = acc_ref[...] + jnp.dot(
+                flat_sum, onehot.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            for j in max_rows:
+                masked = jnp.where(onehot, flat_v[j][:, None],
+                                   jnp.float32(fills[j]))
+                acc = acc.at[j].set(jnp.maximum(acc[j],
+                                                jnp.max(masked, axis=0)))
+        else:
+            acc = acc_ref[...]
+            for j, op in enumerate(ops):
+                row = acc[j]
+                if op == "sum":
+                    row = row.at[flat_c].add(flat_v[j])
+                else:
+                    row = row.at[flat_c].max(flat_v[j])
+                acc = acc.at[j].set(row)
+        acc_ref[...] = acc
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _flush():
+            o_ref[...] = acc_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pspec] * n_probe + bspecs,
+        out_specs=pl.BlockSpec((n_out, num_groups), lambda i, s: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((n_out, num_groups), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n_out, num_groups), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(scal, *probe_cols, *build_arrays)

@@ -1,0 +1,64 @@
+"""Public wrapper: index build + padding + jit for the probe kernel.
+
+The index build (`argsort` of the build keys) happens HERE, outside the
+kernel and outside any compiled query program -- the load-time /
+execution-time split of DESIGN.md section 10.  The engine-level
+equivalent lives in :class:`repro.core.engines.IndexCache`; this entry
+point exists for kernel-level sweep tests and micro-benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import should_interpret
+from repro.kernels.filter_agg.ops import clamp_block_rows, pad_reshape
+from repro.kernels.join_probe import kernel as K
+
+
+def probe_join_sum(probe_keys, probe_vals, build_keys,
+                   build_mask: Optional[np.ndarray] = None,
+                   block_rows: int = K.DEFAULT_BLOCK_ROWS,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inner-join probe + (sum of matched probe values, match count).
+
+    Keys must be f32-exact (< 2^24); a ``build_mask`` models a filtered
+    build side with unique keys (post-probe validation).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    order = np.argsort(np.asarray(build_keys), kind="stable")
+    kb_sorted = jnp.asarray(np.asarray(build_keys)[order], jnp.float32)
+    n = np.asarray(probe_keys).shape[0]
+    block_rows = clamp_block_rows(n, block_rows)
+    pblocks = [
+        pad_reshape(jnp.asarray(probe_keys, jnp.float32), block_rows,
+                    -1.0),  # padded probe keys never match (keys >= 0)
+        pad_reshape(jnp.asarray(probe_vals, jnp.float32), block_rows, 0.0),
+        pad_reshape(jnp.ones((n,), jnp.float32), block_rows, 0.0),
+    ]
+    barrays = [K.pad_build(kb_sorted, jnp.inf)]
+    masked = build_mask is not None
+    if masked:
+        ms = jnp.asarray(np.asarray(build_mask)[order], jnp.float32)
+        barrays.append(K.pad_build(ms, 0.0))
+
+    def body(scal_ref, pblocks_, barrays_):
+        kp, vals, valid = pblocks_
+        kb_flat = barrays_[0].reshape(-1)
+        idx, hit = K.probe_sorted(kb_flat, kp)
+        matched = hit & (valid > 0.5)
+        if masked:
+            matched = matched & (jnp.take(barrays_[1].reshape(-1), idx,
+                                          mode="clip") > 0.5)
+        w = matched.astype(jnp.float32)
+        return [vals * w, w], None
+
+    outs = K.join_probe_agg(body, pblocks, barrays,
+                            jnp.zeros((1,), jnp.float32), 2, block_rows,
+                            interpret=interpret)
+    return jnp.sum(outs[0]), jnp.sum(outs[1]).astype(jnp.int32)

@@ -1,0 +1,27 @@
+"""Pure-numpy oracle for the fused join-probe aggregate."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def probe_join_sum_ref(probe_keys: np.ndarray, probe_vals: np.ndarray,
+                       build_keys: np.ndarray,
+                       build_mask: Optional[np.ndarray] = None
+                       ) -> Tuple[float, int]:
+    """N:1 inner-join probe + sum/count of the matched probe rows.
+
+    Mirrors the engine semantics: a probe row matches when its key
+    exists in the build side AND (for filtered build sides with unique
+    keys) the matched build row passes the mask.
+    """
+    order = np.argsort(build_keys, kind="stable")
+    kb = np.asarray(build_keys)[order]
+    idx = np.searchsorted(kb, probe_keys)
+    idx_c = np.clip(idx, 0, max(len(kb) - 1, 0))
+    matched = kb[idx_c] == probe_keys if len(kb) else \
+        np.zeros(len(probe_keys), bool)
+    if build_mask is not None:
+        matched = matched & np.asarray(build_mask)[order][idx_c]
+    return float(np.asarray(probe_vals)[matched].sum()), int(matched.sum())

@@ -18,7 +18,9 @@ it at 8 MiB -- inside budget.  ops.py enforces/falls back.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -87,7 +89,10 @@ ValueFn = Callable[..., List[jnp.ndarray]]
 def segmented_multi_sum(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
                         codes: jnp.ndarray, scal: jnp.ndarray, n_out: int,
                         num_groups: int, block_rows: int,
-                        interpret: bool = False) -> jnp.ndarray:
+                        interpret: bool = False,
+                        ops: Optional[Sequence[str]] = None,
+                        fills: Optional[Sequence[float]] = None
+                        ) -> jnp.ndarray:
     """Grouped multi-aggregate: ``out[j, g] = sum_i vals_j[i] * [code_i == g]``.
 
     One one-hot tile per block is shared by all ``n_out`` aggregates --
@@ -98,11 +103,22 @@ def segmented_multi_sum(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
     bindings.  Inputs are [rows, 128] pre-padded blocks (padded elements
     must carry value 0; out-of-range codes never match a group).
     Returns [n_out, G] f32 group sums.
+
+    ``ops`` (default all-"sum") picks the per-row accumulator: "sum"
+    rows take the one-hot matmul; "max" rows (the FD ``any_``
+    carry-along: all group members share the value, take the max of the
+    valid ones) reuse the same one-hot tile as a masked per-group max.
+    ``fills[j]`` is the neutral element of a "max" row -- value_fn must
+    emit it for excluded rows, and padded elements must carry it too.
     """
     rows = codes.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
     assert num_groups <= MAX_GROUPS
     n_cols = len(cols)
+    ops = tuple(ops) if ops is not None else ("sum",) * n_out
+    assert len(ops) == n_out and set(ops) <= {"sum", "max"}, ops
+    fills = tuple(fills) if fills is not None else (0.0,) * n_out
+    max_rows = [j for j, op in enumerate(ops) if op == "max"]
 
     def kern(scal_ref, *refs):
         col_refs = refs[:n_cols]
@@ -112,18 +128,37 @@ def segmented_multi_sum(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
 
         @pl.when(i == 0)
         def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
+            # per-row identity: 0 for sums, the fill for max rows --
+            # built from scalar literals (Pallas kernels must not
+            # capture array constants)
+            acc_ref[...] = jnp.stack(
+                [jnp.full((num_groups,), fills[j] if op == "max"
+                          else 0.0, jnp.float32)
+                 for j, op in enumerate(ops)])
 
         code_block = code_ref[...]
         vals = value_fn(scal_ref, [r[...] for r in col_refs], code_block)
         assert len(vals) == n_out, (len(vals), n_out)
         flat_v = jnp.stack([v.reshape(-1) for v in vals])   # [n_out, N]
+        # sum rows contribute through the matmul; max rows zeroed there
+        flat_sum = jnp.stack([v.reshape(-1) if op == "sum"
+                              else jnp.zeros_like(v.reshape(-1))
+                              for v, op in zip(vals, ops)])
         flat_c = code_block.reshape(-1)                     # [N]
         onehot = (jax.lax.broadcasted_iota(
             jnp.int32, (flat_c.shape[0], num_groups), 1)
-            == flat_c[:, None]).astype(jnp.float32)
-        acc_ref[...] += jnp.dot(flat_v, onehot,
-                                preferred_element_type=jnp.float32)
+            == flat_c[:, None])
+        acc = acc_ref[...] + jnp.dot(
+            flat_sum, onehot.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        for j in max_rows:
+            # the one-hot tile doubles as the group-membership mask:
+            # per-group max over the block, folded into the accumulator
+            masked = jnp.where(onehot, flat_v[j][:, None],
+                               jnp.float32(fills[j]))
+            acc = acc.at[j].set(jnp.maximum(acc[j],
+                                            jnp.max(masked, axis=0)))
+        acc_ref[...] = acc
 
         @pl.when(i == pl.num_programs(0) - 1)
         def _flush():

@@ -42,18 +42,28 @@ class NativeOp(P.Plan):
     the generic jnp path.  Transparent for schema/static-info/column
     analysis; opaque (and pattern-tagged) for fingerprints, so native
     templates never share a compile-cache entry with plain compiled
-    ones."""
+    ones.
+
+    ``custom_lower`` marks patterns (the ``join-probe`` kernel) whose
+    emitter lowers the fragment's operand streams itself -- it is called
+    with the full custom-lowering context ``(catalog, scans, params,
+    interpret)`` instead of one pre-lowered boundary stream, because it
+    needs the probe and build sides separately plus the cached index
+    streams that ride in ``scans``.
+    """
 
     child: P.Plan
     pattern: str
     emitter: R.Emitter
     interpret: bool
+    custom_lower: bool = False
 
     def children(self) -> Tuple[P.Plan, ...]:
         return (self.child,)
 
     def with_children(self, kids):
-        return NativeOp(kids[0], self.pattern, self.emitter, self.interpret)
+        return NativeOp(kids[0], self.pattern, self.emitter, self.interpret,
+                        self.custom_lower)
 
     def infer_schema(self, catalog):
         return self.child.schema(catalog)
@@ -75,6 +85,8 @@ class NativeOp(P.Plan):
         rec(self.child, needed)
 
     def lower_stream(self, catalog, scans, params) -> L.Stream:
+        if self.custom_lower:
+            return self.emitter(catalog, scans, params, self.interpret)
         boundary = PAT.boundary_of(self.child)
         bstream = L.lower_node(boundary, catalog, scans, params)
         return self.emitter(bstream, params, self.interpret)
@@ -87,12 +99,18 @@ def has_native_ops(p: P.Plan) -> bool:
 
 
 def rewrite_plan(p: P.Plan, catalog: P.Catalog,
-                 interpret: Optional[bool] = None
+                 interpret: Optional[bool] = None,
+                 join_index: bool = True
                  ) -> Tuple[P.Plan, R.DispatchReport]:
     """Pattern-match the optimized plan bottom-up; wrap every eligible
     fragment in a :class:`NativeOp`.  Returns the annotated plan and the
     per-query :class:`repro.native.registry.DispatchReport` (which
-    patterns fired, which fragments fell back, and why)."""
+    patterns fired, which fragments fell back, and why).
+
+    ``join_index=False`` (the ``lower(join_index=False)`` escape hatch)
+    skips patterns that require a cached build-side index (the
+    ``join-probe`` kernel): without the index there is nothing for the
+    kernel to binary-search."""
     if interpret is None:
         interpret = should_interpret()  # same policy as the kernel ops
     mode = "interpret" if interpret else "pallas"
@@ -106,6 +124,8 @@ def rewrite_plan(p: P.Plan, catalog: P.Catalog,
         # (and, via Fragment.analysis, by eligibility + emitter)
         shared = PAT.match_fragment(n, catalog)
         for pat in R.patterns():
+            if pat.requires_index and not join_index:
+                continue
             frag = pat.matcher(n, catalog, shared)
             if frag is None:
                 continue
@@ -120,7 +140,8 @@ def rewrite_plan(p: P.Plan, catalog: P.Catalog,
             emitter = pat.emitter(frag, catalog)
             report.add(R.Decision(pattern=pat.name, node=n.describe(),
                                   fired=True, mode=mode, reason="ok"))
-            return NativeOp(n, pat.name, emitter, interpret)
+            return NativeOp(n, pat.name, emitter, interpret,
+                            custom_lower=pat.custom_lower)
         report.add(R.Decision(
             pattern="", node=n.describe(), fired=False, mode="",
             reason="; ".join(reasons) if reasons else "no pattern matched"))

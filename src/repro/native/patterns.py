@@ -1,6 +1,6 @@
 """Built-in kernel patterns: plan fragments the Pallas kernels can serve.
 
-Three patterns register at import (HiFrames-style pattern matching of
+Four patterns register at import (HiFrames-style pattern matching of
 dataframe plan fragments onto specialized parallel implementations):
 
 * ``filter-scalar-agg``    -- keyless Aggregate over a Filter/Project
@@ -11,13 +11,22 @@ dataframe plan fragments onto specialized parallel implementations):
   (q6 and friends) stays ONE compilation across bindings.
 * ``grouped-agg``          -- keyed Aggregate over the same prologue,
   lowered onto the one-hot-matmul segmented reduction
-  (``kernels/segmented_reduce``), multi-aggregate: every sum/count/avg
-  accumulates in a single ``[n_out, N] @ [N, G]`` MXU pass over the
-  dense group layout ``lower.py`` already computes.
-* ``masked-filter-project`` -- either of the above where the fragment
-  sits mid-pipeline (its boundary stream carries a validity mask, e.g.
-  downstream of a join): the mask streams into the kernel as a weight
-  column and the same emitters apply.
+  (``kernels/segmented_reduce``), multi-aggregate: every
+  sum/count/avg/any accumulates in a single ``[n_out, N] @ [N, G]`` MXU
+  pass over the dense group layout ``lower.py`` already computes (the
+  FD ``any_`` carry-along rides as a masked per-group max sharing the
+  one-hot tile).
+* ``join-probe``           -- Aggregate whose boundary is an inner N:1
+  join served by the cached build-side index (DESIGN.md section 10):
+  binary-search probe + payload gather + residual predicate + partial
+  aggregate fuse into ONE Pallas pass (``kernels/join_probe``).  The
+  cached sorted keys/permutation enter as whole-array kernel inputs;
+  group domains beyond the one-hot VMEM budget use the interpret-only
+  scatter accumulator (TPC-H q3's ~15k l_orderkey groups).
+* ``masked-filter-project`` -- the scalar/grouped shapes sitting
+  mid-pipeline (boundary stream carries a validity mask, e.g.
+  downstream of a non-inner or non-indexed join): the mask streams into
+  the kernel as a weight column and the same emitters apply.
 
 Expression support inside the kernel body mirrors the compiled engine's
 TPU-legal lowering: arithmetic/comparison/boolean trees, dictionary-code
@@ -40,8 +49,10 @@ import jax.numpy as jnp
 from repro.core import expr as E
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.kernels import should_interpret
 from repro.kernels.filter_agg import kernel as FA_K
 from repro.kernels.filter_agg import ops as FA_OPS
+from repro.kernels.join_probe import kernel as JP_K
 from repro.kernels.segmented_reduce import kernel as SR_K
 from repro.native import registry as R
 from repro.relational import table as T
@@ -380,6 +391,21 @@ def _match_masked(node, catalog, frag=_UNSET):
 # ---------------------------------------------------------------------------
 
 _SUPPORTED_AGGS = ("sum", "count", "avg")
+#: ``any`` (the FD carry-along: all group members share the value) is
+#: grouped-only, accumulated as a per-group masked max.
+_SUPPORTED_GROUPED_AGGS = _SUPPORTED_AGGS + ("any",)
+
+#: ``any`` max-slot neutral element, by value class.  INT32_MIN is
+#: f32-exact AND converts back to int32 exactly, so the (masked-out)
+#: empty-group sentinel survives the f32 kernel -> int column cast; the
+#: float fill mirrors the generic lowering's finfo.min.
+_INT_ANY_FILL = float(np.iinfo(np.int32).min)
+_FLOAT_ANY_FILL = float(np.finfo(np.float32).min)
+
+
+def _any_fill(dtype: str) -> float:
+    return (_FLOAT_ANY_FILL if dtype in (T.FLOAT32, T.FLOAT64)
+            else _INT_ANY_FILL)
 
 
 def _col_f32_safe(sc: L.StaticCol) -> bool:
@@ -393,21 +419,31 @@ def _col_f32_safe(sc: L.StaticCol) -> bool:
 
 
 def _acc_plan(aggs: Tuple[P.AggSpec, ...], force_count: bool
-              ) -> Tuple[List[Tuple[str, Optional[int]]], Optional[int], int]:
-    """Accumulator layout: one slot per sum/avg argument plus ONE shared
-    count slot (grouped fragments always count: the group mask needs
-    it).  Returns (per-agg plan, count slot index, slot count)."""
+              ) -> Tuple[List[Tuple[str, Optional[int]]], Optional[int],
+                         int, Tuple[str, ...]]:
+    """Accumulator layout: one slot per sum/avg/any argument plus ONE
+    shared count slot (grouped fragments always count: the group mask
+    needs it).  Returns (per-agg plan, count slot index, slot count,
+    per-slot accumulate op: "sum" or "max")."""
     plan: List[Tuple[str, Optional[int]]] = []
+    ops: List[str] = []
     k = 0
     for a in aggs:
         if a.op in ("sum", "avg"):
             plan.append((a.op, k))
+            ops.append("sum")
+            k += 1
+        elif a.op == "any":
+            plan.append(("any", k))
+            ops.append("max")
             k += 1
         else:
             plan.append(("count", None))
     need_count = force_count or any(a.op in ("count", "avg") for a in aggs)
     cnt_slot = k if need_count else None
-    return plan, cnt_slot, (k + 1 if need_count else k)
+    if need_count:
+        ops.append("sum")
+    return plan, cnt_slot, (k + 1 if need_count else k), tuple(ops)
 
 
 @dataclasses.dataclass
@@ -421,6 +457,8 @@ class _Analysis:
     plan_: Any = None
     cnt_slot: Optional[int] = None
     n_out: int = 0
+    ops: Tuple[str, ...] = ()
+    fills: Tuple[float, ...] = ()
     pred_fns: Any = None
     val_fns: Any = None
     col_names: Any = None
@@ -431,6 +469,21 @@ class _Analysis:
     block_default: Optional[int] = None
 
 
+def _slot_fills(aggs: Tuple[P.AggSpec, ...], schema: T.Schema,
+                cnt_slot: Optional[int]) -> Tuple[float, ...]:
+    """Per-slot accumulator fill: 0 for sums, the dtype-dependent
+    ``any`` neutral element for max slots."""
+    fills: List[float] = []
+    for a in aggs:
+        if a.op in ("sum", "avg"):
+            fills.append(0.0)
+        elif a.op == "any":
+            fills.append(_any_fill(E.infer_dtype(a.arg, schema)))
+    if cnt_slot is not None:
+        fills.append(0.0)
+    return tuple(fills)
+
+
 def _analyze(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
     if frag.analysis is not None:
         return frag.analysis
@@ -439,19 +492,20 @@ def _analyze(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
 
 
 def _analyze_uncached(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
-    bad = sorted({a.op for a in frag.root.aggs
-                  if a.op not in _SUPPORTED_AGGS})
+    grouped = bool(frag.root.keys)
+    supported = _SUPPORTED_GROUPED_AGGS if grouped else _SUPPORTED_AGGS
+    bad = sorted({a.op for a in frag.root.aggs if a.op not in supported})
     if bad:
         return _Analysis(reason=f"unsupported aggregate op(s) {bad}")
     if frag.binfo.n_rows <= 0:
         return _Analysis(reason="empty input stream")
-    grouped = bool(frag.root.keys)
-    plan_, cnt_slot, n_out = _acc_plan(frag.root.aggs, force_count=grouped)
+    plan_, cnt_slot, n_out, ops = _acc_plan(frag.root.aggs,
+                                            force_count=grouped)
     comp = ExprCompiler(frag.binfo)
     try:
         pred_fns = [comp.compile(pr) for pr in frag.preds]
         val_fns = [comp.compile(a.arg) for a in frag.root.aggs
-                   if a.op in ("sum", "avg")]
+                   if a.op in ("sum", "avg", "any")]
     except UnsupportedExpr as ex:
         return _Analysis(reason=f"unsupported expression: {ex}")
     for name in sorted(comp.cols):
@@ -459,11 +513,14 @@ def _analyze_uncached(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
             return _Analysis(reason=(
                 f"column {name!r} has no f32-exact encoding "
                 "(int without dictionary/domain <= 2^24)"))
-    out = _Analysis(plan_=plan_, cnt_slot=cnt_slot, n_out=n_out,
+    out = _Analysis(plan_=plan_, cnt_slot=cnt_slot, n_out=n_out, ops=ops,
+                    fills=_slot_fills(frag.root.aggs, comp.schema,
+                                      cnt_slot),
                     pred_fns=pred_fns, val_fns=val_fns,
                     col_names=sorted(comp.cols),
                     param_names=sorted(comp.params))
     n_in = len(out.col_names) + 1  # + validity/mask weight column
+    n_max = sum(1 for op in ops if op == "max")
     if grouped:
         try:
             child_info = L.static_info(frag.root.child, catalog)
@@ -477,7 +534,7 @@ def _analyze_uncached(frag: R.Fragment, catalog: P.Catalog) -> _Analysis:
         out.key_doms = [child_info.cols[k].group_domain
                         for k in frag.root.keys]
         out.block_default = R.choose_block_rows(n_in + 1, n_out,
-                                                out.domain)
+                                                out.domain, n_max=n_max)
         if out.block_default is None:
             return _Analysis(reason="one-hot tile exceeds VMEM budget")
     else:
@@ -497,6 +554,26 @@ def _eligibility(frag: R.Fragment, catalog: P.Catalog) -> Tuple[bool, str]:
 # ---------------------------------------------------------------------------
 
 
+def _assign_grouped_outputs(out_cols: Dict[str, Any],
+                            aggs: Tuple[P.AggSpec, ...], plan_: Any,
+                            out: Any, cnt: Any,
+                            out_info: L.StaticInfo) -> None:
+    """Map the [n_out, G] kernel accumulator rows onto output columns
+    (shared by the grouped and join-probe emitters): sums verbatim, avg
+    recomposed from sum/count, count from the shared count slot, any_
+    cast back to its static output dtype (the kernel runs f32)."""
+    for a, (kind, slot) in zip(aggs, plan_):
+        if kind == "sum":
+            out_cols[a.name] = out[slot]
+        elif kind == "avg":
+            out_cols[a.name] = out[slot] / jnp.maximum(cnt, 1.0)
+        elif kind == "any":
+            dt = L._JNP_OF[out_info.cols[a.name].dtype]
+            out_cols[a.name] = out[slot].astype(dt)
+        else:
+            out_cols[a.name] = cnt.astype(jnp.int32)
+
+
 def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
     """Build the trace-time emitter for a matched fragment.
 
@@ -510,6 +587,7 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
     ana = _analyze(frag, catalog)
     assert ana.reason is None, ana.reason  # eligibility checked it
     plan_, cnt_slot, n_out = ana.plan_, ana.cnt_slot, ana.n_out
+    ops, fills = ana.ops, ana.fills
     pred_fns, val_fns = ana.pred_fns, ana.val_fns
     col_names, param_names = ana.col_names, ana.param_names
     strides, domain, key_doms = ana.strides, ana.domain, ana.key_doms
@@ -526,9 +604,11 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
         w = pred.astype(jnp.float32)
         # where, NOT multiply-by-weight: excluded/padding rows can hold
         # values whose expressions go inf/nan (division on zero-filled
-        # shard padding), and nan * 0 would poison the accumulator
-        outs = [jnp.where(pred, fn(cols, scal), 0.0).astype(jnp.float32)
-                for fn in val_fns]
+        # shard padding), and nan * 0 would poison the accumulator.
+        # "max" (any_) slots carry their neutral fill instead of 0.
+        outs = [jnp.where(pred, fn(cols, scal),
+                          jnp.float32(fills[j])).astype(jnp.float32)
+                for j, fn in enumerate(val_fns)]
         if cnt_slot is not None:
             outs.append(w)
         return outs
@@ -568,18 +648,13 @@ def _emit(frag: R.Fragment, catalog: P.Catalog, grouped: bool) -> R.Emitter:
             codes = FA_OPS.pad_reshape(code, block_rows, 0)
             out = SR_K.segmented_multi_sum(
                 value_fn, blocks, codes, scal, n_out, domain, block_rows,
-                interpret)
+                interpret, ops=ops, fills=fills)
             cnt = out[cnt_slot]
             gidx = jnp.arange(domain, dtype=jnp.int32)
             for k, s, dk in zip(frag.root.keys, strides, key_doms):
                 out_cols[k] = (gidx // np.int32(s)) % np.int32(dk)
-            for a, (kind, slot) in zip(aggs, plan_):
-                if kind == "sum":
-                    out_cols[a.name] = out[slot]
-                elif kind == "avg":
-                    out_cols[a.name] = out[slot] / jnp.maximum(cnt, 1.0)
-                else:
-                    out_cols[a.name] = cnt.astype(jnp.int32)
+            _assign_grouped_outputs(out_cols, aggs, plan_, out, cnt,
+                                    out_info)
             return L.Stream(out_cols, cnt > 0, out_info)
 
         outs = FA_K.filter_agg_general(value_fn, blocks, scal, n_out,
@@ -612,12 +687,303 @@ def _emit_masked(frag, catalog):
     return _emit(frag, catalog, grouped=bool(frag.root.keys))
 
 
+# ---------------------------------------------------------------------------
+# the join-probe pattern: fused probe + gather + filter + aggregate
+# ---------------------------------------------------------------------------
+
+
+def _match_join_probe(node, catalog, frag=_UNSET):
+    """Aggregate whose boundary is an inner N:1 join served by the
+    cached build-side index (DESIGN.md section 10): the binary-search
+    probe, payload gather, residual predicate and partial aggregate all
+    fuse into one Pallas pass over the probe stream."""
+    if frag is _UNSET:
+        frag = match_fragment(node, catalog)
+    if frag is None or not isinstance(frag.boundary, P.Join):
+        return None
+    if frag.boundary.how != "inner":
+        return None
+    spec, _ = L.resolve_build_index(frag.boundary, catalog)
+    if spec is None:
+        return None
+    return frag
+
+
+@dataclasses.dataclass
+class _ProbeAnalysis:
+    """Static layout of a join-probe fragment (memoized on
+    ``Fragment.probe_analysis``): the probe/build column split on top of
+    everything the shared aggregate analysis computes."""
+
+    reason: Optional[str] = None  # None = eligible
+    spec: Any = None              # L.JoinIndexSpec of the boundary join
+    plan_: Any = None
+    cnt_slot: Optional[int] = None
+    n_out: int = 0
+    ops: Tuple[str, ...] = ()
+    fills: Tuple[float, ...] = ()
+    pred_fns: Any = None
+    val_fns: Any = None
+    key_fns: Any = None           # compiled group-key closures
+    probe_cols: Any = None        # streamed probe-side columns
+    build_cols: Any = None        # gathered build-payload columns
+    param_names: Any = None
+    strides: Any = None
+    domain: Optional[int] = None
+    key_doms: Any = None
+    accum: Optional[str] = None   # "onehot" | "scatter" | None (keyless)
+    block_default: Optional[int] = None
+
+
+def _analyze_probe(frag: R.Fragment, catalog: P.Catalog) -> _ProbeAnalysis:
+    if frag.probe_analysis is not None:
+        return frag.probe_analysis
+    frag.probe_analysis = out = _analyze_probe_uncached(frag, catalog)
+    return out
+
+
+def _analyze_probe_uncached(frag: R.Fragment,
+                            catalog: P.Catalog) -> _ProbeAnalysis:
+    join = frag.boundary
+    spec, reason = L.resolve_build_index(join, catalog)
+    if spec is None:  # matcher checked; kept for direct eligibility calls
+        return _ProbeAnalysis(reason=reason)
+    grouped = bool(frag.root.keys)
+    supported = _SUPPORTED_GROUPED_AGGS if grouped else _SUPPORTED_AGGS
+    bad = sorted({a.op for a in frag.root.aggs if a.op not in supported})
+    if bad:
+        return _ProbeAnalysis(reason=f"unsupported aggregate op(s) {bad}")
+    if frag.binfo.n_rows <= 0:
+        return _ProbeAnalysis(reason="empty probe stream")
+    # the combined join key streams through the kernel as f32: its
+    # domain must stay exactly representable
+    combined = 1
+    for d in spec.doms:
+        combined *= d
+    if combined > F32_EXACT:
+        return _ProbeAnalysis(reason=(
+            f"combined join-key domain {combined} has no f32-exact "
+            "encoding (> 2^24)"))
+    plan_, cnt_slot, n_out, ops = _acc_plan(frag.root.aggs,
+                                            force_count=grouped)
+    comp = ExprCompiler(frag.binfo)
+    try:
+        pred_fns = [comp.compile(pr) for pr in frag.preds]
+        val_fns = [comp.compile(a.arg) for a in frag.root.aggs
+                   if a.op in ("sum", "avg", "any")]
+        key_fns = [comp.compile(ke) for ke in frag.key_exprs]
+    except UnsupportedExpr as ex:
+        return _ProbeAnalysis(reason=f"unsupported expression: {ex}")
+    for name in sorted(comp.cols):
+        if not _col_f32_safe(frag.binfo.cols[name]):
+            return _ProbeAnalysis(reason=(
+                f"column {name!r} has no f32-exact encoding "
+                "(int without dictionary/domain <= 2^24)"))
+    lnames = set(join.left.schema(catalog).names)
+    probe_cols = sorted((set(comp.cols) & lnames) | set(join.left_on))
+    build_cols = sorted(set(comp.cols) - lnames)
+    out = _ProbeAnalysis(
+        spec=spec, plan_=plan_, cnt_slot=cnt_slot, n_out=n_out, ops=ops,
+        fills=_slot_fills(frag.root.aggs, comp.schema, cnt_slot),
+        pred_fns=pred_fns, val_fns=val_fns, key_fns=key_fns,
+        probe_cols=probe_cols, build_cols=build_cols,
+        param_names=sorted(comp.params))
+    # build-side arrays (sorted keys [+ mask] + payload) stay VMEM-
+    # resident across the whole grid
+    b_rows = catalog.table(spec.table).num_rows
+    b_pad = -(-b_rows // LANES) * LANES
+    n_build = 1 + (1 if spec.masked else 0) + len(build_cols)
+    resident = n_build * b_pad * 4
+    n_in = len(probe_cols) + 1  # + validity column
+    n_max = sum(1 for op in ops if op == "max")
+    if not grouped:
+        out.block_default = R.choose_block_rows(n_in, n_out,
+                                                resident_bytes=resident)
+        if out.block_default is None:
+            return _ProbeAnalysis(reason="input blocks exceed VMEM budget")
+        return out
+    try:
+        child_info = L.static_info(frag.root.child, catalog)
+        out.strides, out.domain = L._group_layout(frag.root, child_info)
+    except (TypeError, ValueError) as ex:
+        return _ProbeAnalysis(reason=f"no dense group layout: {ex}")
+    out.key_doms = [child_info.cols[k].group_domain
+                    for k in frag.root.keys]
+    if out.domain <= SR_K.MAX_GROUPS:
+        out.accum = "onehot"
+        out.block_default = R.choose_block_rows(
+            n_in, n_out, out.domain, n_max=n_max, resident_bytes=resident)
+        if out.block_default is not None:
+            return out
+        # one-hot spills VMEM: fall through to the scatter path
+    if out.domain > JP_K.SCATTER_MAX_GROUPS:
+        return _ProbeAnalysis(reason=(
+            f"group domain {out.domain} > SCATTER_MAX_GROUPS "
+            f"{JP_K.SCATTER_MAX_GROUPS}"))
+    if not should_interpret():
+        # scatter into the [n_out, G] accumulator is hostile to the TPU
+        # vector memory model; large-domain grouped probes stay on the
+        # generic lowering there (see kernels/join_probe docstring)
+        return _ProbeAnalysis(reason=(
+            f"group domain {out.domain} needs scatter accumulation "
+            "(interpret mode only)"))
+    out.accum = "scatter"
+    acc_bytes = n_out * out.domain * 4 * 2 + resident
+    out.block_default = R.choose_block_rows(n_in, n_out,
+                                            resident_bytes=acc_bytes)
+    if out.block_default is None:
+        return _ProbeAnalysis(reason="accumulator exceeds VMEM budget")
+    return out
+
+
+def _probe_eligibility(frag: R.Fragment,
+                       catalog: P.Catalog) -> Tuple[bool, str]:
+    a = _analyze_probe(frag, catalog)
+    return (a.reason is None), (a.reason or "ok")
+
+
+def _emit_join_probe(frag: R.Fragment, catalog: P.Catalog):
+    """Build the join-probe lowering hook.
+
+    Unlike the boundary-stream emitters this is a *custom-lowering*
+    emitter (``KernelPattern.custom_lower``): it lowers the probe and
+    build sides itself and pulls the cached index streams from the
+    ``scans`` environment that ``lower.build_callable`` populates."""
+    ana = _analyze_probe(frag, catalog)
+    assert ana.reason is None, ana.reason  # eligibility checked it
+    join = frag.boundary
+    aggs = frag.root.aggs
+    grouped = bool(frag.root.keys)
+    spec = ana.spec
+    (plan_, cnt_slot, n_out, ops, fills, pred_fns, val_fns, key_fns,
+     probe_cols, build_cols, param_names, strides, domain, key_doms,
+     accum, block_default) = (
+        ana.plan_, ana.cnt_slot, ana.n_out, ana.ops, ana.fills,
+        ana.pred_fns, ana.val_fns, ana.key_fns, ana.probe_cols,
+        ana.build_cols, ana.param_names, ana.strides, ana.domain,
+        ana.key_doms, ana.accum, ana.block_default)
+    out_info = L.static_info(frag.root, catalog)
+    left_on, doms = join.left_on, spec.doms
+    masked_build = spec.masked
+
+    def body_fn(scal_ref, pblocks, barrays):
+        cols = dict(zip(probe_cols, pblocks))
+        valid = _as_bool(pblocks[len(probe_cols)])
+        scal = {name: scal_ref[i] for i, name in enumerate(param_names)}
+        # combined probe key (f32-exact: domain checked at dispatch)
+        kp = cols[left_on[0]]
+        for k, d in zip(left_on[1:], doms[1:]):
+            kp = kp * float(d) + cols[k]
+        kb_flat = barrays[0].reshape(-1)
+        idx, hit = JP_K.probe_sorted(kb_flat, kp)
+        matched = hit & valid
+        ai = 1
+        if masked_build:
+            # post-probe mask validation: keys are unique, so checking
+            # the matched row's filter mask is exact
+            matched = matched & (jnp.take(barrays[ai].reshape(-1), idx,
+                                          mode="clip") > 0.5)
+            ai += 1
+        for name in build_cols:
+            cols[name] = jnp.take(barrays[ai].reshape(-1), idx,
+                                  mode="clip")
+            ai += 1
+        pred = matched
+        for fn in pred_fns:
+            pred = pred & _as_bool(fn(cols, scal))
+        w = pred.astype(jnp.float32)
+        outs = [jnp.where(pred, fn(cols, scal),
+                          jnp.float32(fills[j])).astype(jnp.float32)
+                for j, fn in enumerate(val_fns)]
+        if cnt_slot is not None:
+            outs.append(w)
+        codes = None
+        if grouped:
+            code = jnp.zeros_like(kp)
+            for kf, s in zip(key_fns, strides):
+                code = code + kf(cols, scal) * float(s)
+            codes = jnp.where(pred, code, 0.0).astype(jnp.int32)
+        return outs, codes
+
+    def run(catalog_, scans, params, interpret) -> L.Stream:
+        left = L.lower_node(join.left, catalog_, scans, params)
+        right = L.lower_node(join.right, catalog_, scans, params)
+        jidx = scans.get(L.index_stream_key(join))
+        if jidx is None:
+            raise RuntimeError(
+                "join-probe fragment lowered without its cached index "
+                "stream; the engine must run lower.build_callable")
+        perm, keys = jidx
+
+        def _param(name):
+            if params is None or name not in params:
+                raise KeyError(
+                    f"unbound query parameter {name!r}; pass a binding, "
+                    f"e.g. lowered.compile()({name}=...)")
+            return jnp.asarray(params[name]).astype(jnp.float32)
+
+        scal = (jnp.stack([_param(p_) for p_ in param_names])
+                if param_names else jnp.zeros((1,), jnp.float32))
+        n = left.n
+        block_rows = min(block_default, max(1, n // LANES))
+        pblocks = [FA_OPS.pad_reshape(left.cols[c].astype(jnp.float32),
+                                      block_rows, 0.0)
+                   for c in probe_cols]
+        pblocks.append(FA_OPS.pad_reshape(
+            left.the_mask().astype(jnp.float32), block_rows, 0.0))
+        # build arrays ride in sorted by the cached permutation, so the
+        # in-kernel probe position indexes them directly
+        barrays = [JP_K.pad_build(keys.astype(jnp.float32), jnp.inf)]
+        if masked_build:
+            barrays.append(JP_K.pad_build(
+                right.the_mask().astype(jnp.float32)[perm], 0.0))
+        for name in build_cols:
+            barrays.append(JP_K.pad_build(
+                right.cols[name].astype(jnp.float32)[perm], 0.0))
+
+        out_cols: Dict[str, jnp.ndarray] = {}
+        if grouped:
+            out = JP_K.join_probe_agg(
+                body_fn, pblocks, barrays, scal, n_out, block_rows,
+                num_groups=domain, ops=ops, fills=fills, accum=accum,
+                interpret=interpret)
+            cnt = out[cnt_slot]
+            gidx = jnp.arange(domain, dtype=jnp.int32)
+            for k, s, dk in zip(frag.root.keys, strides, key_doms):
+                out_cols[k] = (gidx // np.int32(s)) % np.int32(dk)
+            _assign_grouped_outputs(out_cols, aggs, plan_, out, cnt,
+                                    out_info)
+            return L.Stream(out_cols, cnt > 0, out_info)
+
+        outs = JP_K.join_probe_agg(body_fn, pblocks, barrays, scal,
+                                   n_out, block_rows, interpret=interpret)
+        sums = [jnp.sum(o) for o in outs]
+        cnt = sums[cnt_slot] if cnt_slot is not None else None
+        for a, (kind, slot) in zip(aggs, plan_):
+            if kind == "sum":
+                out_cols[a.name] = sums[slot][None]
+            elif kind == "avg":
+                out_cols[a.name] = (sums[slot]
+                                    / jnp.maximum(cnt, 1.0))[None]
+            else:
+                out_cols[a.name] = cnt.astype(jnp.int32)[None]
+        return L.Stream(out_cols, None, out_info)
+
+    return run
+
+
 R.register_pattern(R.KernelPattern(
     name="filter-scalar-agg", matcher=_match_scalar,
     eligibility=_eligibility, emitter=_emit_scalar))
 R.register_pattern(R.KernelPattern(
     name="grouped-agg", matcher=_match_grouped,
     eligibility=_eligibility, emitter=_emit_grouped))
+# join-probe outranks masked-filter-project: where both match (an inner
+# index-served join under the aggregate), fusing the probe wins
+R.register_pattern(R.KernelPattern(
+    name="join-probe", matcher=_match_join_probe,
+    eligibility=_probe_eligibility, emitter=_emit_join_probe,
+    requires_index=True, custom_lower=True))
 R.register_pattern(R.KernelPattern(
     name="masked-filter-project", matcher=_match_masked,
     eligibility=_eligibility, emitter=_emit_masked))

@@ -59,6 +59,10 @@ class Fragment:
     # memo slot: the expression-compilation/layout analysis shared by
     # eligibility and emitter (patterns._analyze) -- computed once
     analysis: Any = dataclasses.field(default=None, repr=False)
+    # separate memo for the join-probe pattern (patterns._analyze_probe):
+    # its layout differs (probe/build column split, in-kernel probe), so
+    # it must not collide with the shared aggregate analysis above
+    probe_analysis: Any = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -82,6 +86,14 @@ class KernelPattern:
     eligibility: Callable[[Fragment, P.Catalog], Tuple[bool, str]]
     emitter: Callable[[Fragment, P.Catalog], Emitter]
     supports_interpret: bool = True
+    #: the pattern probes a cached build-side join index (``join-probe``):
+    #: skipped entirely when lowering with ``join_index=False``
+    requires_index: bool = False
+    #: the emitter lowers its operand streams itself -- it is called as
+    #: ``emitter(catalog, scans, params, interpret)`` (full custom-
+    #: lowering context) instead of ``emitter(bstream, params,
+    #: interpret)`` over one pre-lowered boundary stream
+    custom_lower: bool = False
 
 
 _REGISTRY: Dict[str, KernelPattern] = {}
@@ -113,30 +125,36 @@ def available_patterns() -> List[str]:
 
 
 def vmem_estimate(n_cols: int, block_rows: int, n_out: int,
-                  num_groups: Optional[int] = None) -> int:
+                  num_groups: Optional[int] = None,
+                  n_max: int = 0, resident_bytes: int = 0) -> int:
     """Bytes of VMEM the kernel's working set needs at ``block_rows``.
 
     Input blocks are double-buffered (x2); the grouped variant adds the
-    per-block one-hot tile and the [n_out, G] accumulator."""
+    per-block one-hot tile, one masked [N, G] tile per "max" (``any_``)
+    accumulator row, and the [n_out, G] accumulator.
+    ``resident_bytes`` covers whole-array inputs pinned across grid
+    steps (the join-probe kernel's build-side arrays)."""
     block = block_rows * LANES * 4
-    total = n_cols * block * 2
+    total = n_cols * block * 2 + resident_bytes
     if num_groups is None:
         total += n_out * LANES * 4 * 2          # out + scratch rows
     else:
-        total += block_rows * LANES * num_groups * 4   # one-hot tile
+        # one-hot tile + one masked-max tile per any_ row
+        total += (1 + n_max) * block_rows * LANES * num_groups * 4
         total += n_out * num_groups * 4 * 2            # out + scratch
     return total
 
 
 def choose_block_rows(n_cols: int, n_out: int,
                       num_groups: Optional[int] = None,
-                      default: int = 256) -> Optional[int]:
+                      default: int = 256, n_max: int = 0,
+                      resident_bytes: int = 0) -> Optional[int]:
     """Largest block_rows (halving from ``default``, floor 8) whose
     working set fits :data:`VMEM_BUDGET_BYTES`; None if even 8 spills."""
     block_rows = default
     while block_rows >= 8:
-        if vmem_estimate(n_cols, block_rows, n_out,
-                         num_groups) <= VMEM_BUDGET_BYTES:
+        if vmem_estimate(n_cols, block_rows, n_out, num_groups,
+                         n_max, resident_bytes) <= VMEM_BUDGET_BYTES:
             return block_rows
         block_rows //= 2
     return None
@@ -165,9 +183,18 @@ class Decision:
 class DispatchReport:
     """Per-query dispatch report: which patterns fired, which fragments
     fell back to the generic jnp lowering, and why.  Attached to
-    ``Lowered.dispatch_report`` / ``CompileStats.dispatch``."""
+    ``Lowered.dispatch_report`` / ``CompileStats.dispatch``.
+
+    ``index_decisions`` is the join-index section (DESIGN.md sec. 10):
+    one entry per join, saying whether its build side probes the cached
+    base-table index (``fired``) or rebuilds the sorted keys in-program,
+    and why -- recorded for ANY compiled/parallel template with joins,
+    native or not.
+    """
 
     decisions: List[Decision] = dataclasses.field(default_factory=list)
+    index_decisions: List[Decision] = dataclasses.field(
+        default_factory=list)
 
     def add(self, d: Decision) -> None:
         self.decisions.append(d)
@@ -183,17 +210,37 @@ class DispatchReport:
     def fired_patterns(self) -> List[str]:
         return [d.pattern for d in self.fired]
 
+    @property
+    def joins_cached(self) -> List[Decision]:
+        """Joins whose build side probes the cached index."""
+        return [d for d in self.index_decisions if d.fired]
+
+    @property
+    def joins_rebuilt(self) -> List[Decision]:
+        """Joins that re-sort their build keys inside the program."""
+        return [d for d in self.index_decisions if not d.fired]
+
     def to_dict(self) -> Dict[str, Any]:
         return {"fired": [d.to_dict() for d in self.fired],
-                "fallbacks": [d.to_dict() for d in self.fallbacks]}
+                "fallbacks": [d.to_dict() for d in self.fallbacks],
+                "joins_cached": [d.to_dict() for d in self.joins_cached],
+                "joins_rebuilt": [d.to_dict() for d in self.joins_rebuilt]}
 
     def __str__(self) -> str:
-        if not self.decisions:
+        if not self.decisions and not self.index_decisions:
             return "native dispatch: no dispatchable fragments"
-        lines = ["native dispatch:"]
+        lines = ["native dispatch:"] if self.decisions else []
         for d in self.decisions:
             if d.fired:
                 lines.append(f"  + {d.node} -> {d.pattern} [{d.mode}]")
             else:
                 lines.append(f"  - {d.node} -> jnp fallback ({d.reason})")
+        if self.index_decisions:
+            lines.append("join index cache:")
+            for d in self.index_decisions:
+                if d.fired:
+                    lines.append(f"  + {d.node} -> cached index")
+                else:
+                    lines.append(f"  - {d.node} -> in-program argsort "
+                                 f"({d.reason})")
         return "\n".join(lines)

@@ -62,9 +62,15 @@ class Field:
     #: exclusive upper bound of the key domain.  Lets the compiled engine
     #: aggregate by direct indexing instead of hashing (DESIGN.md section 3).
     domain: Optional[int] = None
+    #: Declared key uniqueness (a primary-key declaration).  The join
+    #: index cache relies on it for *filtered* build sides: a probe that
+    #: lands on a unique key can validate the build row's filter mask
+    #: post-probe exactly (DESIGN.md section 10).  Verified against the
+    #: data when the index is built (engines.IndexCache).
+    unique: bool = False
 
     def with_name(self, name: str) -> "Field":
-        return Field(name, self.dtype, self.domain)
+        return Field(name, self.dtype, self.domain, self.unique)
 
 
 class Schema:
@@ -165,9 +171,11 @@ class Table:
     @staticmethod
     def from_arrays(data: Mapping[str, np.ndarray],
                     dtypes: Optional[Mapping[str, str]] = None,
-                    domains: Optional[Mapping[str, int]] = None) -> "Table":
+                    domains: Optional[Mapping[str, int]] = None,
+                    uniques: Optional[Iterable[str]] = None) -> "Table":
         cols: Dict[str, Column] = {}
         fields: List[Field] = []
+        unique_set = set(uniques or ())
         for name, arr in data.items():
             arr = np.asarray(arr)
             if arr.dtype == object or arr.dtype.kind in ("U", "S"):
@@ -186,7 +194,8 @@ class Table:
                         raise TypeError(f"unsupported array dtype {arr.dtype}")
                 col = Column(arr, dtype)
             cols[name] = col
-            fields.append(Field(name, col.dtype, (domains or {}).get(name)))
+            fields.append(Field(name, col.dtype, (domains or {}).get(name),
+                                name in unique_set))
         return Table(cols, Schema(fields))
 
     # -- access ---------------------------------------------------------------

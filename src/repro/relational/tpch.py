@@ -86,20 +86,22 @@ def generate(sf: float = 0.01, seed: int = 0) -> Dict[str, Table]:
     tables["region"] = Table.from_arrays(
         {"r_regionkey": np.arange(5, dtype=np.int32),
          "r_name": np.array(REGIONS, dtype=object)},
-        domains={"r_regionkey": 5})
+        domains={"r_regionkey": 5}, uniques=["r_regionkey"])
 
     tables["nation"] = Table.from_arrays(
         {"n_nationkey": np.arange(25, dtype=np.int32),
          "n_name": np.array([n for n, _ in NATIONS], dtype=object),
          "n_regionkey": np.array([r for _, r in NATIONS], dtype=np.int32)},
-        domains={"n_nationkey": 25, "n_regionkey": 5})
+        domains={"n_nationkey": 25, "n_regionkey": 5},
+        uniques=["n_nationkey"])
 
     # -- supplier ----------------------------------------------------------------
     tables["supplier"] = Table.from_arrays(
         {"s_suppkey": np.arange(1, n_supp + 1, dtype=np.int32),
          "s_nationkey": rng.integers(0, 25, n_supp).astype(np.int32),
          "s_acctbal": np.round(rng.uniform(-999.99, 9999.99, n_supp), 2)},
-        domains={"s_suppkey": n_supp + 1, "s_nationkey": 25})
+        domains={"s_suppkey": n_supp + 1, "s_nationkey": 25},
+        uniques=["s_suppkey"])
 
     # -- part ----------------------------------------------------------------------
     p_types = np.array([f"{a} {b} {c}" for a, b, c in zip(
@@ -114,7 +116,8 @@ def generate(sf: float = 0.01, seed: int = 0) -> Dict[str, Table]:
          "p_container": rng.choice(np.array(CONTAINERS, object), n_part),
          "p_size": rng.integers(1, 51, n_part).astype(np.int32),
          "p_retailprice": p_retail.astype(np.float64)},
-        domains={"p_partkey": n_part + 1, "p_size": 51})
+        domains={"p_partkey": n_part + 1, "p_size": 51},
+        uniques=["p_partkey"])
 
     # -- partsupp (composite PK: partkey x 4 suppliers) -----------------------------
     ps_part = np.repeat(np.arange(1, n_part + 1, dtype=np.int32), 4)
@@ -133,7 +136,8 @@ def generate(sf: float = 0.01, seed: int = 0) -> Dict[str, Table]:
          "c_nationkey": rng.integers(0, 25, n_cust).astype(np.int32),
          "c_mktsegment": rng.choice(np.array(SEGMENTS, object), n_cust),
          "c_acctbal": np.round(rng.uniform(-999.99, 9999.99, n_cust), 2)},
-        domains={"c_custkey": n_cust + 1, "c_nationkey": 25})
+        domains={"c_custkey": n_cust + 1, "c_nationkey": 25},
+        uniques=["c_custkey"])
 
     # -- orders ------------------------------------------------------------------
     # a third of customers place no orders (spec: only 2/3 have orders)
@@ -151,7 +155,8 @@ def generate(sf: float = 0.01, seed: int = 0) -> Dict[str, Table]:
          "o_totalprice": np.round(rng.uniform(800, 500_000, n_ord), 2)},
         dtypes={"o_orderdate": "date"},
         domains={"o_orderkey": n_ord + 1, "o_custkey": n_cust + 1,
-                 "o_orderdate": _DATE_DOMAIN, "o_shippriority": 1})
+                 "o_orderdate": _DATE_DOMAIN, "o_shippriority": 1},
+        uniques=["o_orderkey"])
 
     # -- lineitem -------------------------------------------------------------------
     per_order = rng.integers(1, 8, n_ord)

@@ -97,11 +97,41 @@ def test_q1_dispatches_grouped_pattern(ctx):
 
 
 def test_masked_pattern_fires_post_join(ctx):
-    """A fragment downstream of a join (masked boundary stream) streams
-    the mask into the kernel as a weight column."""
-    lowered = Q.q14(ctx).lower(engine="compiled", native=True)
+    """A fragment downstream of a non-inner join (masked boundary
+    stream, no fusable probe) streams the mask into the kernel as a
+    weight column -- q4's semi join."""
+    lowered = Q.q4(ctx).lower(engine="compiled", native=True)
     assert lowered.dispatch_report().fired_patterns() == \
         ["masked-filter-project"]
+
+
+def test_join_probe_fires_on_indexed_inner_joins(ctx):
+    """Inner joins whose build side is served by the cached index fuse
+    probe + gather + residual predicate + aggregate into the join-probe
+    kernel: q14/q19 keyless, q5 grouped, q10 grouped with any_
+    carry-alongs, q3 grouped beyond the one-hot domain (scatter)."""
+    for qname in ("q14", "q19", "q5", "q10", "q3"):
+        lowered = Q.QUERIES[qname](ctx).lower(engine="compiled",
+                                              native=True)
+        rep = lowered.dispatch_report()
+        assert rep.fired_patterns() == ["join-probe"], (qname, str(rep))
+        assert not rep.fallbacks, (qname, str(rep))
+        # every join of the fragment chain probes the cached index
+        assert rep.joins_cached and not rep.joins_rebuilt, str(rep)
+
+
+def test_grouped_any_carry_along_dispatches(ctx):
+    """The FD any_ carry-along (q3/q10's blocker before the join-probe
+    pattern) accumulates as a masked per-group max: exercise it on the
+    grouped one-hot path via a small-domain group key."""
+    from repro.core.dataframe import any_
+    q = (ctx.table("orders")
+         .group_by("o_orderpriority")
+         .agg(count("n"), any_(col("o_shippriority"), "ship")))
+    lowered = q.lower(engine="compiled", native=True)
+    assert lowered.dispatch_report().fired_patterns() == ["grouped-agg"]
+    assert_results_equal(q.collect(engine="volcano"),
+                         lowered.compile()(), msg="grouped any_")
 
 
 def test_fallback_reason_reported(ctx):
@@ -207,9 +237,11 @@ def test_compiled_native_alias_registered(ctx):
 
 def test_builtin_patterns_registered():
     names = NR.available_patterns()
-    for expected in ("filter-scalar-agg", "grouped-agg",
+    for expected in ("filter-scalar-agg", "grouped-agg", "join-probe",
                      "masked-filter-project"):
         assert expected in names
+    # join-probe outranks masked-filter-project (more fusion)
+    assert names.index("join-probe") < names.index("masked-filter-project")
 
 
 def test_vmem_budget_is_respected():
@@ -254,6 +286,61 @@ def test_filter_agg_general_matches_ref():
     np.testing.assert_allclose(float(jnp.sum(outs[0])),
                                float((x * y)[pred].sum()), rtol=1e-4)
     assert float(jnp.sum(outs[1])) == pred.sum()
+
+
+def test_join_probe_kernel_matches_ref():
+    from repro.kernels.join_probe.ops import probe_join_sum
+    from repro.kernels.join_probe.ref import probe_join_sum_ref
+    rng = np.random.default_rng(2)
+    n, b = 4000, 600
+    bk = rng.permutation(b).astype(np.int32)
+    pk = rng.integers(0, 2 * b, n).astype(np.int32)  # half the keys miss
+    pv = rng.uniform(0, 10, n).astype(np.float32)
+    mask = rng.random(b) < 0.6
+    for bm in (None, mask):
+        s, c = probe_join_sum(pk, pv, bk, build_mask=bm, interpret=True)
+        rs, rc = probe_join_sum_ref(pk, pv, bk, build_mask=bm)
+        np.testing.assert_allclose(float(s), rs, rtol=1e-4)
+        assert int(c) == rc
+
+
+def test_segmented_multi_sum_max_slots_match_ref():
+    """ops=("sum","max",...): any_ slots accumulate as per-group masked
+    max sharing the one-hot tile."""
+    from repro.kernels.segmented_reduce import kernel as SR_K
+    rng = np.random.default_rng(3)
+    n, g = 3000, 9
+    c = rng.integers(0, g, n).astype(np.int32)
+    v = (c * 7).astype(np.float32)  # FD: constant within each group
+    w = rng.uniform(-5, 5, n).astype(np.float32)
+    fill = float(np.iinfo(np.int32).min)
+
+    def value_fn(scal_ref, blocks, code_block):
+        wb, vb, valid = blocks
+        ok = valid > 0.5
+        return [jnp.where(ok, wb, 0.0),
+                jnp.where(ok, vb, jnp.float32(fill)),
+                ok.astype(jnp.float32)]
+
+    block_rows = 8
+    per = block_rows * 128
+    padded = (n + per - 1) // per * per
+
+    def pad(a, fill_):
+        return jnp.pad(jnp.asarray(a), (0, padded - n),
+                       constant_values=fill_).reshape(-1, 128)
+
+    out = SR_K.segmented_multi_sum(
+        value_fn, [pad(w, 0.0), pad(v, fill), pad(np.ones(n, np.float32),
+                                                  0.0)],
+        pad(c, 0), jnp.zeros((1,), jnp.float32), 3, g, block_rows,
+        True, ops=("sum", "max", "sum"), fills=(0.0, fill, 0.0))
+    for grp in range(g):
+        sel = c == grp
+        np.testing.assert_allclose(float(out[0, grp]), w[sel].sum(),
+                                   rtol=1e-3, atol=1e-3)
+        assert float(out[1, grp]) == grp * 7  # the carried-along value
+        assert float(out[2, grp]) == sel.sum()
 
 
 def test_segmented_multi_sum_matches_ref():

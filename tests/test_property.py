@@ -284,3 +284,43 @@ def test_dictionary_roundtrip(strings):
     assert list(colm.decode()) == [str(s) for s in strings]
     # codes are in sorted-dictionary order
     assert list(colm.dictionary) == sorted(set(str(s) for s in strings))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    probe_keys=st.lists(st.integers(0, 15), min_size=1, max_size=40),
+    build_keys=st.lists(st.integers(0, 15), min_size=1, max_size=16),
+    mask=st.lists(st.integers(0, 1), min_size=16, max_size=16),
+    how=st.sampled_from(["inner", "left", "semi", "anti"]),
+)
+def test_join_index_cache_adversarial_keys(probe_keys, build_keys, mask,
+                                           how):
+    """Join index cache (DESIGN.md section 10) under adversarial
+    duplicate/absent keys: the cached-index stream equals the
+    in-program-argsort stream AND the volcano oracle for every join
+    kind.  Build sides are unmasked when keys duplicate (the cacheable
+    contract) and filtered when unique (post-probe mask validation)."""
+    build_arr = np.asarray(build_keys, np.int32)
+    unique = len(set(build_keys)) == len(build_keys)
+    c = FlareContext()
+    c.from_arrays("probe", {
+        "pk": np.asarray(probe_keys, np.int32),
+        "x": np.arange(len(probe_keys), dtype=np.float64),
+    }, domains={"pk": 16})
+    c.from_arrays("build", {
+        "k": build_arr,
+        "v": np.arange(len(build_arr), dtype=np.float64),
+        "flag": np.asarray(mask[:len(build_arr)], np.int32),
+    }, domains={"k": 16}, uniques=["k"] if unique else [])
+    build = c.table("build")
+    if unique:
+        build = build.filter(col("flag") == 1)
+    q = (c.table("probe").join(build, on="pk", right_on="k", how=how)
+         .sort("pk", "x"))
+    lowered = c.lower(q.plan, "compiled")
+    assert len(lowered.dispatch_report().joins_cached) == 1
+    warm = lowered.compile()()
+    cold = c.lower(q.plan, "compiled", join_index=False).compile()()
+    assert_results_equal(cold, warm, msg=f"{how} adversarial")
+    assert_results_equal(q.collect(engine="volcano"), warm,
+                         msg=f"{how} adversarial vs oracle")

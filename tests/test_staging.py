@@ -67,7 +67,7 @@ def test_ml_kernels_fuse_with_etl(ctx):
 
     q = ctx.table("t").filter(col("x") > 1.0).select("x", "y")
     plan = ctx.optimized(q.plan)
-    fn, layout, _ = build_callable(plan, ctx.catalog)
+    fn, layout, _index_layout, _ = build_callable(plan, ctx.catalog)
     scans = {}
 
     def walk(n):
