@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/serve_llm.py
 """
-from repro.launch.serve import generate
+from repro.launch.serve_llm import generate
 
 out = generate(arch="qwen3_0_6b", reduced=True, batch=4,
                prompt_len=32, gen=24)

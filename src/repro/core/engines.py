@@ -31,6 +31,7 @@ section 4.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -48,6 +49,76 @@ from repro.relational import table as T
 # section 5.1) -- the fused whole-query engine is what removes that
 # boundary (Flare Level 3).
 _BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit, P.MapBatches)
+
+
+# ---------------------------------------------------------------------------
+# process-wide cache telemetry (one aggregate view over every live cache)
+# ---------------------------------------------------------------------------
+
+#: Every live cache object (CompileCache, IndexCache, DeviceCache --
+#: including the per-FlareContext instances), registered at construction.
+#: Weak references: a context going out of scope takes its caches out of
+#: the aggregate view.
+_LIVE_CACHES: "weakref.WeakSet[Any]" = weakref.WeakSet()
+
+
+def register_cache(cache: Any) -> Any:
+    """Track ``cache`` in the process-wide telemetry registry.  The
+    cache's class must define a ``kind`` attribute ("compile", "index",
+    "device", ...) and ``__len__``; hit/miss counters are optional."""
+    _LIVE_CACHES.add(cache)
+    return cache
+
+
+def cache_stats() -> Dict[str, Dict[str, Any]]:
+    """One aggregate snapshot over every live cache in the process.
+
+    Hit-rate telemetry used to be per-cache-object only (each
+    FlareContext owns its own CompileCache/DeviceCache/IndexCache), so a
+    server or benchmark reporting "the" cache behaviour had to reach
+    into every context it ever touched.  This folds them: per cache
+    ``kind`` -- ``compile`` (query templates), ``index`` (build-side
+    join indexes), ``device`` (resident columns) -- the number of live
+    caches, total entries, and summed hits/misses with the combined hit
+    rate.  The query server (``repro.serve``) and the benchmarks report
+    from here.
+    """
+    out: Dict[str, Dict[str, Any]] = {}
+    for cache in list(_LIVE_CACHES):
+        kind = getattr(type(cache), "kind", "other")
+        agg = out.setdefault(kind, {"caches": 0, "entries": 0,
+                                    "hits": 0, "misses": 0})
+        agg["caches"] += 1
+        agg["entries"] += len(cache)
+        agg["hits"] += getattr(cache, "hits", 0)
+        agg["misses"] += getattr(cache, "misses", 0)
+    for agg in out.values():
+        total = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = round(agg["hits"] / total, 4) if total else 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch-bucket policy for vmap-coalesced prepared-query execution
+# ---------------------------------------------------------------------------
+
+
+def batch_bucket(n: int) -> int:
+    """The compile bucket serving a batch of ``n`` parameter bindings.
+
+    Batched executables are shape-specialised on the binding-stack
+    length, so compiling one per observed batch size would turn a busy
+    server's ragged queues into a compile storm.  Buckets are the
+    powers of two: a batch of ``n`` runs on the next-power-of-two
+    executable with the tail padded by repeating the last binding
+    (padding results are discarded).  The bucket is part of the
+    CompileCache key (``repro.core.stages.Compiled.batch``), giving
+    exactly ONE compile per (template, bucket) for the server's whole
+    lifetime.
+    """
+    if n < 1:
+        raise ValueError(f"batch of {n} bindings")
+    return 1 << (n - 1).bit_length()
 
 
 # ---------------------------------------------------------------------------
@@ -90,10 +161,13 @@ class IndexCache:
     sides.
     """
 
+    kind = "index"
+
     def __init__(self):
         self._entries: Dict[Tuple, JoinIndex] = {}
         self.hits = 0
         self.misses = 0
+        register_cache(self)
 
     @staticmethod
     def _key(tbl: T.Table, key_cols: Tuple[str, ...],
@@ -167,10 +241,16 @@ class DeviceCache:
     lifetime as the cached columns.
     """
 
+    kind = "device"
+
     def __init__(self):
         # (id(table), column) or (id(table), column, pad_to) -> device array
         self._cache: Dict[Tuple, jnp.ndarray] = {}
         self.indexes = IndexCache()
+        register_cache(self)
+
+    def __len__(self) -> int:
+        return len(self._cache)
 
     def get(self, tbl: T.Table, name: str) -> jnp.ndarray:
         key = (id(tbl), name)

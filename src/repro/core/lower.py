@@ -998,3 +998,45 @@ def build_callable(p: P.Plan, catalog: P.Catalog,
         return out_cols, (stream.the_mask())
 
     return fn, layout, index_layout, out_info
+
+
+def build_batch_callable(p: P.Plan, catalog: P.Catalog,
+                         param_specs: Sequence[E.Param],
+                         ) -> Tuple[Callable[..., Any],
+                                    List[Tuple[int, List[str]]],
+                                    List[JoinIndexSpec],
+                                    Optional[StaticInfo]]:
+    """Build the vmap-coalesced variant of :func:`build_callable`.
+
+    The multi-tenant serving insight (DESIGN.md section 11): all
+    bindings of one prepared template run the SAME program over the
+    SAME tables -- only the ``param()`` scalars differ -- so a queue of
+    B same-template requests is ONE batched program, not B dispatches.
+    The returned function takes the identical scan-column and
+    join-index arguments as the single-binding callable (shared inputs,
+    broadcast across the batch: ``in_axes=None``) plus one ``[B]``
+    array per param spec (the stacked bindings, ``in_axes=0``); every
+    output gains a leading ``[B]`` axis.
+
+    vmap keeps the sharing real, not just notational: operators that do
+    not depend on a param (scans, index probes of param-free joins,
+    dictionary gathers) stay unbatched inside the program, and only the
+    param-dependent dataflow fans out over the batch axis.
+
+    Raises for a param-free template: with no binding axis to vmap
+    over, every request IS the same execution -- run it once and share
+    the result (``repro.core.stages.Compiled.batch`` does exactly
+    that).
+    """
+    param_specs = tuple(param_specs)
+    if not param_specs:
+        raise ValueError(
+            "build_batch_callable needs param() placeholders; a "
+            "param-free template has no binding axis -- execute it once "
+            "and share the result across requests")
+    fn, layout, index_layout, out_info = build_callable(p, catalog,
+                                                        param_specs)
+    n_shared = (sum(len(names) for _, names in layout)
+                + 2 * len(index_layout))
+    in_axes = (None,) * n_shared + (0,) * len(param_specs)
+    return jax.vmap(fn, in_axes=in_axes), layout, index_layout, out_info

@@ -34,7 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -102,13 +103,20 @@ class CompileCache:
 
     One entry per :func:`template_key`; the entry is a catalog-free
     :data:`Executor`.  ``hits``/``misses`` give the cache-hit rate that
-    the benchmarks report.
+    the benchmarks report.  Batched executors (``Compiled.batch``) live
+    in the same cache under the base key extended with ``("batch",
+    bucket)`` -- one compile per (template, batch bucket).  Every
+    instance registers with :func:`repro.core.engines.cache_stats` for
+    the process-wide aggregate view.
     """
+
+    kind = "compile"
 
     def __init__(self):
         self._entries: Dict[Tuple, Executor] = {}
         self.hits = 0
         self.misses = 0
+        ENG.register_cache(self)
 
     def lookup(self, key: Tuple) -> Optional[Executor]:
         exe = self._entries.get(key)
@@ -262,6 +270,27 @@ def index_args(index_layout: Tuple[L.JoinIndexSpec, ...],
     return args
 
 
+def shared_avals(layout: Tuple[Tuple[str, Tuple[str, ...]], ...],
+                 index_layout: Sequence[L.JoinIndexSpec],
+                 catalog: P.Catalog) -> List[jax.ShapeDtypeStruct]:
+    """Avals of a template's binding-independent arguments: the scan
+    columns then the join-index (perm, keys) pairs.  Shared between the
+    single-binding and the vmap-batched lowering -- the batched program
+    broadcasts exactly these and stacks only the params."""
+    avals: List[jax.ShapeDtypeStruct] = []
+    for tname, names in layout:
+        tbl = catalog.table(tname)
+        for n in names:
+            avals.append(jax.ShapeDtypeStruct(
+                (tbl.num_rows,),
+                jax.dtypes.canonicalize_dtype(tbl[n].dtype)))
+    for spec in index_layout:
+        n = catalog.table(spec.table).num_rows
+        avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # perm
+        avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # keys
+    return avals
+
+
 class WholeQueryEngine:
     """Whole-query compilation: plan -> one jaxpr -> one XLA executable.
 
@@ -278,17 +307,7 @@ class WholeQueryEngine:
             p, catalog, param_specs)
         smap = ENG.scan_map(p)
         layout = tuple((smap[sid], tuple(names)) for sid, names in id_layout)
-        avals: List[jax.ShapeDtypeStruct] = []
-        for tname, names in layout:
-            tbl = catalog.table(tname)
-            for n in names:
-                avals.append(jax.ShapeDtypeStruct(
-                    (tbl.num_rows,),
-                    jax.dtypes.canonicalize_dtype(tbl[n].dtype)))
-        for spec in index_layout:
-            n = catalog.table(spec.table).num_rows
-            avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # perm
-            avals.append(jax.ShapeDtypeStruct((n,), jnp.int32))  # keys
+        avals = shared_avals(layout, index_layout, catalog)
         for s in param_specs:
             avals.append(jax.ShapeDtypeStruct(
                 (), jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))))
@@ -313,8 +332,11 @@ class WholeQueryEngine:
                                                    - len(specs):]]
         out_info, schema = artifact.out_info, artifact.schema
 
-        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+        def raw(catalog: P.Catalog, device_cache: ENG.DeviceCache,
                 params: Optional[Dict[str, Any]]):
+            """Dispatch only: returns the (possibly un-synced) device
+            output pytree -- the deferred-readiness path behind
+            ``Compiled.submit`` / ``__call__(block=False)``."""
             args = []
             for tname, names in layout:
                 tbl = catalog.table(tname)
@@ -323,7 +345,9 @@ class WholeQueryEngine:
             args.extend(index_args(index_layout, catalog, device_cache))
             for s, dt in zip(specs, pdtypes):
                 args.append(jnp.asarray(ENG.require_param(params, s), dt))
-            out = exe(*args)
+            return exe(*args)
+
+        def finalize(out):
             if schema is None:  # heterogeneous pipeline: kernel pytree
                 return L.ValueResult(jax.tree_util.tree_map(np.asarray,
                                                             out))
@@ -332,6 +356,12 @@ class WholeQueryEngine:
             dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
             return L.Result(out_np, np.asarray(mask), schema, dicts)
 
+        def run(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]):
+            return finalize(raw(catalog, device_cache, params))
+
+        run.raw = raw            # deferred-sync protocol (AsyncResult)
+        run.finalize = finalize
         return run
 
 
@@ -562,21 +592,155 @@ class Lowered:
         stats.trace_compile_s = stats.lower_s + stats.compile_s
         return Compiled(exe, self._plan, self._catalog, self._engine.name,
                         self._param_specs, self._key, self._device_cache,
-                        stats)
+                        stats, compile_cache=cache)
+
+
+class AsyncResult:
+    """A dispatched execution whose device output has NOT been synced.
+
+    Returned by ``Compiled.submit`` / ``Compiled(..., block=False)`` and
+    by ``Compiled.batch(block=False)``: the XLA dispatch has happened,
+    but no ``jax.block_until_ready`` / host transfer -- readiness is
+    deferred until the caller asks for the value.  This is what lets a
+    server sync per *request* instead of per batch: every request of a
+    coalesced batch holds its own handle onto the shared device output
+    and pays the transfer for its own slice only when its client reads.
+
+    ``result()`` materialises (and caches) the host-side
+    :class:`repro.core.lower.Result`; ``ready()`` is a non-blocking
+    readiness probe; ``block_until_ready()`` waits on the device
+    computation without transferring.
+    """
+
+    def __init__(self, out: Any, finalize: Callable[[Any], Any]):
+        self._out = out
+        self._finalize = finalize
+        self._result: Any = None
+        self._done = False
+
+    def ready(self) -> bool:
+        """True once the device computation has finished (non-blocking
+        where the runtime exposes readiness; conservatively True after
+        any materialisation)."""
+        if self._done:
+            return True
+        for leaf in jax.tree_util.tree_leaves(self._out):
+            probe = getattr(leaf, "is_ready", None)
+            if probe is not None and not probe():
+                return False
+        return True
+
+    def block_until_ready(self) -> "AsyncResult":
+        if not self._done:
+            jax.block_until_ready(self._out)
+        return self
+
+    def result(self) -> Any:
+        """The host-side Result (blocks until ready, cached)."""
+        if not self._done:
+            self._result = self._finalize(self._out)
+            self._done = True
+            self._out = None  # free the device reference
+        return self._result
+
+    def compact(self) -> Dict[str, np.ndarray]:
+        return self.result().compact()
+
+    collect = compact
+
+    def __repr__(self):
+        state = "ready" if self._done or self.ready() else "pending"
+        return f"AsyncResult<{state}>"
+
+
+@dataclasses.dataclass
+class BatchExecutor:
+    """A compiled vmap-coalesced template: ONE program serving a
+    ``bucket``-sized stack of parameter bindings (DESIGN.md section 11).
+
+    Lives in the :class:`CompileCache` under the template's base key
+    extended with ``("batch", bucket)``.  ``raw`` dispatches the whole
+    batch (stacked ``[bucket]`` param arrays, shared scan/index args)
+    and returns the un-synced device output; ``finalize_one(out, i)``
+    materialises request ``i``'s slice.
+    """
+
+    raw: Callable[[P.Catalog, ENG.DeviceCache, Dict[str, np.ndarray]], Any]
+    finalize_one: Callable[[Any, int], Any]
+    bucket: int
+
+
+def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
+                           param_specs: Tuple[E.Param, ...],
+                           bucket: int) -> BatchExecutor:
+    """AOT-compile the ``bucket``-wide batched executable of a template.
+
+    The single-binding traced function is vmapped over the param axis
+    (:func:`repro.core.lower.build_batch_callable`): scan columns and
+    join-index args broadcast (``in_axes=None``), each ``param()``
+    placeholder becomes one stacked ``[bucket]`` argument.
+    """
+    bfn, id_layout, index_layout, out_info = L.build_batch_callable(
+        p, catalog, param_specs)
+    smap = ENG.scan_map(p)
+    layout = tuple((smap[sid], tuple(names)) for sid, names in id_layout)
+    avals = shared_avals(layout, index_layout, catalog)
+    pdtypes = []
+    for s in param_specs:
+        dt = jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))
+        pdtypes.append(dt)
+        avals.append(jax.ShapeDtypeStruct((bucket,), dt))
+    exe = jax.jit(bfn).lower(*avals).compile()
+    schema = (None if isinstance(p, P.IterativeKernel)
+              else p.schema(catalog))
+
+    def raw(catalog: P.Catalog, device_cache: ENG.DeviceCache,
+            stacked: Dict[str, np.ndarray]):
+        args = []
+        for tname, names in layout:
+            tbl = catalog.table(tname)
+            for n in names:
+                args.append(device_cache.get(tbl, n))
+        args.extend(index_args(index_layout, catalog, device_cache))
+        for s, dt in zip(param_specs, pdtypes):
+            args.append(jnp.asarray(stacked[s.name], dt))
+        return exe(*args)
+
+    def finalize_one(out, i: int):
+        if schema is None:  # heterogeneous root: kernel pytree, axis 0
+            return L.ValueResult(jax.tree_util.tree_map(
+                lambda v: np.asarray(v[i]), out))
+        out_cols, mask = out
+        out_np = {k: np.asarray(v[i]) for k, v in out_cols.items()}
+        dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
+        return L.Result(out_np, np.asarray(mask[i]), schema, dicts)
+
+    return BatchExecutor(raw, finalize_one, bucket)
+
+
+#: Engines whose Compiled objects support vmap-coalesced batching.  The
+#: native/parallel variants keep per-binding dispatch: Pallas kernels
+#: and shard_map programs do not carry vmap batching rules.
+_BATCHABLE_ENGINES = ("compiled",)
 
 
 class Compiled:
     """An executable query template: call it with parameter bindings.
 
     ``compiled(**params)`` returns compacted host columns;
-    ``compiled.result(**params)`` the raw padded :class:`Result`.  One
-    Compiled serves any number of bindings without recompilation.
+    ``compiled.result(**params)`` the raw padded :class:`Result`;
+    ``compiled(block=False, **params)`` / ``compiled.submit(**params)``
+    an :class:`AsyncResult` whose device arrays are un-synced until
+    read.  ``compiled.batch([...bindings...])`` coalesces many bindings
+    into ONE vmapped program (DESIGN.md section 11).  One Compiled
+    serves any number of bindings without recompilation.
     """
 
     def __init__(self, exe: Executor, p: P.Plan, catalog: P.Catalog,
                  engine_name: str, param_specs: Tuple[E.Param, ...],
                  key: Tuple, device_cache: ENG.DeviceCache,
-                 stats: CompileStats):
+                 stats: CompileStats,
+                 compile_cache: Optional[CompileCache] = None):
         self._exe = exe
         self._plan = p
         self._catalog = catalog
@@ -585,6 +749,7 @@ class Compiled:
         self.cache_key = key
         self._device_cache = device_cache
         self.stats = stats
+        self._compile_cache = compile_cache
 
     def params(self) -> Tuple[E.Param, ...]:
         return self._param_specs
@@ -603,10 +768,102 @@ class Compiled:
         self.stats.run_s = time.perf_counter() - t0
         return out
 
-    def __call__(self, **params: Any) -> Dict[str, np.ndarray]:
+    def submit(self, **params: Any) -> AsyncResult:
+        """Dispatch without syncing: returns an :class:`AsyncResult`
+        whose device arrays stay un-synced until ``.result()`` /
+        ``.compact()``.  ``stats.run_s`` then measures dispatch only.
+        Engines without a deferred path (interpreters, stage, parallel)
+        fall back to eager execution behind an already-ready handle, so
+        the API is uniform across engines."""
+        self._check_bindings(params)
+        raw = getattr(self._exe, "raw", None)
+        t0 = time.perf_counter()
+        if raw is None:  # no deferred path: eager, trivially ready
+            out = self._exe(self._catalog, self._device_cache,
+                            params or None)
+            handle = AsyncResult(None, lambda _: out)
+            handle.result()
+        else:
+            out = raw(self._catalog, self._device_cache, params or None)
+            handle = AsyncResult(out, self._exe.finalize)
+        self.stats.run_s = time.perf_counter() - t0
+        return handle
+
+    def __call__(self, block: bool = True, **params: Any):
+        """Execute one binding.  ``block=True`` (default) returns
+        compacted host columns; ``block=False`` returns the un-synced
+        :class:`AsyncResult` handle (``.compact()`` when you need the
+        rows).  ``block`` is reserved: name a query parameter something
+        else, or bind through ``result()``/``submit()``."""
+        if not block:
+            return self.submit(**params)
         return self.result(**params).compact()
 
     collect = __call__
+
+    # -- vmap-coalesced multi-binding execution ------------------------------
+
+    def batch(self, bindings: Sequence[Dict[str, Any]],
+              block: bool = True) -> List[Any]:
+        """Execute many bindings of this template as ONE program.
+
+        The bindings stack into one ``[bucket]`` argument per
+        ``param()`` spec (scan columns and join indexes broadcast), the
+        vmapped executable runs once, and each binding gets its own
+        slice of the shared output: ``block=True`` returns one
+        :class:`repro.core.lower.Result` per binding, ``block=False``
+        one un-synced :class:`AsyncResult` per binding (the server's
+        deferred per-request sync).
+
+        Batched executables are bucketed (:func:`repro.core.engines.
+        batch_bucket`: next power of two) and cached in the template's
+        CompileCache under ``cache_key + (("batch", bucket),)`` --
+        exactly one compile per (template, bucket); ragged batches pad
+        by repeating the last binding and the padding is discarded.
+
+        A param-free template degenerates to perfect coalescing: every
+        request is the same execution, run once and shared.
+        """
+        bindings = [dict(b) for b in bindings]
+        if not bindings:
+            return []
+        if self.engine_name not in _BATCHABLE_ENGINES:
+            raise TypeError(
+                f"batched execution requires one of {_BATCHABLE_ENGINES} "
+                f"(vmap over the whole-query program); engine "
+                f"{self.engine_name!r} keeps per-binding dispatch")
+        for b in bindings:
+            self._check_bindings(b)
+        if not self._param_specs:
+            handle = self.submit()
+            handles = [handle] * len(bindings)
+            return [h.result() for h in handles] if block else handles
+        bucket = ENG.batch_bucket(len(bindings))
+        exe = self._batch_executor(bucket)
+        padded = bindings + [bindings[-1]] * (bucket - len(bindings))
+        stacked = {
+            s.name: np.asarray([ENG.require_param(b, s) for b in padded],
+                               T.numpy_dtype(s.dtype))
+            for s in self._param_specs}
+        t0 = time.perf_counter()
+        out = exe.raw(self._catalog, self._device_cache, stacked)
+        self.stats.run_s = time.perf_counter() - t0
+        handles = [AsyncResult(out, lambda o, i=i: exe.finalize_one(o, i))
+                   for i in range(len(bindings))]
+        return [h.result() for h in handles] if block else handles
+
+    def _batch_executor(self, bucket: int) -> BatchExecutor:
+        key = self.cache_key + (("batch", bucket),)
+        cache = self._compile_cache
+        exe = cache.lookup(key) if cache is not None else None
+        if exe is None:
+            t0 = time.perf_counter()
+            exe = compile_batch_executor(self._plan, self._catalog,
+                                         self._param_specs, bucket)
+            self.stats.compile_s += time.perf_counter() - t0
+            if cache is not None:
+                cache.insert(key, exe)
+        return exe
 
     def count(self, **params: Any) -> int:
         return self.result(**params).num_rows()

@@ -1,114 +1,22 @@
-"""Serving CLI: batched prefill + decode with whole-step compiled programs.
+"""Deprecated alias: the LLM-serving CLI moved to
+:mod:`repro.launch.serve_llm` so that ``repro.serve`` unambiguously
+means the prepared-query server (DESIGN.md section 11).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --reduced --batch 4 --prompt-len 32 --gen 16
-
-The request path mirrors the paper's "heterogeneous workload" story: the
-request *batching* is relational (a Flare plan groups pending requests by
-length bucket), the model step is the compiled kernel -- both end up as
-compiled programs, nothing interpreted per request.
+This shim keeps old imports and ``python -m repro.launch.serve``
+invocations working; new code should import ``repro.launch.serve_llm``
+(LLM serving) or ``repro.serve`` (query serving).
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
-import time
-from typing import Dict, List
+import warnings
 
-import numpy as np
+from repro.launch.serve_llm import (ServeStats, generate,  # noqa: F401
+                                    main)
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get
-from repro.data import tokenizer
-from repro.distributed.shardings import make_ctx
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models.modeling import Model, demo_batch, enc_len_of
-
-
-@dataclasses.dataclass
-class ServeStats:
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    tokens: int = 0
-
-    @property
-    def tokens_per_s(self) -> float:
-        return self.tokens / max(self.decode_s, 1e-9)
-
-
-def generate(arch: str = "qwen3-0.6b", reduced: bool = True,
-             batch: int = 4, prompt_len: int = 32, gen: int = 16,
-             seed: int = 0, greedy: bool = True) -> Dict:
-    cfg = get(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    mesh = make_host_mesh()
-    sc = make_ctx(mesh, cfg.sharding_profile)
-    model = Model(cfg)
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
-
-    cache_len = prompt_len + gen
-    prefill = jax.jit(make_prefill_step(model, sc, cache_len))
-    decode = jax.jit(make_decode_step(model, sc))
-
-    # synthetic prompts (byte tokenizer ids clipped to vocab)
-    prompts = np.minimum(
-        np.stack([tokenizer.encode(f"request {i}: the quick brown fox")
-                  [:prompt_len] for i in range(batch)]),
-        cfg.vocab - 1)
-    if prompts.shape[1] < prompt_len:
-        prompts = np.pad(prompts,
-                         ((0, 0), (0, prompt_len - prompts.shape[1])))
-    pf_batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-    if cfg.frontend == "vision":
-        pf_batch["prefix"] = jnp.zeros(
-            (batch, cfg.frontend_len, cfg.d_model), cfg.compute_dtype)
-    if cfg.family == "encdec":
-        pf_batch["enc_embeds"] = jnp.zeros(
-            (batch, enc_len_of(cfg, prompt_len), cfg.d_model),
-            cfg.compute_dtype)
-
-    stats = ServeStats()
-    with mesh:
-        t0 = time.perf_counter()
-        logits, caches = jax.block_until_ready(prefill(params, pf_batch))
-        stats.prefill_s = time.perf_counter() - t0
-        out_tokens: List[np.ndarray] = []
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        base = prompt_len + (cfg.frontend_len
-                             if cfg.frontend == "vision" else 0)
-        t0 = time.perf_counter()
-        for i in range(gen):
-            out_tokens.append(np.asarray(tok))
-            logits, caches = decode(params, tok, caches,
-                                    jnp.int32(base + i))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(logits)
-        stats.decode_s = time.perf_counter() - t0
-        stats.tokens = gen * batch
-    completions = np.stack(out_tokens, axis=1)  # [B, gen]
-    return {"completions": completions, "stats": stats}
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
-    out = generate(args.arch, args.reduced, args.batch, args.prompt_len,
-                   args.gen)
-    st = out["stats"]
-    print(f"[serve] prefill {st.prefill_s*1e3:.1f}ms, decode "
-          f"{st.decode_s*1e3:.1f}ms, {st.tokens_per_s:.1f} tok/s")
-    print(f"[serve] sample completion ids: {out['completions'][0][:12]}")
-
+warnings.warn(
+    "repro.launch.serve moved to repro.launch.serve_llm; "
+    "repro.serve is now the prepared-query server",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

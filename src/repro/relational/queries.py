@@ -331,6 +331,7 @@ QUERIES: Dict[str, Callable[[FlareContext], DataFrame]] = {
 #: bindings, for benchmarks and differential tests.
 TEMPLATES: Dict[str, Callable[[FlareContext], DataFrame]] = {
     "q6": q6_template, "q14": q14_template, "q19": q19_template,
+    "q22": q22,
 }
 
 TEMPLATE_BINDINGS: Dict[str, Any] = {
@@ -343,4 +344,38 @@ TEMPLATE_BINDINGS: Dict[str, Any] = {
     "q19": [{"qty1": 1.0, "qty2": 10.0, "qty3": 20.0},
             {"qty1": 5.0, "qty2": 12.0, "qty3": 25.0},
             {"qty1": 2.0, "qty2": 15.0, "qty3": 22.0}],
+    # representative spreads around the spec's scalar-subquery value
+    # (q22_params computes the exact one for a given catalog)
+    "q22": [{"acctbal_min": 0.0},
+            {"acctbal_min": 2500.0},
+            {"acctbal_min": 4500.0}],
 }
+
+
+def random_bindings(name: str, n: int, seed: int = 0) -> list:
+    """``n`` random-but-reproducible bindings for template ``name`` --
+    the official benchmark's "draw substitution parameters per run",
+    used by the serving benchmark to model a multi-tenant request mix.
+    """
+    import random
+    rng = random.Random((hash(name) & 0xFFFF) ^ seed)
+    out = []
+    for _ in range(n):
+        if name == "q6":
+            out.append(q6_binding(rng.randint(1993, 1997),
+                                  round(rng.uniform(0.02, 0.09), 2),
+                                  float(rng.randint(24, 25))))
+        elif name == "q14":
+            y, m = rng.randint(1993, 1997), rng.randint(1, 12)
+            y2, m2 = (y + 1, 1) if m == 12 else (y, m + 1)
+            out.append({"date_lo": date(f"{y}-{m:02d}-01"),
+                        "date_hi": date(f"{y2}-{m2:02d}-01")})
+        elif name == "q19":
+            out.append({"qty1": float(rng.randint(1, 10)),
+                        "qty2": float(rng.randint(10, 20)),
+                        "qty3": float(rng.randint(20, 30))})
+        elif name == "q22":
+            out.append({"acctbal_min": round(rng.uniform(0.0, 5000.0), 2)})
+        else:
+            raise KeyError(f"no binding generator for template {name!r}")
+    return out

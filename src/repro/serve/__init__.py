@@ -1,0 +1,12 @@
+"""Prepared-query serving: compiled templates as a multi-tenant server.
+
+The production posture of Flare section 5: templates compile once,
+concurrent requests coalesce into vmapped batches, device sync is
+deferred per request.  See DESIGN.md section 11.
+
+    from repro.serve import QueryServer
+"""
+from repro.serve.server import QueryServer, ServeFuture
+from repro.serve.stats import ServeStats, percentile
+
+__all__ = ["QueryServer", "ServeFuture", "ServeStats", "percentile"]

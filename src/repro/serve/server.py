@@ -1,0 +1,297 @@
+"""The query server: admission -> coalesce -> vmap execute -> deferred sync.
+
+Flare section 5 deploys compiled queries as a server inside Spark; this
+module is that posture for the stages API.  A :class:`QueryServer`
+registers prepared templates (``relational/queries.py:TEMPLATES`` by
+default), compiles each once per (engine, batch bucket), and serves
+concurrent requests by *coalescing*: every ``flush`` drains the
+admission queue, groups same-template requests, and executes each group
+as ONE vmapped program through :meth:`repro.core.stages.Compiled.batch`.
+Requests get :class:`ServeFuture` handles immediately;
+``jax.block_until_ready`` is deferred until a requester reads its own
+result, never paid per batch (DESIGN.md section 11).
+
+    server = QueryServer(ctx)
+    futs = [server.submit("q6", **b) for b in bindings]
+    server.flush()                       # one dispatch per template group
+    rows = [f.result().compact() for f in futs]
+    server.stats                         # occupancy / coalesce / p50/p99
+
+``start()`` runs the same flush loop on a background thread for callers
+that want fire-and-forget submission.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.core import engines as ENG
+from repro.core import stages as S
+from repro.core.dataframe import FlareContext
+from repro.serve.stats import ServeStats
+
+#: Template registries map a name to a factory ``ctx -> DataFrame`` whose
+#: plan carries ``param()`` placeholders; resolved lazily so importing the
+#: server never forces query construction.
+TemplateFactory = Callable[[FlareContext], Any]
+
+
+class ServeFuture:
+    """A request's handle: resolves to the request's own slice of a
+    coalesced batch.
+
+    ``result()`` blocks until the server has dispatched the request's
+    batch AND the device value is materialised -- the sync happens here,
+    per request, not in the server's flush loop.  The recorded latency
+    spans submit -> first materialisation, so batched serving is judged
+    by what each requester observed.
+    """
+
+    def __init__(self, stats: ServeStats, submit_t: float):
+        self._dispatched = threading.Event()
+        self._handle: Optional[S.AsyncResult] = None
+        self._error: Optional[BaseException] = None
+        self._stats = stats
+        self._submit_t = submit_t
+        self._latency_recorded = False
+        self._lock = threading.Lock()
+
+    def _assign(self, handle: S.AsyncResult) -> None:
+        self._handle = handle
+        self._dispatched.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._dispatched.set()
+
+    def dispatched(self) -> bool:
+        """True once the server has executed this request's batch (the
+        result may still be an un-synced device value)."""
+        return self._dispatched.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """The request's :class:`repro.core.lower.Result` (blocks)."""
+        if not self._dispatched.wait(timeout):
+            raise TimeoutError("request not dispatched; call "
+                               "QueryServer.flush() or start() a worker")
+        if self._error is not None:
+            raise self._error
+        out = self._handle.result()
+        with self._lock:
+            if not self._latency_recorded:
+                self._latency_recorded = True
+                self._stats.record_latency(time.perf_counter()
+                                           - self._submit_t)
+        return out
+
+    def compact(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        return self.result(timeout).compact()
+
+    def __repr__(self):
+        if not self._dispatched.is_set():
+            return "ServeFuture<queued>"
+        return "ServeFuture<failed>" if self._error else "ServeFuture<dispatched>"
+
+
+class _Request:
+    __slots__ = ("name", "params", "future")
+
+    def __init__(self, name: str, params: Dict[str, Any],
+                 future: ServeFuture):
+        self.name = name
+        self.params = params
+        self.future = future
+
+
+class QueryServer:
+    """Multi-tenant prepared-query server over a :class:`FlareContext`.
+
+    ``templates`` maps names to template factories (defaults to the
+    TPC-H ``TEMPLATES`` registry).  Each template compiles lazily on
+    first use and is cached in the context's :class:`CompileCache` --
+    base executable under the template fingerprint, batched executables
+    under ``fingerprint + ("batch", bucket)`` -- so restarting the
+    server against the same context recompiles nothing.
+
+    ``max_batch`` caps coalescing (a full queue splits into chunks);
+    ``engine`` must support vmap batching (see
+    ``stages._BATCHABLE_ENGINES``).
+    """
+
+    def __init__(self, ctx: FlareContext,
+                 templates: Optional[Dict[str, TemplateFactory]] = None,
+                 engine: str = "compiled", max_batch: int = 64,
+                 join_index: Optional[bool] = None):
+        if templates is None:
+            from repro.relational.queries import TEMPLATES
+            templates = TEMPLATES
+        self.ctx = ctx
+        self.engine = engine
+        self.max_batch = max(1, int(max_batch))
+        self.join_index = join_index
+        self.templates = dict(templates)
+        self.stats = ServeStats()
+        self._compiled: Dict[str, S.Compiled] = {}
+        self._queue: List[_Request] = []
+        self._lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- template management -------------------------------------------------
+
+    def compiled_for(self, name: str) -> S.Compiled:
+        """The (cached) :class:`Compiled` serving template ``name``."""
+        got = self._compiled.get(name)
+        if got is None:
+            try:
+                factory = self.templates[name]
+            except KeyError:
+                raise KeyError(f"unknown template {name!r}; registered: "
+                               f"{sorted(self.templates)}") from None
+            kwargs = {} if self.join_index is None else {
+                "join_index": self.join_index}
+            got = factory(self.ctx).lower(engine=self.engine,
+                                          **kwargs).compile()
+            self._compiled[name] = got
+        return got
+
+    def warmup(self, buckets: Iterable[int] = (1,)) -> None:
+        """Pre-compile every template for the given batch buckets, so
+        serving traffic never pays a compile."""
+        for name in self.templates:
+            compiled = self.compiled_for(name)
+            if not compiled.params():
+                continue
+            for b in buckets:
+                compiled._batch_executor(ENG.batch_bucket(b))
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, name: str, **params: Any) -> ServeFuture:
+        """Admit one request; returns immediately with a future."""
+        fut = ServeFuture(self.stats, time.perf_counter())
+        req = _Request(name, params, fut)
+        with self._lock:
+            self._queue.append(req)
+            self.stats.submitted += 1
+            depth = len(self._queue)
+            if depth > self.stats.max_queue_depth:
+                self.stats.max_queue_depth = depth
+        return fut
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- coalesced execution -------------------------------------------------
+
+    def flush(self) -> int:
+        """Drain the queue: same-template requests coalesce into one
+        vmapped dispatch each (chunked at ``max_batch``).  Returns the
+        number of requests dispatched.  Safe to call concurrently with
+        ``submit``; requests admitted mid-flush wait for the next one.
+        """
+        with self._lock:
+            batch, self._queue = self._queue, []
+        if not batch:
+            return 0
+        groups: Dict[str, List[_Request]] = {}
+        for req in batch:
+            groups.setdefault(req.name, []).append(req)
+        for name, reqs in groups.items():
+            for i in range(0, len(reqs), self.max_batch):
+                self._dispatch(name, reqs[i:i + self.max_batch])
+        return len(batch)
+
+    def _dispatch(self, name: str, reqs: List[_Request]) -> None:
+        try:
+            compiled = self.compiled_for(name)
+            c0 = compiled.stats.compile_s
+            handles = compiled.batch([r.params for r in reqs], block=False)
+            bucket = (ENG.batch_bucket(len(reqs)) if compiled.params()
+                      else len(reqs))
+            self.stats.record_batch(len(reqs), bucket,
+                                    compiled.stats.compile_s - c0,
+                                    compiled.stats.run_s)
+        except BaseException as err:  # surface through every waiter
+            for r in reqs:
+                r.future._fail(err)
+            return
+        for r, h in zip(reqs, handles):
+            r.future._assign(h)
+
+    def serve(self, requests: Iterable[Tuple[str, Dict[str, Any]]],
+              block: bool = True) -> List[Any]:
+        """Admit ``(name, params)`` pairs, flush once, and return one
+        result (or un-materialised future, ``block=False``) per request
+        in submission order."""
+        futs = [self.submit(name, **params) for name, params in requests]
+        self.flush()
+        return [f.result() for f in futs] if block else futs
+
+    # -- background worker ---------------------------------------------------
+
+    def start(self, interval_s: float = 0.001) -> "QueryServer":
+        """Run the flush loop on a daemon thread every ``interval_s``;
+        ``submit`` alone then suffices for callers."""
+        if self._worker is not None:
+            return self
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self.flush()
+                self._stop.wait(interval_s)
+            self.flush()  # drain whatever arrived before stop
+
+        self._worker = threading.Thread(target=loop, daemon=True,
+                                        name="repro-serve-flush")
+        self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        if self._worker is None:
+            return
+        self._stop.set()
+        self._worker.join()
+        self._worker = None
+
+    def __enter__(self) -> "QueryServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- telemetry -----------------------------------------------------------
+
+    def telemetry(self) -> Dict[str, Any]:
+        """One snapshot: serve counters, process-wide cache aggregates
+        (:func:`repro.core.engines.cache_stats`), and per-template
+        compile/dispatch state."""
+        templates = {}
+        for name, compiled in self._compiled.items():
+            st = compiled.stats
+            entry = {
+                "engine": compiled.engine_name,
+                "compile_s": round(st.compile_s, 6),
+                "cache_hit": st.cache_hit,
+            }
+            report = st.dispatch
+            if report is not None:
+                entry["dispatch"] = {
+                    "fired": [d.pattern for d in report.fired],
+                    "index": [(d.pattern, d.fired)
+                              for d in report.index_decisions],
+                }
+            templates[name] = entry
+        return {
+            "serve": self.stats.to_dict(),
+            "caches": ENG.cache_stats(),
+            "templates": templates,
+        }
+
+    def __repr__(self):
+        return (f"QueryServer(templates={sorted(self.templates)}, "
+                f"engine={self.engine!r}, queued={self.queue_depth()}, "
+                f"served={self.stats.completed})")

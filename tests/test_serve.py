@@ -1,0 +1,303 @@
+"""The prepared-query serving layer (repro.serve + Compiled.batch).
+
+Covers the acceptance surface of the serving subsystem (DESIGN.md
+section 11):
+
+* differential: vmap-coalesced ``Compiled.batch`` agrees with
+  per-binding sequential execution for EVERY template in
+  ``Q.TEMPLATES``, across 1/3/8-request batches (3 exercises the ragged
+  bucket-4 padding path),
+* the queue: mixed-template submissions coalesce per template and each
+  future resolves to its own request's result,
+* caching: exactly one batched executable compiled per
+  (template, bucket), further batches hit the CompileCache,
+* the async API: ``Compiled(block=False)`` / ``submit`` return un-synced
+  :class:`AsyncResult` handles, a public deferred-readiness path,
+* telemetry: coalesce ratio, batch occupancy, queue depth, p50/p99 and
+  the process-wide ``engines.cache_stats()`` aggregate,
+* the ``launch/serve.py`` -> ``serve_llm.py`` rename keeps a working
+  deprecation shim.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import assert_results_equal
+from repro.core import FlareContext, col, sum_
+from repro.core import engines as ENG
+from repro.core import stages as S
+from repro.relational import queries as Q
+from repro.serve import QueryServer, ServeStats
+from repro.serve.stats import percentile
+
+SF = 0.005
+
+TEMPLATE_NAMES = sorted(Q.TEMPLATES)
+BATCH_SIZES = [1, 3, 8]
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    c = FlareContext()
+    Q.register_tpch(c, sf=SF)
+    return c
+
+
+def bindings_for(name, n):
+    """``n`` bindings cycling the registry's representative list."""
+    base = Q.TEMPLATE_BINDINGS[name]
+    return [dict(base[i % len(base)]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# differential: batched == sequential for every template x batch size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", TEMPLATE_NAMES)
+@pytest.mark.parametrize("n", BATCH_SIZES)
+def test_batch_matches_sequential(ctx, tname, n):
+    compiled = Q.TEMPLATES[tname](ctx).lower(engine="compiled").compile()
+    bindings = bindings_for(tname, n)
+    sequential = [compiled.result(**b).compact() for b in bindings]
+    batched = compiled.batch(bindings)
+    assert len(batched) == n
+    for i, (want, got) in enumerate(zip(sequential, batched)):
+        assert_results_equal(want, got.compact(),
+                             msg=f"{tname} binding {i} of batch {n}")
+
+
+def test_batch_block_false_returns_async_handles(ctx):
+    compiled = Q.TEMPLATES["q6"](ctx).lower(engine="compiled").compile()
+    bindings = bindings_for("q6", 3)
+    handles = compiled.batch(bindings, block=False)
+    assert all(isinstance(h, S.AsyncResult) for h in handles)
+    want = [compiled.result(**b).compact() for b in bindings]
+    for w, h in zip(want, handles):
+        assert_results_equal(w, h.compact())
+        assert h.ready()
+
+
+# ---------------------------------------------------------------------------
+# the async single-binding API (satellite: Compiled.__call__ block=False)
+# ---------------------------------------------------------------------------
+
+
+def test_call_block_false_is_public_async_path(ctx):
+    compiled = Q.TEMPLATES["q6"](ctx).lower(engine="compiled").compile()
+    binding = Q.TEMPLATE_BINDINGS["q6"][0]
+    handle = compiled(block=False, **binding)
+    assert isinstance(handle, S.AsyncResult)
+    assert_results_equal(compiled(**binding), handle.compact())
+    # the materialised result is cached on the handle
+    assert handle.result() is handle.result()
+    assert handle.ready()
+
+
+def test_submit_works_on_engines_without_deferred_path(ctx):
+    # interpreters have no raw/finalize split: submit falls back to an
+    # eager execution behind an already-ready handle (uniform API)
+    compiled = Q.TEMPLATES["q6"](ctx).lower(engine="volcano").compile()
+    binding = Q.TEMPLATE_BINDINGS["q6"][0]
+    handle = compiled.submit(**binding)
+    assert handle.ready()
+    assert_results_equal(compiled(**binding), handle.compact())
+
+
+def test_batch_rejects_non_batchable_engines(ctx):
+    compiled = Q.TEMPLATES["q6"](ctx).lower(engine="volcano").compile()
+    with pytest.raises(TypeError, match="batched execution"):
+        compiled.batch(bindings_for("q6", 2))
+
+
+def test_param_free_batch_runs_once_and_shares(ctx):
+    q = ctx.table("lineitem").agg(sum_(col("l_quantity"), "s"))
+    compiled = q.lower(engine="compiled").compile()
+    handles = compiled.batch([{}, {}, {}], block=False)
+    # perfect coalescing: one execution, every request shares the handle
+    assert len(handles) == 3
+    assert handles[0] is handles[1] is handles[2]
+    assert_results_equal(compiled(), handles[0].compact())
+
+
+# ---------------------------------------------------------------------------
+# caching: one compile per (template, bucket)
+# ---------------------------------------------------------------------------
+
+
+def test_one_compile_per_bucket(ctx):
+    cache = S.CompileCache()
+    compiled = Q.TEMPLATES["q6"](ctx).lower(
+        engine="compiled").compile(cache=cache)
+    base_entries = len(cache)
+    h0, m0 = cache.hits, cache.misses
+    compiled.batch(bindings_for("q6", 3))   # ragged -> bucket 4, compiles
+    compiled.batch(bindings_for("q6", 4))   # full bucket 4 -> cache hit
+    compiled.batch(bindings_for("q6", 3))   # hit again
+    assert len(cache) == base_entries + 1   # ONE batched executable
+    assert cache.misses == m0 + 1
+    assert cache.hits == h0 + 2
+    compiled.batch(bindings_for("q6", 8))   # new bucket -> second compile
+    assert len(cache) == base_entries + 2
+    batch_keys = [k for k in cache._entries
+                  if isinstance(k[-1], tuple) and k[-1][0] == "batch"]
+    assert sorted(k[-1][1] for k in batch_keys) == [4, 8]
+
+
+def test_batch_bucket_policy():
+    assert [ENG.batch_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    with pytest.raises(ValueError):
+        ENG.batch_bucket(0)
+
+
+def test_cache_stats_aggregates_live_caches(ctx):
+    snap = ENG.cache_stats()
+    assert {"compile", "device", "index"} <= set(snap)
+    for kind, agg in snap.items():
+        assert agg["caches"] >= 1, kind
+        assert agg["hits"] >= 0 and agg["misses"] >= 0
+        assert 0.0 <= agg["hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# the server: admission -> coalesce -> vmap execute -> deferred sync
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_template_queue_coalesces_per_template(ctx):
+    server = QueryServer(ctx)
+    reqs = []
+    for name in ("q6", "q14", "q6", "q19", "q14", "q6"):
+        base = Q.TEMPLATE_BINDINGS[name]
+        reqs.append((name, dict(base[len(reqs) % len(base)])))
+    futs = [server.submit(name, **params) for name, params in reqs]
+    assert server.queue_depth() == len(reqs)
+    assert server.flush() == len(reqs)
+    assert server.queue_depth() == 0
+    for (name, params), fut in zip(reqs, futs):
+        want = server.compiled_for(name).result(**params).compact()
+        assert_results_equal(want, fut.result().compact(), msg=name)
+    # 6 requests, 3 template groups -> 3 dispatches
+    assert server.stats.batches == 3
+    assert server.stats.coalesce_ratio() == pytest.approx(0.5)
+
+
+def test_server_telemetry(ctx):
+    server = QueryServer(ctx)
+    bindings = bindings_for("q6", 8)
+    server.serve([("q6", b) for b in bindings])
+    st = server.stats
+    assert st.submitted == st.completed == 8
+    assert st.batches == 1
+    assert st.coalesce_ratio() == pytest.approx(1 - 1 / 8)
+    assert st.batch_occupancy() == pytest.approx(1.0)  # 8 fills bucket 8
+    assert st.max_queue_depth == 8
+    assert len(st.latencies_s) == 8
+    assert 0 < st.p50_s() <= st.p99_s()
+    tele = server.telemetry()
+    assert tele["serve"]["completed"] == 8
+    assert tele["templates"]["q6"]["engine"] == "compiled"
+    assert "compile" in tele["caches"]
+
+
+def test_server_ragged_batch_occupancy(ctx):
+    server = QueryServer(ctx)
+    server.serve([("q6", b) for b in bindings_for("q6", 3)])
+    # 3 live requests in a bucket-4 executable
+    assert server.stats.batch_occupancy() == pytest.approx(0.75)
+
+
+def test_server_max_batch_chunks(ctx):
+    server = QueryServer(ctx, max_batch=4)
+    results = server.serve([("q6", b) for b in bindings_for("q6", 6)])
+    assert len(results) == 6
+    assert server.stats.batches == 2  # 4 + 2
+
+
+def test_server_unknown_template_fails_the_future(ctx):
+    server = QueryServer(ctx)
+    fut = server.submit("q99")
+    server.flush()
+    with pytest.raises(KeyError, match="q99"):
+        fut.result()
+
+
+def test_future_timeout_before_flush(ctx):
+    server = QueryServer(ctx)
+    fut = server.submit("q6", **Q.TEMPLATE_BINDINGS["q6"][0])
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+    server.flush()
+    fut.result(timeout=10)
+
+
+def test_threaded_server_background_flush(ctx):
+    binding = Q.TEMPLATE_BINDINGS["q6"][0]
+    want = Q.TEMPLATES["q6"](ctx).lower(engine="compiled").compile()(**binding)
+    with QueryServer(ctx) as server:
+        futs = [server.submit("q6", **b) for b in bindings_for("q6", 4)]
+        got = futs[0].result(timeout=30)
+    assert_results_equal(want, got.compact())
+    assert server._worker is None  # stopped on exit
+
+
+def test_concurrent_submitters(ctx):
+    server = QueryServer(ctx).start(interval_s=0.001)
+    try:
+        bindings = bindings_for("q14", 8)
+        outs = [None] * len(bindings)
+
+        def client(i):
+            outs[i] = server.submit("q14", **bindings[i]).result(timeout=60)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(bindings))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        server.stop()
+    compiled = server.compiled_for("q14")
+    for b, out in zip(bindings, outs):
+        assert_results_equal(compiled.result(**b).compact(), out.compact())
+    assert server.stats.completed == len(bindings)
+
+
+# ---------------------------------------------------------------------------
+# satellites: random_bindings, percentile, the serve_llm rename
+# ---------------------------------------------------------------------------
+
+
+def test_random_bindings_reproducible():
+    for name in TEMPLATE_NAMES:
+        a = Q.random_bindings(name, 5, seed=7)
+        b = Q.random_bindings(name, 5, seed=7)
+        assert a == b and len(a) == 5
+    assert Q.random_bindings("q6", 3, seed=1) != \
+        Q.random_bindings("q6", 3, seed=2)
+
+
+def test_percentile_nearest_rank():
+    lat = [float(i) for i in range(1, 101)]
+    assert percentile(lat, 50) == pytest.approx(50.0, abs=1.0)
+    assert percentile(lat, 99) == pytest.approx(99.0, abs=1.0)
+    assert percentile([], 50) == 0.0
+
+
+def test_serve_stats_empty():
+    st = ServeStats()
+    assert st.coalesce_ratio() == 0.0
+    assert st.batch_occupancy() == 0.0
+    assert st.to_dict()["p99_ms"] == 0.0
+
+
+def test_launch_serve_shim_deprecated():
+    import importlib
+    with pytest.warns(DeprecationWarning, match="serve_llm"):
+        shim = importlib.import_module("repro.launch.serve")
+        importlib.reload(shim)  # re-warn if some earlier import won
+    from repro.launch.serve_llm import generate as real
+    assert shim.generate is real
