@@ -113,6 +113,8 @@ def run(native: bool = False, parallel: bool = False) -> None:
              native=int(native))
 
     if native or parallel:
+        from repro.persist import store as PS
+        report["store"] = PS.live_store_stats()
         with open(JSON_PATH, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {JSON_PATH}")

@@ -35,12 +35,22 @@ from repro.relational import table as T
 
 
 class FlareContext:
-    """Session object: catalog + device cache + compile cache."""
+    """Session object: catalog + device cache + compile cache.
+
+    ``store`` attaches a persistent artifact store
+    (:class:`repro.persist.ArtifactStore`) as the disk tier under this
+    context's compile and index caches; when None, the ambient
+    ``$FLARE_CACHE_DIR`` store (if set) is used.  Either way a fresh
+    process re-serves executables and join indexes that an earlier
+    process compiled (DESIGN.md section 12).
+    """
 
     def __init__(self, optimize: bool = True,
-                 join_reorder: bool = False):
+                 join_reorder: bool = False,
+                 store: Optional[Any] = None):
         self.catalog = P.Catalog()
-        self.cache = ENG.DeviceCache()
+        self.store = store
+        self.cache = ENG.DeviceCache(store=store)
         self.compile_cache = S.CompileCache()
         self.optimize = optimize
         self.join_reorder = join_reorder

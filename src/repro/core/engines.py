@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import expr as E
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.persist import store as PS
 from repro.relational import table as T
 
 # Pipeline breakers.  MapBatches breaks on the STAGE engine by design:
@@ -82,6 +83,14 @@ def cache_stats() -> Dict[str, Dict[str, Any]]:
     caches, total entries, and summed hits/misses with the combined hit
     rate.  The query server (``repro.serve``) and the benchmarks report
     from here.
+
+    Schema (stable, DESIGN.md section 12): per kind the keys are
+    ``caches``, ``entries``, ``hits``, ``misses``, ``hit_rate``;
+    ``compile`` and ``index`` additionally carry a nested ``disk`` dict
+    -- the summed per-tier :class:`repro.persist.TierStats` across every
+    live :class:`repro.persist.ArtifactStore` (zeros when none) -- so
+    callers can attribute a memory-tier miss that was actually served
+    from disk.
     """
     out: Dict[str, Dict[str, Any]] = {}
     for cache in list(_LIVE_CACHES):
@@ -95,6 +104,11 @@ def cache_stats() -> Dict[str, Dict[str, Any]]:
     for agg in out.values():
         total = agg["hits"] + agg["misses"]
         agg["hit_rate"] = round(agg["hits"] / total, 4) if total else 0.0
+    disk = PS.live_store_stats()
+    if "compile" in out:
+        out["compile"]["disk"] = disk["exec"]
+    if "index" in out:
+        out["index"]["disk"] = disk["index"]
     return out
 
 
@@ -159,15 +173,27 @@ class IndexCache:
     unique`) are *verified* against the data here: a false declaration
     fails loudly instead of silently mis-validating filtered build
     sides.
+
+    ``store`` (or, when None, the ambient ``$FLARE_CACHE_DIR`` store)
+    is the disk tier: a memory miss first tries
+    ``<store>/v1/index/<digest>.flare`` -- the digest covers the raw
+    key-column bytes, so changed data can never hit a stale index --
+    and a fresh build writes through.  ``disk_hits`` counts builds this
+    cache skipped by deserializing.
     """
 
     kind = "index"
 
-    def __init__(self):
+    def __init__(self, store: Optional["PS.ArtifactStore"] = None):
         self._entries: Dict[Tuple, JoinIndex] = {}
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
+        self.store = store
         register_cache(self)
+
+    def _store(self) -> Optional["PS.ArtifactStore"]:
+        return self.store if self.store is not None else PS.default_store()
 
     @staticmethod
     def _key(tbl: T.Table, key_cols: Tuple[str, ...],
@@ -183,11 +209,62 @@ class IndexCache:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
-            entry = self._build(tbl, tuple(key_cols), tuple(doms))
+            store = self._store()
+            digest = (PS.index_digest(tbl, tuple(key_cols), tuple(doms))
+                      if store is not None else None)
+            if store is not None:
+                entry = self._load_persisted(store, digest, tbl,
+                                             tuple(key_cols))
+                if entry is not None:
+                    self.disk_hits += 1
+            if entry is None:
+                entry = self._build(tbl, tuple(key_cols), tuple(doms))
+                if store is not None:
+                    self._save_persisted(store, digest, entry)
             self._entries[key] = entry
         else:
             self.hits += 1
         return entry
+
+    @staticmethod
+    def _load_persisted(store: "PS.ArtifactStore", digest: str,
+                        tbl: T.Table, key_cols: Tuple[str, ...]
+                        ) -> Optional[JoinIndex]:
+        loaded = store.load("index", digest)
+        if loaded is None:
+            return None
+        header, sections = loaded
+        meta = header.get("meta", {})
+        try:
+            n = int(meta["n"])
+            unique = bool(meta["unique"])
+            if len(sections) != 2:
+                raise ValueError("expected perm + keys sections")
+            perm = np.frombuffer(sections[0], np.int32)
+            keys = np.frombuffer(sections[1], np.int32)
+            if len(perm) != n or len(keys) != n or n != tbl.num_rows:
+                raise ValueError("length mismatch")
+        except (KeyError, TypeError, ValueError):
+            store.demote_hit("index", "corrupt")
+            return None
+        # the declared-unique contract is verified against the data at
+        # build time; the digest pins the data, so replaying the saved
+        # verdict keeps a false declaration failing loudly here too
+        declared = any(tbl.schema[c].unique for c in key_cols)
+        if declared and not unique:
+            raise ValueError(
+                f"column(s) {list(key_cols)} are declared unique "
+                f"(Field.unique) but hold duplicate keys")
+        return JoinIndex(jnp.asarray(perm), jnp.asarray(keys), unique)
+
+    @staticmethod
+    def _save_persisted(store: "PS.ArtifactStore", digest: str,
+                        entry: JoinIndex) -> None:
+        perm = np.asarray(entry.perm, np.int32)
+        keys = np.asarray(entry.keys, np.int32)
+        store.save("index", digest,
+                   {"n": int(len(perm)), "unique": bool(entry.unique)},
+                   [perm.tobytes(), keys.tobytes()])
 
     @staticmethod
     def _build(tbl: T.Table, key_cols: Tuple[str, ...],
@@ -243,10 +320,10 @@ class DeviceCache:
 
     kind = "device"
 
-    def __init__(self):
+    def __init__(self, store: Optional["PS.ArtifactStore"] = None):
         # (id(table), column) or (id(table), column, pad_to) -> device array
         self._cache: Dict[Tuple, jnp.ndarray] = {}
-        self.indexes = IndexCache()
+        self.indexes = IndexCache(store=store)
         register_cache(self)
 
     def __len__(self) -> int:
@@ -308,6 +385,12 @@ class CompileStats:
     (:class:`repro.native.registry.DispatchReport`) when the template
     was lowered with ``native=True`` / the ``compiled-native`` engine:
     which kernel patterns fired, which fragments fell back, and why.
+
+    ``disk_hit`` is True when the executable came off the persistent
+    store tier (no trace, no XLA compile of the plan); ``persist`` is
+    the human-readable disposition of the disk tier for this compile
+    ("hit:native", "hit:portable", "written", "unsupported: ...",
+    "" when no store was in play).
     """
 
     trace_compile_s: float = 0.0
@@ -318,6 +401,8 @@ class CompileStats:
     engine: str = ""
     cache_key: Optional[Tuple] = None
     dispatch: Optional[Any] = None
+    disk_hit: bool = False
+    persist: str = ""
 
 
 def require_param(params: Optional[Dict[str, Any]], spec: E.Param):

@@ -46,6 +46,8 @@ from repro.core import engines as ENG
 from repro.core import expr as E
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.persist import executable as PX
+from repro.persist import store as PSTORE
 from repro.relational import table as T
 
 CompileStats = ENG.CompileStats
@@ -71,7 +73,11 @@ def template_key(engine: str, p: P.Plan, catalog: P.Catalog,
     bindings of one template share a key; literals are part of the key.
     Dictionary CONTENTS are baked into compiled programs (string-predicate
     LUTs, comparison codes, decode tables), so the key must cover them,
-    not just their lengths.
+    not just their lengths.  Every key component is process-independent
+    (``table.dict_token`` rather than salted builtin ``hash``), because
+    the same key also addresses the on-disk artifact store
+    (``repro.persist``): process B must compute the digest process A
+    wrote under.
 
     Join-index identity is part of the key: which joins lower against a
     cached build-side index (and over which table/key columns) changes
@@ -85,7 +91,7 @@ def template_key(engine: str, p: P.Plan, catalog: P.Catalog,
         tbl = catalog.table(name)
         parts.append((name, tbl.num_rows,
                       tuple((f.name, f.dtype, f.domain, f.unique,
-                             hash(tbl.dictionary(f.name) or ()))
+                             T.dict_token(tbl.dictionary(f.name)))
                             for f in tbl.schema)))
     if getattr(p, "_join_index_disabled", False):
         parts.append(("joinidx", "disabled"))
@@ -147,6 +153,218 @@ class CompileCache:
 
 
 _DEFAULT_COMPILE_CACHE = CompileCache()
+
+
+# ---------------------------------------------------------------------------
+# the persistent store tier under the CompileCache (DESIGN.md section 12)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_store(persist: Any, device_cache: ENG.DeviceCache
+                   ) -> Optional["PSTORE.ArtifactStore"]:
+    """The store governing one compile: ``persist=False`` disables,
+    an :class:`repro.persist.ArtifactStore` selects explicitly, None
+    defers to the device cache's store and then ``$FLARE_CACHE_DIR``."""
+    if persist is False:
+        return None
+    if persist is not None:
+        return persist
+    return device_cache.indexes._store()
+
+
+def _exec_digest(key: Tuple, bucket: Optional[int] = None) -> str:
+    """Content address of one executable artifact: the (process-
+    independent) template key, extended for batched executables with
+    the vmap bucket -- mirroring the in-memory CompileCache keying."""
+    if bucket is None:
+        return PSTORE.stable_digest("exec", key)
+    return PSTORE.stable_digest("exec", key, ("batch", bucket))
+
+
+def _persistable(engine_name: str, p: P.Plan) -> Tuple[bool, str]:
+    if engine_name not in PX.PERSISTABLE_ENGINES:
+        return False, (f"engine {engine_name!r} has no serializable "
+                       f"whole-query executable")
+    return PX.plan_persistable(p)
+
+
+def _template_geometry(p: P.Plan, catalog: P.Catalog
+                       ) -> Tuple[Tuple[Tuple[str, Tuple[str, ...]], ...],
+                                  Tuple[L.JoinIndexSpec, ...]]:
+    """The argument geometry of a template WITHOUT tracing it: the scan
+    (table, columns) layout in trace-argument order and the join-index
+    layout.  Pure function of (plan, catalog) -- it recomputes exactly
+    what :func:`repro.core.lower.build_callable` would hand back, which
+    is what lets a store-loaded executable re-bind its arguments in a
+    process that never traced the plan."""
+    needed = L.required_scan_columns(p, catalog)
+    smap = ENG.scan_map(p)
+    order: List[P.Plan] = []
+
+    def collect(n: P.Plan):
+        if isinstance(n, P.Scan):
+            order.append(n)
+        for c in n.children():
+            collect(c)
+
+    collect(p)
+    layout = tuple((smap[id(s)], tuple(needed[id(s)])) for s in order)
+    if getattr(p, "_join_index_disabled", False):
+        index_layout: Tuple[L.JoinIndexSpec, ...] = ()
+    else:
+        specs, _ = L.join_index_plan(p, catalog)
+        index_layout = tuple(specs.values())
+    return layout, index_layout
+
+
+def _load_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
+                         p: P.Plan, catalog: P.Catalog, engine_name: str,
+                         param_specs: Tuple[E.Param, ...],
+                         bucket: Optional[int] = None
+                         ) -> Tuple[Optional[Any], str]:
+    """Deserialize one executable artifact into a ready executor.
+
+    Tier order inside the artifact: the **native** payload (a
+    serialized PjRt executable -- loads in milliseconds with ZERO XLA
+    compilation) requires a full version-envelope match; the
+    **portable** ``jax.export`` payload survives toolchain drift but
+    re-pays the XLA compile.  Anything structurally off counts
+    ``corrupt``; an artifact neither tier can use counts
+    ``version_miss``.  Returns ``(executor-or-BatchExecutor, "hit:...")``
+    or ``(None, "")`` -- failures always fall back to a fresh compile.
+    """
+    loaded = store.load("exec", digest, envelope_keys=("format",))
+    if loaded is None:
+        return None, ""
+    header, sections = loaded
+    meta = header.get("meta") or {}
+    schema = p.schema(catalog)
+    out_info = L.static_info(p, catalog)
+    layout, index_layout = _template_geometry(p, catalog)
+    pdtypes = [jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))
+               for s in param_specs]
+    n_args = (sum(len(names) for _, names in layout)
+              + 2 * len(index_layout) + len(param_specs))
+    expect = {
+        "engine": engine_name,
+        "bucket": bucket,
+        "params": [[s.name, s.dtype] for s in param_specs],
+        "n_args": n_args,
+        "n_out": len(schema.names) + 1,
+    }
+    if (len(sections) != 2
+            or any(meta.get(k) != v for k, v in expect.items())):
+        store.demote_hit("exec", "corrupt")
+        return None, ""
+    # flat output order of the native executable = tree_flatten of the
+    # traced (out_cols dict, mask) pytree: sorted column names, then mask
+    names_sorted = sorted(schema.names)
+    dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
+
+    dispatch: Optional[Callable[[List[Any]], Any]] = None
+    disposition = ""
+    if sections[0] and header.get("envelope") == store.current_envelope():
+        try:
+            native = PX.deserialize_native(sections[0])
+            kept = tuple(int(i) for i in meta.get("kept", []))
+
+            def dispatch(args, _native=native, _kept=kept):
+                outs = PX.execute_flat(_native, args, _kept)
+                return dict(zip(names_sorted, outs)), outs[len(names_sorted)]
+
+            disposition = "hit:native"
+        except Exception:
+            dispatch = None
+    if dispatch is None and sections[1] and \
+            store.current_envelope()["platform"] in (meta.get("platforms")
+                                                     or []):
+        try:
+            exe = PX.deserialize_portable(sections[1])
+
+            def dispatch(args, _exe=exe):
+                return _exe(*args)
+
+            disposition = "hit:portable"
+        except Exception:
+            dispatch = None
+    if dispatch is None:
+        store.demote_hit("exec", "version_miss")
+        return None, ""
+
+    if bucket is None:
+        def raw(catalog_: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]):
+            args = _marshal_args(layout, index_layout, catalog_,
+                                 device_cache)
+            for s, dt in zip(param_specs, pdtypes):
+                args.append(jnp.asarray(ENG.require_param(params, s), dt))
+            return dispatch(args)
+
+        def finalize(out):
+            out_cols, mask = out
+            out_np = {k: np.asarray(v) for k, v in out_cols.items()}
+            return L.Result(out_np, np.asarray(mask), schema, dicts)
+
+        def run(catalog_: P.Catalog, device_cache: ENG.DeviceCache,
+                params: Optional[Dict[str, Any]]):
+            return finalize(raw(catalog_, device_cache, params))
+
+        run.raw = raw
+        run.finalize = finalize
+        return run, disposition
+
+    def braw(catalog_: P.Catalog, device_cache: ENG.DeviceCache,
+             stacked: Dict[str, np.ndarray]):
+        args = _marshal_args(layout, index_layout, catalog_, device_cache)
+        for s, dt in zip(param_specs, pdtypes):
+            args.append(jnp.asarray(stacked[s.name], dt))
+        return dispatch(args)
+
+    def finalize_one(out, i: int):
+        out_cols, mask = out
+        out_np = {k: np.asarray(v[i]) for k, v in out_cols.items()}
+        return L.Result(out_np, np.asarray(mask[i]), schema, dicts)
+
+    return BatchExecutor(braw, finalize_one, bucket), disposition
+
+
+def _save_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
+                         exe_like: Any, engine_name: str,
+                         param_specs: Tuple[E.Param, ...],
+                         schema: Optional[T.Schema],
+                         bucket: Optional[int] = None) -> str:
+    """Write-through after a fresh compile.  Serializes both payload
+    tiers (native PjRt bytes; portable ``jax.export`` bytes, best
+    effort) under the artifact's content digest.  Never raises: any
+    failure is counted and the compile result stands."""
+    jax_exe = getattr(exe_like, "jax_exe", None)
+    export_src = getattr(exe_like, "export_src", None)
+    n_args = getattr(exe_like, "n_args", None)
+    if jax_exe is None or schema is None or n_args is None:
+        store.tier("exec").unsupported += 1
+        return "unsupported: executor exposes no serializable executable"
+    try:
+        native_bytes, kept = PX.serialize_compiled(jax_exe)
+    except Exception as e:
+        store.tier("exec").errors += 1
+        return f"error: {type(e).__name__}"
+    exported, platforms = b"", []
+    if export_src is not None:
+        try:
+            exported, platforms = PX.export_portable(*export_src)
+        except Exception:
+            pass  # the portable tier is optional; native alone still serves
+    meta = {
+        "engine": engine_name,
+        "bucket": bucket,
+        "params": [[s.name, s.dtype] for s in param_specs],
+        "n_args": n_args,
+        "n_out": len(schema.names) + 1,
+        "kept": list(kept),
+        "platforms": platforms,
+    }
+    path = store.save("exec", digest, meta, [native_bytes, exported])
+    return "written" if path else "error: write failed"
 
 
 def bind_params(p: P.Plan, params: Dict[str, Any]) -> P.Plan:
@@ -291,6 +509,25 @@ def shared_avals(layout: Tuple[Tuple[str, Tuple[str, ...]], ...],
     return avals
 
 
+def _marshal_args(layout: Tuple[Tuple[str, Tuple[str, ...]], ...],
+                  index_layout: Sequence[L.JoinIndexSpec],
+                  catalog: P.Catalog, device_cache: ENG.DeviceCache
+                  ) -> List[jnp.ndarray]:
+    """The binding-independent argument prefix of a whole-query
+    executable: device-resident scan columns (in layout order) followed
+    by the join-index (perm, keys) pairs.  Shared by freshly-compiled
+    and store-loaded executors -- the layout is a pure function of
+    (plan, catalog), which is what lets a deserialized executable be
+    re-bound to arguments without ever tracing."""
+    args: List[jnp.ndarray] = []
+    for tname, names in layout:
+        tbl = catalog.table(tname)
+        for n in names:
+            args.append(device_cache.get(tbl, n))
+    args.extend(index_args(index_layout, catalog, device_cache))
+    return args
+
+
 class WholeQueryEngine:
     """Whole-query compilation: plan -> one jaxpr -> one XLA executable.
 
@@ -337,12 +574,8 @@ class WholeQueryEngine:
             """Dispatch only: returns the (possibly un-synced) device
             output pytree -- the deferred-readiness path behind
             ``Compiled.submit`` / ``__call__(block=False)``."""
-            args = []
-            for tname, names in layout:
-                tbl = catalog.table(tname)
-                for n in names:
-                    args.append(device_cache.get(tbl, n))
-            args.extend(index_args(index_layout, catalog, device_cache))
+            args = _marshal_args(layout, index_layout, catalog,
+                                 device_cache)
             for s, dt in zip(specs, pdtypes):
                 args.append(jnp.asarray(ENG.require_param(params, s), dt))
             return exe(*args)
@@ -362,6 +595,12 @@ class WholeQueryEngine:
 
         run.raw = raw            # deferred-sync protocol (AsyncResult)
         run.finalize = finalize
+        # handles for the persistent store tier (repro.persist): the
+        # jax executable to serialize, its argument count, and the
+        # (fn, avals) source for the portable jax.export payload
+        run.jax_exe = exe
+        run.n_args = len(artifact.avals)
+        run.export_src = (artifact.fn, artifact.avals)
         return run
 
 
@@ -573,26 +812,62 @@ class Lowered:
             self._lower_s = time.perf_counter() - t0
         return self._artifact
 
-    def compile(self, cache: Optional[CompileCache] = None) -> "Compiled":
-        """Compile (or fetch from ``cache``) the executable for this
-        template; returns a :class:`Compiled` with fresh CompileStats."""
+    def compile(self, cache: Optional[CompileCache] = None,
+                persist: Any = None) -> "Compiled":
+        """Compile (or fetch) the executable for this template; returns
+        a :class:`Compiled` with fresh CompileStats.
+
+        Lookup order: memory (``cache``), then the persistent store
+        tier -- ``persist`` names an :class:`repro.persist.
+        ArtifactStore`, ``False`` disables the disk tier, None (the
+        default) uses the context's store and then the ambient
+        ``$FLARE_CACHE_DIR``.  A disk hit deserializes, promotes to
+        memory, and sets ``stats.disk_hit`` (no tracing, and on the
+        native tier no XLA compilation); a fresh compile writes
+        through.
+        """
         cache = cache if cache is not None else self._compile_cache
         stats = CompileStats(engine=self._engine.name, cache_key=self._key,
                              dispatch=self._dispatch_report)
+        store = _resolve_store(persist, self._device_cache)
         exe = cache.lookup(self._key)
         if exe is None:
-            artifact = self._force()
-            t0 = time.perf_counter()
-            exe = self._engine.compile(artifact)
-            stats.compile_s = time.perf_counter() - t0
-            stats.lower_s = self._lower_s
-            cache.insert(self._key, exe)
+            can_persist = False
+            if store is not None:
+                can_persist, reason = _persistable(self._engine.name,
+                                                   self._plan)
+                if can_persist:
+                    t0 = time.perf_counter()
+                    exe, disposition = _load_persisted_exec(
+                        store, _exec_digest(self._key), self._plan,
+                        self._catalog, self._engine.name,
+                        self._param_specs)
+                    if exe is not None:
+                        stats.compile_s = time.perf_counter() - t0
+                        stats.disk_hit = True
+                        stats.persist = disposition
+                        cache.insert(self._key, exe)
+                else:
+                    store.tier("exec").unsupported += 1
+                    stats.persist = f"unsupported: {reason}"
+            if exe is None:
+                artifact = self._force()
+                t0 = time.perf_counter()
+                exe = self._engine.compile(artifact)
+                stats.compile_s = time.perf_counter() - t0
+                stats.lower_s = self._lower_s
+                cache.insert(self._key, exe)
+                if store is not None and can_persist:
+                    stats.persist = _save_persisted_exec(
+                        store, _exec_digest(self._key), exe,
+                        self._engine.name, self._param_specs,
+                        getattr(artifact, "schema", None))
         else:
             stats.cache_hit = True
         stats.trace_compile_s = stats.lower_s + stats.compile_s
         return Compiled(exe, self._plan, self._catalog, self._engine.name,
                         self._param_specs, self._key, self._device_cache,
-                        stats, compile_cache=cache)
+                        stats, compile_cache=cache, store=store)
 
 
 class AsyncResult:
@@ -668,6 +943,11 @@ class BatchExecutor:
     raw: Callable[[P.Catalog, ENG.DeviceCache, Dict[str, np.ndarray]], Any]
     finalize_one: Callable[[Any, int], Any]
     bucket: int
+    # persistent-store handles (None for store-loaded executors, which
+    # have nothing new to write back)
+    jax_exe: Any = None
+    n_args: Optional[int] = None
+    export_src: Optional[Tuple[Callable, Tuple]] = None
 
 
 def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
@@ -696,12 +976,7 @@ def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
 
     def raw(catalog: P.Catalog, device_cache: ENG.DeviceCache,
             stacked: Dict[str, np.ndarray]):
-        args = []
-        for tname, names in layout:
-            tbl = catalog.table(tname)
-            for n in names:
-                args.append(device_cache.get(tbl, n))
-        args.extend(index_args(index_layout, catalog, device_cache))
+        args = _marshal_args(layout, index_layout, catalog, device_cache)
         for s, dt in zip(param_specs, pdtypes):
             args.append(jnp.asarray(stacked[s.name], dt))
         return exe(*args)
@@ -715,7 +990,9 @@ def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
         dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
         return L.Result(out_np, np.asarray(mask[i]), schema, dicts)
 
-    return BatchExecutor(raw, finalize_one, bucket)
+    return BatchExecutor(raw, finalize_one, bucket,
+                         jax_exe=exe, n_args=len(avals),
+                         export_src=(bfn, tuple(avals)))
 
 
 #: Engines whose Compiled objects support vmap-coalesced batching.  The
@@ -740,7 +1017,8 @@ class Compiled:
                  engine_name: str, param_specs: Tuple[E.Param, ...],
                  key: Tuple, device_cache: ENG.DeviceCache,
                  stats: CompileStats,
-                 compile_cache: Optional[CompileCache] = None):
+                 compile_cache: Optional[CompileCache] = None,
+                 store: Optional["PSTORE.ArtifactStore"] = None):
         self._exe = exe
         self._plan = p
         self._catalog = catalog
@@ -750,6 +1028,7 @@ class Compiled:
         self._device_cache = device_cache
         self.stats = stats
         self._compile_cache = compile_cache
+        self._store = store
 
     def params(self) -> Tuple[E.Param, ...]:
         return self._param_specs
@@ -857,12 +1136,35 @@ class Compiled:
         cache = self._compile_cache
         exe = cache.lookup(key) if cache is not None else None
         if exe is None:
+            store = self._store
+            can_persist = False
+            if store is not None:
+                can_persist, _ = _persistable(self.engine_name, self._plan)
+            if can_persist:
+                t0 = time.perf_counter()
+                exe, disposition = _load_persisted_exec(
+                    store, _exec_digest(self.cache_key, bucket),
+                    self._plan, self._catalog, self.engine_name,
+                    self._param_specs, bucket=bucket)
+                if exe is not None:
+                    self.stats.compile_s += time.perf_counter() - t0
+                    self.stats.disk_hit = True
+                    if not self.stats.persist.startswith("hit"):
+                        self.stats.persist = disposition
+                    if cache is not None:
+                        cache.insert(key, exe)
+                    return exe
             t0 = time.perf_counter()
             exe = compile_batch_executor(self._plan, self._catalog,
                                          self._param_specs, bucket)
             self.stats.compile_s += time.perf_counter() - t0
             if cache is not None:
                 cache.insert(key, exe)
+            if can_persist:
+                _save_persisted_exec(
+                    store, _exec_digest(self.cache_key, bucket), exe,
+                    self.engine_name, self._param_specs,
+                    self._plan.schema(self._catalog), bucket=bucket)
         return exe
 
     def count(self, **params: Any) -> int:

@@ -1,0 +1,34 @@
+"""repro.persist -- the disk tier under the in-memory caches.
+
+``ArtifactStore`` is the public entry point::
+
+    store = persist.ArtifactStore("/var/cache/flare")
+    compiled = df.lower(engine="compiled").compile(persist=store)
+
+or ambiently, via the environment::
+
+    FLARE_CACHE_DIR=/var/cache/flare python serve.py
+
+See :mod:`repro.persist.store` for the container format and
+:mod:`repro.persist.executable` for the executable codec.
+"""
+from repro.persist.store import (  # noqa: F401
+    ArtifactStore,
+    CACHE_DIR_ENV,
+    FORMAT_VERSION,
+    TierStats,
+    default_store,
+    envelope,
+    index_digest,
+    stable_digest,
+)
+from repro.persist.executable import (  # noqa: F401
+    PERSISTABLE_ENGINES,
+    plan_persistable,
+)
+
+__all__ = [
+    "ArtifactStore", "CACHE_DIR_ENV", "FORMAT_VERSION", "TierStats",
+    "default_store", "envelope", "index_digest", "stable_digest",
+    "PERSISTABLE_ENGINES", "plan_persistable",
+]

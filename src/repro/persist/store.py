@@ -1,0 +1,506 @@
+"""The on-disk artifact store: compiled state that survives restarts.
+
+Flare's premise is pay-compile-once, run-native-forever -- but the
+in-memory :class:`repro.core.stages.CompileCache` and
+:class:`repro.core.engines.IndexCache` die with the process, so every
+cold start re-pays the full trace + XLA-compile + index-build bill.
+This module is the second tier under both caches (DESIGN.md section
+12): a content-addressed directory of versioned artifact files, written
+atomically, with per-tier hit/miss/evict/corrupt telemetry.
+
+Store layout (under ``ArtifactStore(root)``)::
+
+    <root>/v1/exec/<digest>.flare    # serialized query executables
+    <root>/v1/index/<digest>.flare   # build-side join indexes
+
+Every artifact file is self-describing::
+
+    magic "FLRA1\\n" | u32 header_len | header JSON | payload sections
+
+The header carries the *version envelope* (artifact-format version,
+jax/jaxlib versions, backend platform + platform version, device count,
+x64 mode), per-section lengths, and a sha256 over the payload.  A
+mismatched envelope is a ``version_miss`` (stale artifacts invalidate
+instead of mis-executing); a short file, bad magic, undecodable header
+or checksum failure is ``corrupt`` -- both fall back to a plain cache
+miss, never an error surfaced to the query.
+
+Digests are *content* addresses: the exec digest covers the template
+key (plan fingerprint, engine, table metadata incl. dictionary
+contents); the index digest covers the raw key-column bytes, so changed
+data can never be served a stale index.  Cache keys must therefore be
+process-independent -- see :func:`stable_digest` (no builtin ``hash``,
+which is salted per process).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import weakref
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: Bump on any incompatible change to the container or section layout.
+FORMAT_VERSION = 1
+
+#: Environment variable naming the default store directory.  When set,
+#: every :class:`repro.core.dataframe.FlareContext` (and the
+#: process-wide default caches) persists through it automatically.
+CACHE_DIR_ENV = "FLARE_CACHE_DIR"
+
+_MAGIC = b"FLRA1\n"
+
+#: Artifact kinds = store tiers.  ``exec`` holds serialized compiled
+#: query executables, ``index`` holds build-side join indexes.
+KINDS = ("exec", "index")
+
+
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def stable_digest(*parts: Any) -> str:
+    """Process-independent content digest of ``parts``.
+
+    ``repr`` over tuples of str/int/bool/float is deterministic across
+    processes (unlike builtin ``hash``, which is salted); anything
+    already-bytes hashes raw.  This is what makes one process's cache
+    key find another process's artifact.
+    """
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, bytes):
+            h.update(b"\x00b")
+            h.update(p)
+        else:
+            h.update(b"\x00r")
+            h.update(repr(p).encode())
+    return h.hexdigest()
+
+
+def envelope() -> Dict[str, Any]:
+    """The current process's artifact compatibility envelope.
+
+    Serialized executables are native code for one toolchain + device
+    topology; any drift here means the artifact must be rebuilt, not
+    trusted.  Index artifacts only check ``format`` (numpy arrays are
+    portable) -- see :meth:`ArtifactStore.load`.
+    """
+    import jax
+    import jaxlib
+    from jax.extend.backend import get_backend
+
+    backend = get_backend()
+    return {
+        "format": FORMAT_VERSION,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "platform": backend.platform,
+        "platform_version": backend.platform_version,
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.jax_enable_x64),
+    }
+
+
+#: Envelope keys an index artifact must match (numpy payloads are
+#: toolchain-independent; only the container format gates them).
+_INDEX_ENVELOPE_KEYS = ("format",)
+
+
+class StoreCorrupt(Exception):
+    """Internal: artifact file failed structural validation."""
+
+
+class StoreVersionMiss(Exception):
+    """Internal: artifact envelope does not match this process."""
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Telemetry for one store tier (``exec`` or ``index``).
+
+    ``hits``/``misses`` mirror the in-memory caches' counters one level
+    down; ``version_miss`` and ``corrupt`` are the two invalidation
+    paths (both also count as misses to the caller); ``unsupported``
+    counts compile artifacts that cannot be persisted (non-exportable
+    engine, process-local UDFs); ``errors`` counts unexpected
+    serialization failures that were swallowed into a recompile.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    writes: int = 0
+    corrupt: int = 0
+    version_miss: int = 0
+    unsupported: int = 0
+    errors: int = 0
+    evicted: int = 0
+    bytes_written: int = 0
+    bytes_read: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "writes": self.writes, "corrupt": self.corrupt,
+            "version_miss": self.version_miss,
+            "unsupported": self.unsupported, "errors": self.errors,
+            "evicted": self.evicted,
+            "bytes_written": self.bytes_written,
+            "bytes_read": self.bytes_read,
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+
+#: Every live store, for the process-wide telemetry aggregate
+#: (``engines.cache_stats()`` folds their :class:`TierStats` into the
+#: per-kind snapshots as a nested ``disk`` breakdown).
+_LIVE_STORES: "weakref.WeakSet[ArtifactStore]" = weakref.WeakSet()
+
+
+def live_store_stats() -> Dict[str, Dict[str, Any]]:
+    """Summed :class:`TierStats` across every live store, per tier,
+    plus the live-store count under each tier's ``stores`` key.  Zeros
+    when no store is live -- the schema is stable either way."""
+    totals = {k: TierStats() for k in KINDS}
+    n = 0
+    for store in list(_LIVE_STORES):
+        n += 1
+        for k in KINDS:
+            src = store.stats[k]
+            dst = totals[k]
+            for f in dataclasses.fields(TierStats):
+                setattr(dst, f.name,
+                        getattr(dst, f.name) + getattr(src, f.name))
+    out = {k: totals[k].to_dict() for k in KINDS}
+    for d in out.values():
+        d["stores"] = n
+    return out
+
+
+class ArtifactStore:
+    """A disk-backed artifact cache shared by every process pointing at
+    the same directory.
+
+    ``save``/``load`` address artifacts by (kind, digest).  Writes are
+    atomic (temp file + ``os.replace`` in the same directory), so a
+    concurrent reader sees either the complete old file, the complete
+    new file, or nothing -- never a torn artifact.  ``limit_bytes``
+    turns on LRU eviction (by mtime) after each write.
+
+    The store raises nothing on the read path: any malformed or
+    incompatible artifact degrades to a miss and is counted in
+    :class:`TierStats`.
+    """
+
+    def __init__(self, root: os.PathLike, limit_bytes: Optional[int] = None):
+        self.root = os.path.abspath(os.fspath(root))
+        self.limit_bytes = limit_bytes
+        self._dirs = {k: os.path.join(self.root, f"v{FORMAT_VERSION}", k)
+                      for k in KINDS}
+        for d in self._dirs.values():
+            os.makedirs(d, exist_ok=True)
+        self.stats: Dict[str, TierStats] = {k: TierStats() for k in KINDS}
+        self._envelope = None  # resolved lazily: jax init is not free
+        _LIVE_STORES.add(self)
+
+    # -- paths ---------------------------------------------------------------
+
+    def path_for(self, kind: str, digest: str) -> str:
+        if kind not in self._dirs:
+            raise ValueError(f"unknown artifact kind {kind!r}; "
+                             f"one of {KINDS}")
+        return os.path.join(self._dirs[kind], f"{digest}.flare")
+
+    def tier(self, kind: str) -> TierStats:
+        return self.stats[kind]
+
+    def current_envelope(self) -> Dict[str, Any]:
+        if self._envelope is None:
+            self._envelope = envelope()
+        return self._envelope
+
+    # -- write path ----------------------------------------------------------
+
+    def save(self, kind: str, digest: str, meta: Dict[str, Any],
+             sections: Sequence[bytes]) -> Optional[str]:
+        """Write one artifact (atomic, write-through).  ``meta`` must be
+        JSON-serializable; ``sections`` are opaque byte payloads
+        recovered in order by :meth:`load`.  Returns the path, or None
+        if the write failed (counted, never raised)."""
+        path = self.path_for(kind, digest)
+        payload = b"".join(sections)
+        header = {
+            "kind": kind,
+            "digest": digest,
+            "envelope": self.current_envelope(),
+            "meta": meta,
+            "sections": [len(s) for s in sections],
+            "sha256": _sha256(payload),
+        }
+        hdr = json.dumps(header, sort_keys=True).encode()
+        blob = (_MAGIC + len(hdr).to_bytes(4, "little") + hdr + payload)
+        try:
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       prefix=".tmp-", suffix=".flare")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)  # atomic: no reader sees a torn file
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except OSError:
+            self.stats[kind].errors += 1
+            return None
+        self.stats[kind].writes += 1
+        self.stats[kind].bytes_written += len(blob)
+        if self.limit_bytes is not None:
+            self.evict(self.limit_bytes)
+        return path
+
+    # -- read path -----------------------------------------------------------
+
+    def _parse(self, blob: bytes, kind: str
+               ) -> Tuple[Dict[str, Any], List[bytes]]:
+        if not blob.startswith(_MAGIC):
+            raise StoreCorrupt("bad magic")
+        off = len(_MAGIC)
+        if len(blob) < off + 4:
+            raise StoreCorrupt("truncated header length")
+        hlen = int.from_bytes(blob[off:off + 4], "little")
+        off += 4
+        if len(blob) < off + hlen:
+            raise StoreCorrupt("truncated header")
+        try:
+            header = json.loads(blob[off:off + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise StoreCorrupt(f"undecodable header: {e}") from None
+        off += hlen
+        if not isinstance(header, dict) or header.get("kind") != kind:
+            raise StoreCorrupt("header kind mismatch")
+        lens = header.get("sections")
+        if (not isinstance(lens, list)
+                or any(not isinstance(n, int) or n < 0 for n in lens)):
+            raise StoreCorrupt("bad section table")
+        payload = blob[off:]
+        if len(payload) != sum(lens):
+            raise StoreCorrupt("truncated payload")
+        if _sha256(payload) != header.get("sha256"):
+            raise StoreCorrupt("payload checksum mismatch")
+        sections = []
+        for n in lens:
+            sections.append(payload[:n])
+            payload = payload[n:]
+        return header, sections
+
+    def _check_envelope(self, header: Dict[str, Any], kind: str,
+                        envelope_keys: Optional[Tuple[str, ...]] = None
+                        ) -> None:
+        env = header.get("envelope")
+        if not isinstance(env, dict):
+            raise StoreCorrupt("missing envelope")
+        want = self.current_envelope()
+        if envelope_keys is None:
+            envelope_keys = (_INDEX_ENVELOPE_KEYS if kind == "index"
+                             else tuple(want))
+        for k in envelope_keys:
+            if env.get(k) != want[k]:
+                raise StoreVersionMiss(
+                    f"envelope field {k!r}: artifact {env.get(k)!r} "
+                    f"!= process {want[k]!r}")
+
+    def load(self, kind: str, digest: str,
+             envelope_keys: Optional[Tuple[str, ...]] = None
+             ) -> Optional[Tuple[Dict[str, Any], List[bytes]]]:
+        """Read an artifact; returns ``(header, sections)`` or None.
+
+        Every failure mode degrades to None: absent file (``misses``),
+        structural damage (``corrupt`` -- the bad file is removed so it
+        is rebuilt, not re-tripped-over), incompatible envelope
+        (``version_miss``).  A hit touches the file's mtime for LRU
+        eviction.
+
+        ``envelope_keys`` narrows the envelope fields checked here: the
+        exec loader passes ``("format",)`` so it can inspect both
+        payload tiers itself (native needs a full match, the
+        ``jax.export`` tier only the target platform) and calls
+        :meth:`demote_hit` if neither tier is usable.
+        """
+        st = self.stats[kind]
+        path = self.path_for(kind, digest)
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            st.misses += 1
+            return None
+        try:
+            header, sections = self._parse(blob, kind)
+            self._check_envelope(header, kind, envelope_keys)
+        except StoreCorrupt:
+            st.corrupt += 1
+            st.misses += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        except StoreVersionMiss:
+            st.version_miss += 1
+            st.misses += 1
+            return None
+        st.hits += 1
+        st.bytes_read += len(blob)
+        try:
+            os.utime(path)  # LRU recency
+        except OSError:
+            pass
+        return header, sections
+
+    def demote_hit(self, kind: str, reason: str) -> None:
+        """Retroactively turn the last :meth:`load` hit into a miss.
+
+        The exec loader validates the two payload tiers *after* the
+        container-level load succeeded; when neither tier is usable in
+        this process the artifact was not actually served, and the
+        telemetry must say so.  ``reason`` is ``"version_miss"`` or
+        ``"corrupt"``.
+        """
+        st = self.stats[kind]
+        st.hits = max(0, st.hits - 1)
+        st.misses += 1
+        if reason == "corrupt":
+            st.corrupt += 1
+        else:
+            st.version_miss += 1
+
+    # -- maintenance ---------------------------------------------------------
+
+    def entries(self, kind: Optional[str] = None) -> int:
+        kinds = (kind,) if kind else KINDS
+        return sum(len([f for f in os.listdir(self._dirs[k])
+                        if f.endswith(".flare")]) for k in kinds)
+
+    def nbytes(self) -> int:
+        total = 0
+        for d in self._dirs.values():
+            for f in os.listdir(d):
+                if f.endswith(".flare"):
+                    try:
+                        total += os.path.getsize(os.path.join(d, f))
+                    except OSError:
+                        pass
+        return total
+
+    def evict(self, limit_bytes: int) -> int:
+        """Remove least-recently-used artifacts until the store fits in
+        ``limit_bytes``.  Returns the number evicted."""
+        files = []
+        for k, d in self._dirs.items():
+            for f in os.listdir(d):
+                if not f.endswith(".flare"):
+                    continue
+                p = os.path.join(d, f)
+                try:
+                    stt = os.stat(p)
+                except OSError:
+                    continue
+                files.append((stt.st_mtime, stt.st_size, k, p))
+        total = sum(sz for _, sz, _, _ in files)
+        evicted = 0
+        for _, sz, k, p in sorted(files):
+            if total <= limit_bytes:
+                break
+            try:
+                os.unlink(p)
+            except OSError:
+                continue
+            total -= sz
+            evicted += 1
+            self.stats[k].evicted += 1
+        return evicted
+
+    def clear(self) -> None:
+        for d in self._dirs.values():
+            for f in os.listdir(d):
+                if f.endswith(".flare"):
+                    try:
+                        os.unlink(os.path.join(d, f))
+                    except OSError:
+                        pass
+
+    def stats_dict(self) -> Dict[str, Any]:
+        """Stable telemetry snapshot (DESIGN.md section 12): one
+        :class:`TierStats` dict per tier plus store-level size info."""
+        out: Dict[str, Any] = {k: self.stats[k].to_dict() for k in KINDS}
+        out["root"] = self.root
+        out["entries"] = {k: self.entries(k) for k in KINDS}
+        out["nbytes"] = self.nbytes()
+        return out
+
+    def __repr__(self):
+        tiers = ", ".join(
+            f"{k}: {s.hits}h/{s.misses}m/{s.writes}w"
+            for k, s in self.stats.items())
+        return f"ArtifactStore({self.root!r}; {tiers})"
+
+
+#: One store object per (root, limit) this process has resolved from
+#: the environment, so telemetry accumulates instead of scattering
+#: across throwaway handles.
+_DEFAULT_STORES: Dict[Tuple, ArtifactStore] = {}
+
+
+def default_store() -> Optional[ArtifactStore]:
+    """The store named by ``$FLARE_CACHE_DIR``, or None.
+
+    ``$FLARE_CACHE_LIMIT_MB`` (optional) caps the directory size with
+    LRU eviction.  Re-resolved per call (tests and subprocesses flip
+    the environment around single contexts) but memoized per
+    configuration, so repeat calls share one stats-accumulating handle.
+    """
+    root = os.environ.get(CACHE_DIR_ENV)
+    if not root:
+        return None
+    limit = os.environ.get("FLARE_CACHE_LIMIT_MB")
+    limit_bytes = int(float(limit) * 2 ** 20) if limit else None
+    key = (os.path.abspath(root), limit_bytes)
+    store = _DEFAULT_STORES.get(key)
+    if store is None:
+        store = _DEFAULT_STORES[key] = ArtifactStore(
+            root, limit_bytes=limit_bytes)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# content digests for the two tiers
+# ---------------------------------------------------------------------------
+
+
+def index_digest(tbl: Any, key_cols: Tuple[str, ...],
+                 doms: Tuple[int, ...]) -> str:
+    """Content address of a build-side join index: the raw bytes of the
+    key columns plus the combine domains.  Data-derived, so a reloaded
+    table with different contents can never hit a stale index -- there
+    is no separate invalidation rule to get wrong."""
+    parts: List[Any] = ["index", FORMAT_VERSION, tuple(key_cols),
+                        tuple(doms), tbl.num_rows]
+    h = hashlib.sha256()
+    h.update(repr(parts).encode())
+    for c in key_cols:
+        arr = np.ascontiguousarray(tbl[c])
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()

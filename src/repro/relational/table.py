@@ -14,6 +14,8 @@ hand-written C for Q6 (``l_shipdate >= 19940101L``).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,6 +52,25 @@ def numpy_dtype(dtype: str) -> np.dtype:
 
 def is_numeric(dtype: str) -> bool:
     return dtype in NUMERIC_DTYPES
+
+
+@functools.lru_cache(maxsize=4096)
+def dict_token(dictionary: Optional[Tuple[str, ...]]) -> str:
+    """Process-independent digest of a string dictionary.
+
+    Dictionary CONTENTS are baked into compiled programs (predicate
+    LUTs, comparison codes), so template cache keys must cover them --
+    and since those keys now also address the on-disk artifact store
+    (``repro.persist``), builtin ``hash`` (salted per process) cannot be
+    the covering token.  Empty/absent dictionaries share "".
+    """
+    if not dictionary:
+        return ""
+    h = hashlib.sha256()
+    for s in dictionary:
+        h.update(s.encode())
+        h.update(b"\x00")
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,6 +34,13 @@ class ServeStats:
     live work rather than ragged padding.  Latencies are recorded per
     request at first result materialisation (submit -> host value), so
     the deferred-sync path is measured from the requester's seat.
+
+    ``preloaded``/``disk_hits``/``preload_s`` describe startup against
+    the persistent artifact store (DESIGN.md section 12): how many
+    templates :meth:`repro.serve.QueryServer.preload` readied, how many
+    executables came off disk instead of being compiled, and what the
+    warm start cost -- the numbers that attribute first-request latency
+    to deserialization rather than XLA.
     """
 
     submitted: int = 0
@@ -44,6 +51,9 @@ class ServeStats:
     compile_s: float = 0.0
     run_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    preloaded: int = 0
+    disk_hits: int = 0
+    preload_s: float = 0.0
 
     def record_batch(self, size: int, bucket: int,
                      compile_s: float, run_s: float) -> None:
@@ -92,6 +102,9 @@ class ServeStats:
             "run_s": round(self.run_s, 6),
             "p50_ms": round(self.p50_s() * 1e3, 3),
             "p99_ms": round(self.p99_s() * 1e3, 3),
+            "preloaded": self.preloaded,
+            "disk_hits": self.disk_hits,
+            "preload_s": round(self.preload_s, 6),
         }
 
     def __repr__(self):

@@ -1,0 +1,122 @@
+"""CI gate for the persistent artifact store: run twice, compile once.
+
+Runs the prepared-template workload (every entry in
+``relational/queries.py:TEMPLATES``) in two fresh subprocesses sharing
+one ``FLARE_CACHE_DIR``, then asserts the restart contract of DESIGN.md
+section 12:
+
+* run 1 (cold store) compiles and writes through -- ``writes > 0``;
+* run 2 (fresh process, warm store) serves every executable and join
+  index from disk -- zero store misses, ZERO write-throughs (a write in
+  run 2 means something recompiled), every template ``disk_hit``, and
+  identical query results.
+
+Usage::
+
+    FLARE_CACHE_DIR=/tmp/flare-ci PYTHONPATH=src python tools/persist_ci_check.py
+
+``FLARE_CACHE_DIR`` defaults to a throwaway temp dir; ``$CI_PERSIST_SF``
+overrides the TPC-H scale factor (default 0.01).  Writes a JSON summary
+to ``$PERSIST_CI_JSON`` (default ``persist_ci_check.json``) and exits
+non-zero on any violation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SF = float(os.environ.get("CI_PERSIST_SF", "0.01"))
+JSON_PATH = os.environ.get("PERSIST_CI_JSON", "persist_ci_check.json")
+
+_CHILD = """
+import json, sys, time
+from repro.core import CompileCache, FlareContext
+from repro.persist import store as PS
+from repro.relational import queries as Q
+
+t0 = time.perf_counter()
+ctx = FlareContext()
+Q.register_tpch(ctx, sf=%(sf)r)
+out = {"results": {}, "disk_hit": {}}
+for name in sorted(Q.TEMPLATES):
+    compiled = Q.TEMPLATES[name](ctx).lower(engine="compiled").compile(
+        cache=CompileCache())
+    binding = dict(Q.TEMPLATE_BINDINGS[name][0])
+    res = compiled.collect(**binding)
+    out["results"][name] = {k: [float(x) for x in v]
+                            for k, v in res.items()}
+    out["disk_hit"][name] = compiled.stats.disk_hit
+out["store"] = PS.live_store_stats()
+out["wall_s"] = round(time.perf_counter() - t0, 3)
+json.dump(out, sys.stdout)
+"""
+
+
+def run_once(cache_dir: str) -> dict:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, FLARE_CACHE_DIR=cache_dir,
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _CHILD % {"sf": SF}],
+                          capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        print(proc.stderr, file=sys.stderr)
+        raise SystemExit("persist_ci_check: workload subprocess failed")
+    return json.loads(proc.stdout)
+
+
+def main() -> int:
+    cache_dir = os.environ.get("FLARE_CACHE_DIR")
+    tmp = None
+    if not cache_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="flare-ci-store-")
+        cache_dir = tmp.name
+    print(f"persist_ci_check: sf={SF} store={cache_dir}")
+    cold = run_once(cache_dir)
+    warm = run_once(cache_dir)
+
+    failures = []
+    ce, we = cold["store"]["exec"], warm["store"]["exec"]
+    if ce["writes"] == 0:
+        failures.append(f"cold run wrote no artifacts: {ce}")
+    if we["writes"] != 0:
+        failures.append(f"warm run RECOMPILED ({we['writes']} writes): {we}")
+    if we["misses"] != 0 or we["hits"] < len(warm["disk_hit"]):
+        failures.append(f"warm run missed the store: {we}")
+    not_hit = sorted(n for n, h in warm["disk_hit"].items() if not h)
+    if not_hit:
+        failures.append(f"templates not served from disk: {not_hit}")
+    if warm["store"]["index"]["writes"] != 0:
+        failures.append(
+            f"warm run rebuilt join indexes: {warm['store']['index']}")
+    for name, want in cold["results"].items():
+        if warm["results"].get(name) != want:
+            failures.append(f"result drift on {name}")
+
+    summary = {
+        "sf": SF,
+        "templates": sorted(cold["results"]),
+        "cold": {"store": cold["store"], "wall_s": cold["wall_s"]},
+        "warm": {"store": warm["store"], "wall_s": warm["wall_s"],
+                 "disk_hit": warm["disk_hit"]},
+        "ok": not failures,
+        "failures": failures,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"cold: {ce['writes']} writes in {cold['wall_s']}s; "
+          f"warm: {we['hits']} disk hits, {we['writes']} writes "
+          f"in {warm['wall_s']}s")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if tmp is not None:
+        tmp.cleanup()
+    print(f"wrote {JSON_PATH}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
