@@ -30,7 +30,6 @@ import tempfile
 import time
 
 SF = float(os.environ.get("BENCH_SF", "0.01"))
-JSON_PATH = os.environ.get("BENCH_COLDSTART_JSON", "bench_coldstart.json")
 TEMPLATE_NAMES = tuple(
     os.environ.get("BENCH_COLDSTART_TEMPLATES", "q6,q19").split(","))
 
@@ -94,7 +93,7 @@ def _pythonpath() -> str:
 
 
 def run() -> dict:
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_report
 
     report = {"sf": SF, "templates": {}}
     with tempfile.TemporaryDirectory(prefix="flare-coldstart-") as cache:
@@ -117,9 +116,8 @@ def run() -> dict:
             }
             report["templates"][name] = row
             emit(f"coldstart_{name}", w["first_us"], **row)
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"wrote {JSON_PATH}")
+    write_report(report, "BENCH_COLDSTART_JSON",
+                 default="bench_coldstart.json")
     return report
 
 

@@ -22,11 +22,10 @@ bench_tpch.json / bench_ml.json.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_report
 from repro.core import FlareContext
 from repro.relational import queries as Q
 
@@ -97,11 +96,7 @@ def run() -> None:
         if rep else [],
     })
 
-    out = os.environ.get("BENCH_JOIN_JSON")
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {out}")
+    write_report(report, "BENCH_JOIN_JSON")  # opt-in artifact
 
 
 if __name__ == "__main__":

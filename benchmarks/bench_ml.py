@@ -16,18 +16,16 @@ Emits the usual CSV rows and (for CI artifacts) a JSON report at
 """
 from __future__ import annotations
 
-import json
 import os
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_report
 from repro.core import FlareContext, col
 from repro.relational.table import Table
 
 N_DOCS = int(os.environ.get("BENCH_ML_ROWS", "20000"))
-JSON_PATH = os.environ.get("BENCH_ML_JSON", "bench_ml.json")
 
 
 def _features_table(n: int, d: int = 8, seed: int = 0) -> Table:
@@ -87,9 +85,7 @@ def run() -> None:
     report["pipelines"]["gda"] = _bench_pipeline(
         "gda", gda, lambda r: r.sigma)
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"wrote {JSON_PATH}")
+    write_report(report, "BENCH_ML_JSON", default="bench_ml.json")
 
 
 if __name__ == "__main__":

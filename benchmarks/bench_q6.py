@@ -23,14 +23,13 @@ Claims validated (EXPERIMENTS.md section Paper-validation):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import tempfile
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_report
 from repro.core import CompileCache, FlareContext
 from repro.data import io as IO
 from repro.kernels.filter_agg import ops as FA
@@ -38,7 +37,6 @@ from repro.relational import queries as Q
 from repro.relational.tpch import date
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
-JSON_PATH = os.environ.get("BENCH_Q6_JSON", "bench_q6.json")
 
 
 def run(native: bool = False) -> None:
@@ -166,9 +164,7 @@ def run(native: bool = False) -> None:
          overhead_frac=round((us_stage - us_comp) / us_stage, 3))
 
     if native:  # JSON report only with --native (mirrors bench_tpch)
-        with open(JSON_PATH, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {JSON_PATH}")
+        write_report(report, "BENCH_Q6_JSON", default="bench_q6.json")
 
 
 def main(argv=None) -> None:

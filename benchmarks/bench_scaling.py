@@ -28,7 +28,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_report
 
 _CHILD = r"""
 import os, sys, json, time
@@ -61,7 +61,6 @@ print(json.dumps(out))
 """
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
-JSON_PATH = os.environ.get("BENCH_SCALING_JSON", "bench_scaling.json")
 
 
 def run() -> None:
@@ -89,9 +88,8 @@ def run() -> None:
                  compile_s=r[q]["compile_s"])
             report["shards"].setdefault(str(ndev), {})[q] = {
                 **r[q], "speedup_vs_1dev": speedup}
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"wrote {JSON_PATH}")
+    write_report(report, "BENCH_SCALING_JSON",
+                 default="bench_scaling.json")
 
 
 if __name__ == "__main__":

@@ -18,11 +18,10 @@ that the whole run compiled exactly one batched executable per
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_report
 from repro.core import FlareContext
 from repro.core import engines as ENG
 from repro.relational import queries as Q
@@ -129,11 +128,7 @@ def run() -> None:
     emit("serve_compile_proof", 0.0,
          batch_executables=len(batch_keys), expected=expected)
 
-    out = os.environ.get("BENCH_SERVE_JSON")
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {out}")
+    write_report(report, "BENCH_SERVE_JSON")  # opt-in artifact
 
 
 if __name__ == "__main__":

@@ -21,15 +21,13 @@ device_count=N`` for a simulated N-shard run.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_report
 from repro.core import CompileCache, FlareContext
 from repro.relational import queries as Q
 
 SF = float(os.environ.get("BENCH_SF", "0.05"))
-JSON_PATH = os.environ.get("BENCH_TPCH_JSON", "bench_tpch.json")
 
 
 def run(native: bool = False, parallel: bool = False) -> None:
@@ -115,9 +113,7 @@ def run(native: bool = False, parallel: bool = False) -> None:
     if native or parallel:
         from repro.persist import store as PS
         report["store"] = PS.live_store_stats()
-        with open(JSON_PATH, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {JSON_PATH}")
+        write_report(report, "BENCH_TPCH_JSON", default="bench_tpch.json")
 
 
 def main(argv=None) -> None:

@@ -31,6 +31,7 @@ from repro.core import ml as ML
 from repro.core import optimizer as OPT
 from repro.core import plan as P
 from repro.core import stages as S
+from repro.obs import trace as OT
 from repro.relational import table as T
 
 
@@ -76,8 +77,9 @@ class FlareContext:
     def optimized(self, plan: P.Plan) -> P.Plan:
         if not self.optimize:
             return plan
-        return OPT.optimize(plan, self.catalog,
-                            join_reorder=self.join_reorder)
+        with OT.span("optimize", join_reorder=self.join_reorder):
+            return OPT.optimize(plan, self.catalog,
+                                join_reorder=self.join_reorder)
 
     def execute(self, plan: P.Plan, engine: str,
                 stats: Optional[ENG.CompileStats] = None,
@@ -292,7 +294,23 @@ class DataFrame:
         return self.ctx.execute(self.plan, engine,
                                 params=params).num_rows()
 
-    def explain(self, optimized: bool = True) -> str:
+    def explain(self, optimized: bool = True, analyze: bool = False,
+                engine: str = "compiled", native: bool = False,
+                params: Optional[Dict[str, Any]] = None,
+                join_index: bool = True) -> str:
+        """The optimized plan tree -- or, with ``analyze=True``, EXPLAIN
+        ANALYZE: the query executes once for ``engine`` under the
+        tracer (:mod:`repro.obs`) and the report annotates the plan
+        with rows/columns/bytes per scan, per-phase wall times
+        (optimize/dispatch/lower/compile/persist/execute), compile and
+        disk-tier provenance, and -- with ``native=True`` -- which
+        Pallas kernel patterns fired or fell back and why.  Prepared
+        templates need their bindings via ``params=``."""
+        if analyze:
+            from repro.obs import analyze as OA
+            return OA.explain_analyze(self, engine=engine, native=native,
+                                      params=params,
+                                      join_index=join_index)
         plan = self.ctx.optimized(self.plan) if optimized else self.plan
         txt = "== Physical Plan ==\n" + plan.explain()
         return txt

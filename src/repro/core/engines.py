@@ -31,7 +31,6 @@ section 4.
 from __future__ import annotations
 
 import dataclasses
-import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -42,6 +41,8 @@ import jax.numpy as jnp
 from repro.core import expr as E
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.persist import store as PS
 from repro.relational import table as T
 
@@ -56,60 +57,32 @@ _BREAKERS = (P.Join, P.Aggregate, P.Sort, P.Limit, P.MapBatches)
 # process-wide cache telemetry (one aggregate view over every live cache)
 # ---------------------------------------------------------------------------
 
-#: Every live cache object (CompileCache, IndexCache, DeviceCache --
-#: including the per-FlareContext instances), registered at construction.
-#: Weak references: a context going out of scope takes its caches out of
-#: the aggregate view.
-_LIVE_CACHES: "weakref.WeakSet[Any]" = weakref.WeakSet()
-
 
 def register_cache(cache: Any) -> Any:
     """Track ``cache`` in the process-wide telemetry registry.  The
     cache's class must define a ``kind`` attribute ("compile", "index",
-    "device", ...) and ``__len__``; hit/miss counters are optional."""
-    _LIVE_CACHES.add(cache)
-    return cache
+    "device", ...) and ``__len__``; hit/miss counters are optional.
+    Shim over :data:`repro.obs.metrics.REGISTRY` ("cache" domain)."""
+    return OM.REGISTRY.register("cache", cache)
 
 
 def cache_stats() -> Dict[str, Dict[str, Any]]:
     """One aggregate snapshot over every live cache in the process.
 
-    Hit-rate telemetry used to be per-cache-object only (each
-    FlareContext owns its own CompileCache/DeviceCache/IndexCache), so a
-    server or benchmark reporting "the" cache behaviour had to reach
-    into every context it ever touched.  This folds them: per cache
-    ``kind`` -- ``compile`` (query templates), ``index`` (build-side
-    join indexes), ``device`` (resident columns) -- the number of live
-    caches, total entries, and summed hits/misses with the combined hit
-    rate.  The query server (``repro.serve``) and the benchmarks report
-    from here.
-
-    Schema (stable, DESIGN.md section 12): per kind the keys are
-    ``caches``, ``entries``, ``hits``, ``misses``, ``hit_rate``;
-    ``compile`` and ``index`` additionally carry a nested ``disk`` dict
-    -- the summed per-tier :class:`repro.persist.TierStats` across every
-    live :class:`repro.persist.ArtifactStore` (zeros when none) -- so
-    callers can attribute a memory-tier miss that was actually served
-    from disk.
+    Shim over :func:`repro.obs.metrics.snapshot` -- this is exactly its
+    ``"caches"`` section, kept as the historical accessor.  Schema
+    (stable, DESIGN.md section 12): per cache ``kind`` -- ``compile``
+    (query templates), ``index`` (build-side join indexes), ``device``
+    (resident columns) -- the keys are ``caches``, ``entries``,
+    ``hits``, ``misses``, ``hit_rate``; ``compile`` and ``index``
+    additionally carry a nested ``disk`` dict (the summed per-tier
+    :class:`repro.persist.TierStats` across every live
+    :class:`repro.persist.ArtifactStore`, zeros when none) so callers
+    can attribute a memory-tier miss that was actually served from
+    disk.  The full process view (dispatch counters, serve latencies,
+    tracer state) is ``repro.obs.snapshot()``.
     """
-    out: Dict[str, Dict[str, Any]] = {}
-    for cache in list(_LIVE_CACHES):
-        kind = getattr(type(cache), "kind", "other")
-        agg = out.setdefault(kind, {"caches": 0, "entries": 0,
-                                    "hits": 0, "misses": 0})
-        agg["caches"] += 1
-        agg["entries"] += len(cache)
-        agg["hits"] += getattr(cache, "hits", 0)
-        agg["misses"] += getattr(cache, "misses", 0)
-    for agg in out.values():
-        total = agg["hits"] + agg["misses"]
-        agg["hit_rate"] = round(agg["hits"] / total, 4) if total else 0.0
-    disk = PS.live_store_stats()
-    if "compile" in out:
-        out["compile"]["disk"] = disk["exec"]
-    if "index" in out:
-        out["index"]["disk"] = disk["index"]
-    return out
+    return OM.cache_section()
 
 
 # ---------------------------------------------------------------------------
@@ -209,21 +182,32 @@ class IndexCache:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
-            store = self._store()
-            digest = (PS.index_digest(tbl, tuple(key_cols), tuple(doms))
-                      if store is not None else None)
-            if store is not None:
-                entry = self._load_persisted(store, digest, tbl,
-                                             tuple(key_cols))
-                if entry is not None:
-                    self.disk_hits += 1
-            if entry is None:
-                entry = self._build(tbl, tuple(key_cols), tuple(doms))
+            with OT.span("index_lookup", keys=",".join(key_cols),
+                         rows=tbl.num_rows) as sp:
+                store = self._store()
+                digest = (PS.index_digest(tbl, tuple(key_cols),
+                                          tuple(doms))
+                          if store is not None else None)
                 if store is not None:
-                    self._save_persisted(store, digest, entry)
-            self._entries[key] = entry
+                    entry = self._load_persisted(store, digest, tbl,
+                                                 tuple(key_cols))
+                    if entry is not None:
+                        self.disk_hits += 1
+                        sp.set(outcome="disk_hit")
+                if entry is None:
+                    with OT.span("index_build", keys=",".join(key_cols),
+                                 rows=tbl.num_rows):
+                        entry = self._build(tbl, tuple(key_cols),
+                                            tuple(doms))
+                    sp.set(outcome="built")
+                    if store is not None:
+                        self._save_persisted(store, digest, entry)
+                self._entries[key] = entry
         else:
             self.hits += 1
+            with OT.span("index_lookup", keys=",".join(key_cols),
+                         outcome="hit"):
+                pass
         return entry
 
     @staticmethod

@@ -46,6 +46,8 @@ from repro.core import engines as ENG
 from repro.core import expr as E
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.obs import export as OX
+from repro.obs import trace as OT
 from repro.persist import executable as PX
 from repro.persist import store as PSTORE
 from repro.relational import table as T
@@ -806,10 +808,11 @@ class Lowered:
 
     def _force(self) -> Any:
         if self._artifact is None:
-            t0 = time.perf_counter()
-            self._artifact = self._engine.lower(self._plan, self._catalog,
-                                                self._param_specs)
-            self._lower_s = time.perf_counter() - t0
+            with OT.span("lower", engine=self._engine.name):
+                t0 = time.perf_counter()
+                self._artifact = self._engine.lower(
+                    self._plan, self._catalog, self._param_specs)
+                self._lower_s = time.perf_counter() - t0
         return self._artifact
 
     def compile(self, cache: Optional[CompileCache] = None,
@@ -830,41 +833,53 @@ class Lowered:
         stats = CompileStats(engine=self._engine.name, cache_key=self._key,
                              dispatch=self._dispatch_report)
         store = _resolve_store(persist, self._device_cache)
-        exe = cache.lookup(self._key)
-        if exe is None:
-            can_persist = False
-            if store is not None:
-                can_persist, reason = _persistable(self._engine.name,
-                                                   self._plan)
-                if can_persist:
-                    t0 = time.perf_counter()
-                    exe, disposition = _load_persisted_exec(
-                        store, _exec_digest(self._key), self._plan,
-                        self._catalog, self._engine.name,
-                        self._param_specs)
-                    if exe is not None:
-                        stats.compile_s = time.perf_counter() - t0
-                        stats.disk_hit = True
-                        stats.persist = disposition
-                        cache.insert(self._key, exe)
-                else:
-                    store.tier("exec").unsupported += 1
-                    stats.persist = f"unsupported: {reason}"
+        with OT.span("compile", engine=self._engine.name) as csp:
+            exe = cache.lookup(self._key)
             if exe is None:
-                artifact = self._force()
-                t0 = time.perf_counter()
-                exe = self._engine.compile(artifact)
-                stats.compile_s = time.perf_counter() - t0
-                stats.lower_s = self._lower_s
-                cache.insert(self._key, exe)
-                if store is not None and can_persist:
-                    stats.persist = _save_persisted_exec(
-                        store, _exec_digest(self._key), exe,
-                        self._engine.name, self._param_specs,
-                        getattr(artifact, "schema", None))
-        else:
-            stats.cache_hit = True
-        stats.trace_compile_s = stats.lower_s + stats.compile_s
+                can_persist = False
+                if store is not None:
+                    can_persist, reason = _persistable(self._engine.name,
+                                                       self._plan)
+                    if can_persist:
+                        with OT.span("persist", op="load") as psp:
+                            t0 = time.perf_counter()
+                            exe, disposition = _load_persisted_exec(
+                                store, _exec_digest(self._key),
+                                self._plan, self._catalog,
+                                self._engine.name, self._param_specs)
+                            psp.set(outcome=disposition
+                                    if exe is not None else "miss")
+                        if exe is not None:
+                            stats.compile_s = time.perf_counter() - t0
+                            stats.disk_hit = True
+                            stats.persist = disposition
+                            cache.insert(self._key, exe)
+                    else:
+                        store.tier("exec").unsupported += 1
+                        stats.persist = f"unsupported: {reason}"
+                if exe is None:
+                    artifact = self._force()
+                    t0 = time.perf_counter()
+                    exe = self._engine.compile(artifact)
+                    stats.compile_s = time.perf_counter() - t0
+                    stats.lower_s = self._lower_s
+                    cache.insert(self._key, exe)
+                    if store is not None and can_persist:
+                        with OT.span("persist", op="save") as psp:
+                            stats.persist = _save_persisted_exec(
+                                store, _exec_digest(self._key), exe,
+                                self._engine.name, self._param_specs,
+                                getattr(artifact, "schema", None))
+                            psp.set(outcome=stats.persist)
+            else:
+                stats.cache_hit = True
+            stats.trace_compile_s = stats.lower_s + stats.compile_s
+            csp.set(cache="hit" if stats.cache_hit else "miss",
+                    disk="hit" if stats.disk_hit else "miss",
+                    compile_s=round(stats.compile_s, 6),
+                    lower_s=round(stats.lower_s, 6))
+            if stats.persist:
+                csp.set(persist=stats.persist)
         return Compiled(exe, self._plan, self._catalog, self._engine.name,
                         self._param_specs, self._key, self._device_cache,
                         stats, compile_cache=cache, store=store)
@@ -1029,9 +1044,18 @@ class Compiled:
         self.stats = stats
         self._compile_cache = compile_cache
         self._store = store
+        self._last_trace: Optional[OT.Trace] = None
 
     def params(self) -> Tuple[E.Param, ...]:
         return self._param_specs
+
+    def last_trace(self) -> Optional[OT.Trace]:
+        """The :class:`repro.obs.trace.Trace` of this template's most
+        recent execution -- the execute span plus everything recorded
+        inside it (batch compiles, store I/O, index lookups).  None
+        until an execution runs with tracing enabled (``FLARE_TRACE=1``
+        or ``repro.obs.capture()``)."""
+        return self._last_trace
 
     def _check_bindings(self, params: Dict[str, Any]) -> None:
         known = {s.name for s in self._param_specs}
@@ -1042,9 +1066,26 @@ class Compiled:
 
     def result(self, **params: Any) -> L.Result:
         self._check_bindings(params)
-        t0 = time.perf_counter()
-        out = self._exe(self._catalog, self._device_cache, params or None)
-        self.stats.run_s = time.perf_counter() - t0
+        if not OT.TRACER.on:  # hot path: zero tracing machinery
+            t0 = time.perf_counter()
+            out = self._exe(self._catalog, self._device_cache,
+                            params or None)
+            self.stats.run_s = time.perf_counter() - t0
+            return out
+        mark = OT.TRACER.watermark()
+        with OT.span("execute", engine=self.engine_name,
+                     mode="sync") as sp, \
+                OX.device_annotation(f"flare:execute:{self.engine_name}"):
+            t0 = time.perf_counter()
+            out = self._exe(self._catalog, self._device_cache,
+                            params or None)
+            self.stats.run_s = time.perf_counter() - t0
+        sp.set(run_s=round(self.stats.run_s, 6))
+        try:
+            sp.set(rows=out.num_rows())
+        except Exception:
+            pass
+        self._last_trace = OT.Trace(OT.TRACER.since(mark))
         return out
 
     def submit(self, **params: Any) -> AsyncResult:
@@ -1056,16 +1097,25 @@ class Compiled:
         the API is uniform across engines."""
         self._check_bindings(params)
         raw = getattr(self._exe, "raw", None)
-        t0 = time.perf_counter()
-        if raw is None:  # no deferred path: eager, trivially ready
-            out = self._exe(self._catalog, self._device_cache,
-                            params or None)
-            handle = AsyncResult(None, lambda _: out)
-            handle.result()
-        else:
-            out = raw(self._catalog, self._device_cache, params or None)
-            handle = AsyncResult(out, self._exe.finalize)
-        self.stats.run_s = time.perf_counter() - t0
+        tracing = OT.TRACER.on
+        mark = OT.TRACER.watermark() if tracing else 0
+        with OT.span("execute", engine=self.engine_name,
+                     mode="dispatch") as sp:
+            t0 = time.perf_counter()
+            if raw is None:  # no deferred path: eager, trivially ready
+                out = self._exe(self._catalog, self._device_cache,
+                                params or None)
+                handle = AsyncResult(None, lambda _: out)
+                handle.result()
+            else:
+                out = raw(self._catalog, self._device_cache,
+                          params or None)
+                handle = AsyncResult(out, self._exe.finalize)
+            self.stats.run_s = time.perf_counter() - t0
+        if tracing:
+            sp.set(run_s=round(self.stats.run_s, 6),
+                   deferred=raw is not None)
+            self._last_trace = OT.Trace(OT.TRACER.since(mark))
         return handle
 
     def __call__(self, block: bool = True, **params: Any):
@@ -1118,15 +1168,23 @@ class Compiled:
             handles = [handle] * len(bindings)
             return [h.result() for h in handles] if block else handles
         bucket = ENG.batch_bucket(len(bindings))
-        exe = self._batch_executor(bucket)
-        padded = bindings + [bindings[-1]] * (bucket - len(bindings))
-        stacked = {
-            s.name: np.asarray([ENG.require_param(b, s) for b in padded],
-                               T.numpy_dtype(s.dtype))
-            for s in self._param_specs}
-        t0 = time.perf_counter()
-        out = exe.raw(self._catalog, self._device_cache, stacked)
-        self.stats.run_s = time.perf_counter() - t0
+        tracing = OT.TRACER.on
+        mark = OT.TRACER.watermark() if tracing else 0
+        with OT.span("execute", engine=self.engine_name, mode="batch",
+                     bindings=len(bindings), bucket=bucket) as sp:
+            exe = self._batch_executor(bucket)
+            padded = bindings + [bindings[-1]] * (bucket - len(bindings))
+            stacked = {
+                s.name: np.asarray([ENG.require_param(b, s)
+                                    for b in padded],
+                                   T.numpy_dtype(s.dtype))
+                for s in self._param_specs}
+            t0 = time.perf_counter()
+            out = exe.raw(self._catalog, self._device_cache, stacked)
+            self.stats.run_s = time.perf_counter() - t0
+        if tracing:
+            sp.set(run_s=round(self.stats.run_s, 6))
+            self._last_trace = OT.Trace(OT.TRACER.since(mark))
         handles = [AsyncResult(out, lambda o, i=i: exe.finalize_one(o, i))
                    for i in range(len(bindings))]
         return [h.result() for h in handles] if block else handles
@@ -1136,35 +1194,47 @@ class Compiled:
         cache = self._compile_cache
         exe = cache.lookup(key) if cache is not None else None
         if exe is None:
-            store = self._store
-            can_persist = False
-            if store is not None:
-                can_persist, _ = _persistable(self.engine_name, self._plan)
-            if can_persist:
+            with OT.span("compile", engine=self.engine_name,
+                         kind="batch", bucket=bucket) as csp:
+                store = self._store
+                can_persist = False
+                if store is not None:
+                    can_persist, _ = _persistable(self.engine_name,
+                                                  self._plan)
+                if can_persist:
+                    with OT.span("persist", op="load",
+                                 bucket=bucket) as psp:
+                        t0 = time.perf_counter()
+                        exe, disposition = _load_persisted_exec(
+                            store, _exec_digest(self.cache_key, bucket),
+                            self._plan, self._catalog, self.engine_name,
+                            self._param_specs, bucket=bucket)
+                        psp.set(outcome=disposition
+                                if exe is not None else "miss")
+                    if exe is not None:
+                        self.stats.compile_s += time.perf_counter() - t0
+                        self.stats.disk_hit = True
+                        if not self.stats.persist.startswith("hit"):
+                            self.stats.persist = disposition
+                        if cache is not None:
+                            cache.insert(key, exe)
+                        csp.set(cache="miss", disk="hit")
+                        return exe
                 t0 = time.perf_counter()
-                exe, disposition = _load_persisted_exec(
-                    store, _exec_digest(self.cache_key, bucket),
-                    self._plan, self._catalog, self.engine_name,
-                    self._param_specs, bucket=bucket)
-                if exe is not None:
-                    self.stats.compile_s += time.perf_counter() - t0
-                    self.stats.disk_hit = True
-                    if not self.stats.persist.startswith("hit"):
-                        self.stats.persist = disposition
-                    if cache is not None:
-                        cache.insert(key, exe)
-                    return exe
-            t0 = time.perf_counter()
-            exe = compile_batch_executor(self._plan, self._catalog,
-                                         self._param_specs, bucket)
-            self.stats.compile_s += time.perf_counter() - t0
-            if cache is not None:
-                cache.insert(key, exe)
-            if can_persist:
-                _save_persisted_exec(
-                    store, _exec_digest(self.cache_key, bucket), exe,
-                    self.engine_name, self._param_specs,
-                    self._plan.schema(self._catalog), bucket=bucket)
+                exe = compile_batch_executor(self._plan, self._catalog,
+                                             self._param_specs, bucket)
+                self.stats.compile_s += time.perf_counter() - t0
+                csp.set(cache="miss", disk="miss",
+                        compile_s=round(time.perf_counter() - t0, 6))
+                if cache is not None:
+                    cache.insert(key, exe)
+                if can_persist:
+                    with OT.span("persist", op="save", bucket=bucket):
+                        _save_persisted_exec(
+                            store, _exec_digest(self.cache_key, bucket),
+                            exe, self.engine_name, self._param_specs,
+                            self._plan.schema(self._catalog),
+                            bucket=bucket)
         return exe
 
     def count(self, **params: Any) -> int:
@@ -1261,9 +1331,10 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
         # lazy import: registers the parallel engine; the shard planner
         # handles native annotation itself (partial aggregates first)
         from repro.core import parallel as PAR
-        p, dispatch_report = PAR.shard_plan(p, catalog, mesh=mesh,
-                                            axis=axis, native=native,
-                                            join_index=join_index)
+        with OT.span("shard_plan", axis=axis, native=native):
+            p, dispatch_report = PAR.shard_plan(p, catalog, mesh=mesh,
+                                                axis=axis, native=native,
+                                                join_index=join_index)
     else:
         if mesh is not None:
             raise ValueError(
@@ -1284,7 +1355,9 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
         if join_index:
             # resolved ONCE here; template_key and the report consume
             # it (build_callable re-resolves lazily at artifact time)
-            index_specs, index_decisions = L.join_index_plan(p, catalog)
+            with OT.span("index_plan"):
+                index_specs, index_decisions = L.join_index_plan(
+                    p, catalog)
         else:
             index_specs, index_decisions = {}, None
             if _joins_of(p):

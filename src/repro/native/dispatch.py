@@ -33,6 +33,9 @@ from repro.core import stages as S
 from repro.kernels import should_interpret
 from repro.native import patterns as PAT
 from repro.native import registry as R
+from repro.obs import export as OX
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 
 
 @dataclasses.dataclass(eq=False)
@@ -85,11 +88,15 @@ class NativeOp(P.Plan):
         rec(self.child, needed)
 
     def lower_stream(self, catalog, scans, params) -> L.Stream:
-        if self.custom_lower:
-            return self.emitter(catalog, scans, params, self.interpret)
-        boundary = PAT.boundary_of(self.child)
-        bstream = L.lower_node(boundary, catalog, scans, params)
-        return self.emitter(bstream, params, self.interpret)
+        # named scope at trace time: the Pallas kernel's ops carry the
+        # pattern name into the compiled program / device profiles
+        with OX.kernel_scope(f"flare:{self.pattern}"):
+            if self.custom_lower:
+                return self.emitter(catalog, scans, params,
+                                    self.interpret)
+            boundary = PAT.boundary_of(self.child)
+            bstream = L.lower_node(boundary, catalog, scans, params)
+            return self.emitter(bstream, params, self.interpret)
 
 
 def has_native_ops(p: P.Plan) -> bool:
@@ -115,39 +122,55 @@ def rewrite_plan(p: P.Plan, catalog: P.Catalog,
         interpret = should_interpret()  # same policy as the kernel ops
     mode = "interpret" if interpret else "pallas"
     report = R.DispatchReport()
+    OM.REGISTRY.inc("dispatch.rewrites")
 
     def rule(n: P.Plan) -> Optional[P.Plan]:
         if not isinstance(n, P.Aggregate):
             return None
-        reasons = []
-        # one fragment walk per node, shared by the sibling matchers
-        # (and, via Fragment.analysis, by eligibility + emitter)
-        shared = PAT.match_fragment(n, catalog)
-        for pat in R.patterns():
-            if pat.requires_index and not join_index:
-                continue
-            frag = pat.matcher(n, catalog, shared)
-            if frag is None:
-                continue
-            if interpret and not pat.supports_interpret:
-                reasons.append(f"{pat.name}: no interpret-mode support "
-                               "off-TPU")
-                continue
-            ok, reason = pat.eligibility(frag, catalog)
-            if not ok:
-                reasons.append(f"{pat.name}: {reason}")
-                continue
-            emitter = pat.emitter(frag, catalog)
-            report.add(R.Decision(pattern=pat.name, node=n.describe(),
-                                  fired=True, mode=mode, reason="ok"))
-            return NativeOp(n, pat.name, emitter, interpret,
-                            custom_lower=pat.custom_lower)
-        report.add(R.Decision(
-            pattern="", node=n.describe(), fired=False, mode="",
-            reason="; ".join(reasons) if reasons else "no pattern matched"))
+        with OT.span("dispatch.match", node=n.describe()) as sp:
+            reasons = []
+            # one fragment walk per node, shared by the sibling matchers
+            # (and, via Fragment.analysis, by eligibility + emitter)
+            shared = PAT.match_fragment(n, catalog)
+            for pat in R.patterns():
+                if pat.requires_index and not join_index:
+                    continue
+                frag = pat.matcher(n, catalog, shared)
+                if frag is None:
+                    continue
+                if interpret and not pat.supports_interpret:
+                    reasons.append(f"{pat.name}: no interpret-mode "
+                                   "support off-TPU")
+                    continue
+                ok, reason = pat.eligibility(frag, catalog)
+                if not ok:
+                    reasons.append(f"{pat.name}: {reason}")
+                    continue
+                emitter = pat.emitter(frag, catalog)
+                report.add(R.Decision(pattern=pat.name,
+                                      node=n.describe(),
+                                      fired=True, mode=mode,
+                                      reason="ok"))
+                OM.REGISTRY.inc("dispatch.fired")
+                OM.REGISTRY.inc(f"dispatch.fired.{pat.name}")
+                sp.set(fired=pat.name, mode=mode)
+                return NativeOp(n, pat.name, emitter, interpret,
+                                custom_lower=pat.custom_lower)
+            why = "; ".join(reasons) if reasons else "no pattern matched"
+            report.add(R.Decision(pattern="", node=n.describe(),
+                                  fired=False, mode="", reason=why))
+            OM.REGISTRY.inc("dispatch.fallback")
+            for r in reasons:
+                OM.REGISTRY.inc(
+                    "dispatch.fallback." + r.split(":", 1)[0])
+            sp.set(fired="", reason=why)
         return None
 
-    out = P.transform(p, rule)
+    with OT.span("dispatch", mode=mode) as dsp:
+        out = P.transform(p, rule)
+        dsp.set(fired=len(report.fired),
+                fallbacks=len(report.fallbacks),
+                patterns=",".join(report.fired_patterns()) or "none")
     # mark the root so NativeWholeQueryEngine.lower can tell "dispatch
     # ran, everything fell back" from "dispatch never ran" without
     # re-running the whole pass on all-fallback plans

@@ -44,6 +44,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as OT
+
 #: Bump on any incompatible change to the container or section layout.
 FORMAT_VERSION = 1
 
@@ -248,24 +250,30 @@ class ArtifactStore:
         }
         hdr = json.dumps(header, sort_keys=True).encode()
         blob = (_MAGIC + len(hdr).to_bytes(4, "little") + hdr + payload)
-        try:
-            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                       prefix=".tmp-", suffix=".flare")
+        with OT.span("store.save", tier=kind, digest=digest[:12],
+                     nbytes=len(blob)) as sp:
             try:
-                with os.fdopen(fd, "wb") as f:
-                    f.write(blob)
-                os.replace(tmp, path)  # atomic: no reader sees a torn file
-            except BaseException:
+                fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                           prefix=".tmp-",
+                                           suffix=".flare")
                 try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
-        except OSError:
-            self.stats[kind].errors += 1
-            return None
-        self.stats[kind].writes += 1
-        self.stats[kind].bytes_written += len(blob)
+                    with os.fdopen(fd, "wb") as f:
+                        f.write(blob)
+                    # atomic: no reader sees a torn file
+                    os.replace(tmp, path)
+                except BaseException:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+                    raise
+            except OSError:
+                self.stats[kind].errors += 1
+                sp.set(outcome="error")
+                return None
+            self.stats[kind].writes += 1
+            self.stats[kind].bytes_written += len(blob)
+            sp.set(outcome="written")
         if self.limit_bytes is not None:
             self.evict(self.limit_bytes)
         return path
@@ -340,29 +348,34 @@ class ArtifactStore:
         """
         st = self.stats[kind]
         path = self.path_for(kind, digest)
-        try:
-            with open(path, "rb") as f:
-                blob = f.read()
-        except OSError:
-            st.misses += 1
-            return None
-        try:
-            header, sections = self._parse(blob, kind)
-            self._check_envelope(header, kind, envelope_keys)
-        except StoreCorrupt:
-            st.corrupt += 1
-            st.misses += 1
+        with OT.span("store.load", tier=kind, digest=digest[:12]) as sp:
             try:
-                os.unlink(path)
+                with open(path, "rb") as f:
+                    blob = f.read()
             except OSError:
-                pass
-            return None
-        except StoreVersionMiss:
-            st.version_miss += 1
-            st.misses += 1
-            return None
-        st.hits += 1
-        st.bytes_read += len(blob)
+                st.misses += 1
+                sp.set(outcome="miss")
+                return None
+            try:
+                header, sections = self._parse(blob, kind)
+                self._check_envelope(header, kind, envelope_keys)
+            except StoreCorrupt:
+                st.corrupt += 1
+                st.misses += 1
+                sp.set(outcome="corrupt")
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+                return None
+            except StoreVersionMiss:
+                st.version_miss += 1
+                st.misses += 1
+                sp.set(outcome="version_miss")
+                return None
+            st.hits += 1
+            st.bytes_read += len(blob)
+            sp.set(outcome="hit", nbytes=len(blob))
         try:
             os.utime(path)  # LRU recency
         except OSError:

@@ -29,6 +29,8 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 from repro.core import engines as ENG
 from repro.core import stages as S
 from repro.core.dataframe import FlareContext
+from repro.obs import metrics as OM
+from repro.obs import trace as OT
 from repro.persist import store as PS
 from repro.serve.stats import ServeStats
 
@@ -78,12 +80,15 @@ class ServeFuture:
                                "QueryServer.flush() or start() a worker")
         if self._error is not None:
             raise self._error
-        out = self._handle.result()
+        t_sync = time.perf_counter()
+        with OT.span("serve.sync"):
+            out = self._handle.result()
         with self._lock:
             if not self._latency_recorded:
                 self._latency_recorded = True
-                self._stats.record_latency(time.perf_counter()
-                                           - self._submit_t)
+                now = time.perf_counter()
+                self._stats.record_latency(now - self._submit_t)
+                self._stats.record_sync(now - t_sync)
         return out
 
     def compact(self, timeout: Optional[float] = None) -> Dict[str, Any]:
@@ -139,6 +144,7 @@ class QueryServer:
         self._lock = threading.Lock()
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        OM.REGISTRY.register("serve", self)
         if warm_start:
             self.preload()
 
@@ -202,12 +208,14 @@ class QueryServer:
         """Admit one request; returns immediately with a future."""
         fut = ServeFuture(self.stats, time.perf_counter())
         req = _Request(name, params, fut)
-        with self._lock:
-            self._queue.append(req)
-            self.stats.submitted += 1
-            depth = len(self._queue)
-            if depth > self.stats.max_queue_depth:
-                self.stats.max_queue_depth = depth
+        with OT.span("serve.submit", template=name) as sp:
+            with self._lock:
+                self._queue.append(req)
+                self.stats.submitted += 1
+                depth = len(self._queue)
+                if depth > self.stats.max_queue_depth:
+                    self.stats.max_queue_depth = depth
+            sp.set(queue_depth=depth)
         return fut
 
     def queue_depth(self) -> int:
@@ -226,21 +234,31 @@ class QueryServer:
             batch, self._queue = self._queue, []
         if not batch:
             return 0
-        groups: Dict[str, List[_Request]] = {}
-        for req in batch:
-            groups.setdefault(req.name, []).append(req)
-        for name, reqs in groups.items():
-            for i in range(0, len(reqs), self.max_batch):
-                self._dispatch(name, reqs[i:i + self.max_batch])
+        with OT.span("serve.flush", drained=len(batch)) as sp:
+            groups: Dict[str, List[_Request]] = {}
+            for req in batch:
+                groups.setdefault(req.name, []).append(req)
+            sp.set(groups=len(groups))
+            for name, reqs in groups.items():
+                for i in range(0, len(reqs), self.max_batch):
+                    self._dispatch(name, reqs[i:i + self.max_batch])
         return len(batch)
 
     def _dispatch(self, name: str, reqs: List[_Request]) -> None:
+        now = time.perf_counter()
+        for r in reqs:  # admission-queue wait, from the request's seat
+            self.stats.record_queue(now - r.future._submit_t)
         try:
-            compiled = self.compiled_for(name)
-            c0 = compiled.stats.compile_s
-            handles = compiled.batch([r.params for r in reqs], block=False)
-            bucket = (ENG.batch_bucket(len(reqs)) if compiled.params()
-                      else len(reqs))
+            with OT.span("serve.dispatch", template=name,
+                         requests=len(reqs)) as sp:
+                compiled = self.compiled_for(name)
+                c0 = compiled.stats.compile_s
+                handles = compiled.batch([r.params for r in reqs],
+                                         block=False)
+                bucket = (ENG.batch_bucket(len(reqs))
+                          if compiled.params() else len(reqs))
+                sp.set(bucket=bucket,
+                       occupancy=round(len(reqs) / max(1, bucket), 4))
             self.stats.record_batch(len(reqs), bucket,
                                     compiled.stats.compile_s - c0,
                                     compiled.stats.run_s)

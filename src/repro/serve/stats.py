@@ -51,6 +51,10 @@ class ServeStats:
     compile_s: float = 0.0
     run_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    #: Per-request admission-queue wait: submit -> batch dispatch.
+    queue_s: List[float] = dataclasses.field(default_factory=list)
+    #: Per-request deferred-sync cost: first ``result()`` -> host value.
+    sync_s: List[float] = dataclasses.field(default_factory=list)
     preloaded: int = 0
     disk_hits: int = 0
     preload_s: float = 0.0
@@ -65,6 +69,12 @@ class ServeStats:
     def record_latency(self, seconds: float) -> None:
         self.completed += 1
         self.latencies_s.append(seconds)
+
+    def record_queue(self, seconds: float) -> None:
+        self.queue_s.append(seconds)
+
+    def record_sync(self, seconds: float) -> None:
+        self.sync_s.append(seconds)
 
     # -- derived -------------------------------------------------------------
 
@@ -87,8 +97,16 @@ class ServeStats:
     def p50_s(self) -> float:
         return percentile(self.latencies_s, 50)
 
+    def p95_s(self) -> float:
+        return percentile(self.latencies_s, 95)
+
     def p99_s(self) -> float:
         return percentile(self.latencies_s, 99)
+
+    @staticmethod
+    def _pcts_ms(values: List[float]) -> Dict[str, float]:
+        return {f"p{q}_ms": round(percentile(values, q) * 1e3, 3)
+                for q in (50, 95, 99)}
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -101,7 +119,12 @@ class ServeStats:
             "compile_s": round(self.compile_s, 6),
             "run_s": round(self.run_s, 6),
             "p50_ms": round(self.p50_s() * 1e3, 3),
+            "p95_ms": round(self.p95_s() * 1e3, 3),
             "p99_ms": round(self.p99_s() * 1e3, 3),
+            # request-seat latency decomposition: admission-queue wait
+            # and deferred device sync, each with its own percentiles
+            "queue": self._pcts_ms(self.queue_s),
+            "sync": self._pcts_ms(self.sync_s),
             "preloaded": self.preloaded,
             "disk_hits": self.disk_hits,
             "preload_s": round(self.preload_s, 6),

@@ -1,0 +1,208 @@
+"""flare_top: one screen of observability for a Flare process.
+
+Three input modes, auto-detected:
+
+* no argument -- run a small live TPC-H prepared-template workload
+  (tracing on, against ``$FLARE_CACHE_DIR`` if set so the persistent
+  store shows up) and render the resulting ``repro.obs.snapshot()``;
+* a snapshot JSON (``obs.snapshot()`` dumped by a bench/CI artifact, or
+  any ``write_report`` artifact embedding a ``"trace"`` summary) --
+  render its sections;
+* a Chrome trace JSON (``FLARE_TRACE_OUT`` / ``obs.dump_chrome``,
+  detected by its ``traceEvents`` key) -- rebuild the span tree and
+  render per-phase totals plus the slowest span subtrees.
+
+Usage::
+
+    PYTHONPATH=src python tools/flare_top.py            # live run
+    PYTHONPATH=src python tools/flare_top.py trace.json
+    PYTHONPATH=src python tools/flare_top.py snapshot.json --json
+
+``--json`` dumps the raw snapshot instead of the rendered screen (handy
+for piping into jq).  ``$FLARE_TOP_SF`` overrides the live-mode TPC-H
+scale factor (default 0.01).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024.0 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024.0
+    return f"{n:.1f}GB"
+
+
+def _rule(title: str) -> str:
+    return f"== {title} " + "=" * max(0, 58 - len(title))
+
+
+def _render_caches(caches: Dict[str, Any]) -> List[str]:
+    lines = [_rule("Caches"),
+             f"{'kind':<10}{'entries':>8}{'hits':>8}{'misses':>8}"
+             f"{'hit%':>7}  disk(h/w)"]
+    for kind in sorted(caches):
+        c = caches[kind]
+        disk = c.get("disk")
+        dtxt = (f"{disk['hits']}/{disk['writes']}" if disk else "-")
+        lines.append(f"{kind:<10}{c['entries']:>8}{c['hits']:>8}"
+                     f"{c['misses']:>8}{c['hit_rate'] * 100:>6.1f}%  {dtxt}")
+    return lines
+
+
+def _render_disk(disk: Dict[str, Any]) -> List[str]:
+    lines = [_rule("Artifact store"),
+             f"{'tier':<10}{'hits':>6}{'miss':>6}{'writes':>8}"
+             f"{'read':>10}{'written':>10}{'hit%':>7}"]
+    for tier in sorted(disk):
+        d = disk[tier]
+        lines.append(
+            f"{tier:<10}{d['hits']:>6}{d['misses']:>6}{d['writes']:>8}"
+            f"{_fmt_bytes(d['bytes_read']):>10}"
+            f"{_fmt_bytes(d['bytes_written']):>10}"
+            f"{d['hit_rate'] * 100:>6.1f}%")
+    return lines
+
+
+def _render_dispatch(d: Dict[str, Any]) -> List[str]:
+    lines = [_rule("Native dispatch"),
+             f"rewrites={d.get('rewrites', 0)}  fired={d.get('fired', 0)}"
+             f"  fallbacks={d.get('fallbacks', 0)}"]
+    for pat, row in sorted(d.get("patterns", {}).items()):
+        lines.append(f"  {pat:<30} fired x{row.get('fired', 0)}"
+                     f"  fallback x{row.get('fallback', 0)}")
+    return lines
+
+
+def _render_serve(servers: List[Dict[str, Any]]) -> List[str]:
+    lines = [_rule("Serving")]
+    for i, s in enumerate(servers):
+        lines.append(
+            f"server[{i}] submitted={s['submitted']} "
+            f"completed={s['completed']} batches={s['batches']} "
+            f"coalesce={s['coalesce_ratio']} "
+            f"occupancy={s['batch_occupancy']}")
+        lines.append(
+            f"  latency p50/p95/p99 ms: {s['p50_ms']}/{s.get('p95_ms', '-')}"
+            f"/{s['p99_ms']}  queue p95: {s.get('queue', {}).get('p95_ms', '-')}"
+            f"  sync p95: {s.get('sync', {}).get('p95_ms', '-')}")
+    if not servers:
+        lines.append("  (no live servers)")
+    return lines
+
+
+def _render_trace_summary(t: Dict[str, Any]) -> List[str]:
+    lines = [_rule("Trace"),
+             f"enabled={t.get('enabled')} buffered={t.get('buffered_spans')}"
+             f" dropped={t.get('dropped_spans', 0)}"]
+    phases = t.get("phases", {})
+    if phases:
+        lines.append(f"{'phase':<16}{'count':>7}{'total_ms':>11}")
+        for name, row in sorted(phases.items(),
+                                key=lambda kv: -kv[1]["total_s"]):
+            lines.append(f"{name:<16}{row['count']:>7}"
+                         f"{row['total_s'] * 1e3:>10.2f}")
+    return lines
+
+
+def render_snapshot(snap: Dict[str, Any]) -> str:
+    out: List[str] = []
+    if "caches" in snap:
+        out += _render_caches(snap["caches"])
+    if snap.get("disk"):
+        out += _render_disk(snap["disk"])
+    if "dispatch" in snap:
+        out += _render_dispatch(snap["dispatch"])
+    if "serve" in snap:
+        out += _render_serve(snap["serve"])
+    if "trace" in snap:
+        out += _render_trace_summary(snap["trace"])
+    if not out:  # some write_report artifact without obs sections
+        out = [_rule("Report"), json.dumps(snap, indent=2)]
+    return "\n".join(out)
+
+
+def render_chrome(doc: Dict[str, Any], top: int = 12) -> str:
+    from repro.obs import export as OX
+    from repro.obs import trace as OT
+
+    spans = OX.spans_from_chrome(doc)
+    trace = OT.Trace(spans)
+    out = [_rule("Chrome trace"),
+           f"events={len(doc.get('traceEvents', []))} spans={len(spans)} "
+           f"roots={len(trace.roots())}"]
+    totals = trace.phase_totals()
+    if totals:
+        out.append(f"{'span':<20}{'count':>7}{'total_ms':>11}")
+        for name, row in sorted(totals.items(),
+                                key=lambda kv: -kv[1]["total_s"]):
+            out.append(f"{name:<20}{row['count']:>7}"
+                       f"{row['total_s'] * 1e3:>10.2f}")
+    roots = sorted(trace.roots(), key=lambda s: -(s.t1 - s.t0))[:top]
+    if roots:
+        out.append(_rule(f"Slowest {len(roots)} span trees"))
+        out.append(OT.Trace(spans).tree_str())
+    return "\n".join(out)
+
+
+def live_snapshot(sf: float) -> Dict[str, Any]:
+    """Run the prepared-template workload traced, return the snapshot."""
+    from repro.core import FlareContext
+    from repro.obs import capture, snapshot
+    from repro.relational import queries as Q
+    from repro.serve import QueryServer
+
+    ctx = FlareContext()
+    Q.register_tpch(ctx, sf=sf)
+    ctx.preload()
+    with capture():
+        for name in sorted(Q.TEMPLATES):
+            compiled = Q.TEMPLATES[name](ctx).lower(
+                engine="compiled", native=True).compile()
+            compiled.collect(**Q.TEMPLATE_BINDINGS[name][0])
+        server = QueryServer(ctx)
+        futs = [server.submit("q6", **b)
+                for b in Q.random_bindings("q6", 4, seed=1)]
+        server.flush()
+        for f in futs:
+            f.result()
+    return snapshot()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("path", nargs="?",
+                    help="snapshot or Chrome-trace JSON; omit for a "
+                         "live traced TPC-H run")
+    ap.add_argument("--json", action="store_true",
+                    help="dump raw JSON instead of the rendered screen")
+    args = ap.parse_args(argv)
+
+    if args.path:
+        with open(args.path) as f:
+            doc = json.load(f)
+        if "traceEvents" in doc:  # Chrome trace mode
+            print(render_chrome(doc) if not args.json
+                  else json.dumps(doc, indent=2))
+            return 0
+        snap = doc
+    else:
+        snap = live_snapshot(float(os.environ.get("FLARE_TOP_SF", "0.01")))
+    print(json.dumps(snap, indent=2) if args.json else render_snapshot(snap))
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:  # `flare_top ... | head` is fine
+        raise SystemExit(0)

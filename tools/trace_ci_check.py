@@ -1,0 +1,170 @@
+"""CI gate for query-lifecycle tracing: every compiled query must leave
+a complete span tree.
+
+Runs the prepared-template workload (``relational/queries.py:TEMPLATES``)
+in a fresh subprocess with ``FLARE_TRACE=1`` across the compiled,
+compiled-native and parallel engines plus one served
+(:class:`repro.serve.QueryServer`) path, each query wrapped in a
+``query`` root span.  The child dumps one Chrome-trace JSON
+(``obs.dump_chrome``); this parent rebuilds the span forest
+(``obs.spans_from_chrome``) and asserts:
+
+* every ``query`` span has the full lifecycle underneath it --
+  ``lower``/``compile``/``execute`` for the direct engines (plus a
+  ``dispatch`` decision span on the native path), coalesced
+  ``serve.flush``/``serve.dispatch``/``execute`` for the served path;
+* every trace event is schema-complete (name/ph/ts/dur/pid/tid);
+* nothing was dropped from the span buffer.
+
+Usage::
+
+    PYTHONPATH=src python tools/trace_ci_check.py
+
+``$CI_TRACE_SF`` overrides the TPC-H scale factor (default 0.005).
+The Chrome trace lands at ``$TRACE_CI_TRACE`` (default
+``trace_ci_smoke.json``, uploaded by CI -- load it in Perfetto) and the
+verdict summary at ``$TRACE_CI_JSON`` (default ``trace_ci_check.json``).
+Exits non-zero on any incomplete span tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SF = float(os.environ.get("CI_TRACE_SF", "0.005"))
+TRACE_PATH = os.environ.get("TRACE_CI_TRACE", "trace_ci_smoke.json")
+JSON_PATH = os.environ.get("TRACE_CI_JSON", "trace_ci_check.json")
+
+#: Per-engine lifecycle contract: span names that MUST appear somewhere
+#: under each ``query`` root span.
+REQUIRED = {
+    "compiled": {"lower", "compile", "execute"},
+    "compiled-native": {"lower", "compile", "execute", "dispatch"},
+    "parallel": {"lower", "compile", "execute"},
+    "served": {"serve.flush", "serve.dispatch", "execute"},
+}
+
+_CHILD = """
+import json, sys
+from repro.core import CompileCache, FlareContext
+from repro.obs import export as OX
+from repro.obs import trace as OT
+from repro.relational import queries as Q
+from repro.serve import QueryServer
+
+assert OT.TRACER.on, "FLARE_TRACE must be live in the child"
+ctx = FlareContext()
+Q.register_tpch(ctx, sf=%(sf)r)
+ctx.preload()
+queries = []
+for name in sorted(Q.TEMPLATES):
+    binding = dict(Q.TEMPLATE_BINDINGS[name][0])
+    for label, engine, native in (("compiled", "compiled", False),
+                                  ("compiled-native", "compiled", True),
+                                  ("parallel", "parallel", False)):
+        # fresh cache per query: the gate checks the FULL lifecycle, so
+        # lower/compile must actually run, not hit a warm entry
+        with OT.span("query", template=name, engine=label):
+            compiled = Q.TEMPLATES[name](ctx).lower(
+                engine=engine, native=native).compile(cache=CompileCache())
+            compiled.collect(**binding)
+        queries.append({"name": name, "engine": label})
+server = QueryServer(ctx)
+for name in sorted(Q.TEMPLATES):
+    with OT.span("query", template=name, engine="served"):
+        futs = [server.submit(name, **dict(b))
+                for b in Q.TEMPLATE_BINDINGS[name][:2]]
+        server.flush()
+        for f in futs:
+            f.result()
+    queries.append({"name": name, "engine": "served"})
+OX.dump_chrome(%(trace)r)
+json.dump({"queries": queries, "trace": dict(OT.TRACER.stats())},
+          sys.stdout)
+"""
+
+
+def run_child() -> dict:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, FLARE_TRACE="1",
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    # no store: a disk-served executable would legitimately skip parts
+    # of the compile pipeline and muddy the "complete lifecycle" check
+    env.pop("FLARE_CACHE_DIR", None)
+    env.pop("FLARE_TRACE_OUT", None)  # gate dumps explicitly, once
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _CHILD % {"sf": SF, "trace": os.path.abspath(TRACE_PATH)}],
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        print(proc.stderr, file=sys.stderr)
+        raise SystemExit("trace_ci_check: traced workload failed")
+    return json.loads(proc.stdout)
+
+
+def check_events(events) -> list:
+    bad = []
+    for ev in events:
+        if ev.get("ph") == "M":
+            continue
+        missing = [k for k in ("name", "ph", "ts", "dur", "pid", "tid")
+                   if k not in ev]
+        if missing:
+            bad.append(f"event {ev.get('name', '?')!r} missing {missing}")
+    return bad
+
+
+def main() -> int:
+    from repro.obs import export as OX
+    from repro.obs import trace as OT
+
+    print(f"trace_ci_check: sf={SF} trace={TRACE_PATH}")
+    child = run_child()
+    with open(TRACE_PATH) as f:
+        doc = json.load(f)
+
+    failures = check_events(doc.get("traceEvents", []))
+    if child["trace"].get("dropped_spans"):
+        failures.append(
+            f"span buffer overflowed: {child['trace']['dropped_spans']} "
+            "dropped (raise FLARE_TRACE_MAX_SPANS)")
+
+    trace = OT.Trace(OX.spans_from_chrome(doc))
+    roots = [sp for sp in trace.find("query") if sp.parent_id is None]
+    verdicts = []
+    want = {(q["name"], q["engine"]) for q in child["queries"]}
+    got = {(sp.attrs.get("template"), sp.attrs.get("engine")) for sp in roots}
+    for missing in sorted(want - got):
+        failures.append(f"no query span for {missing}")
+    for sp in roots:
+        name, engine = sp.attrs.get("template"), sp.attrs.get("engine")
+        below = trace.descendant_names(sp)
+        lacking = sorted(REQUIRED.get(engine, set()) - below)
+        verdicts.append({"name": name, "engine": engine,
+                         "spans_below": sorted(below),
+                         "missing": lacking})
+        if lacking:
+            failures.append(
+                f"{name}/{engine}: span tree incomplete, missing {lacking}")
+
+    summary = {"sf": SF, "trace_path": TRACE_PATH,
+               "events": len(doc.get("traceEvents", [])),
+               "query_spans": len(roots),
+               "tracer": child["trace"],
+               "verdicts": verdicts,
+               "ok": not failures, "failures": failures}
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"{len(roots)} query spans over {len(doc.get('traceEvents', []))} "
+          f"events; {sum(1 for v in verdicts if not v['missing'])} complete")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    print(f"wrote {JSON_PATH}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
