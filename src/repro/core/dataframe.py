@@ -90,13 +90,16 @@ class FlareContext:
 
     def lower(self, plan: P.Plan, engine: str = "compiled",
               native: bool = False, mesh=None,
-              axis: str = "data", join_index: bool = True) -> S.Lowered:
+              axis: str = "data", join_index: bool = True,
+              memory_budget=None, morsel_rows=None) -> S.Lowered:
         """Optimize + lower a plan for ``engine`` (stages entry point)."""
         return S.lower_plan(self.optimized(plan), self.catalog,
                             engine=engine, device_cache=self.cache,
                             compile_cache=self.compile_cache,
                             native=native, mesh=mesh, axis=axis,
-                            join_index=join_index)
+                            join_index=join_index,
+                            memory_budget=memory_budget,
+                            morsel_rows=morsel_rows)
 
     def preload(self, *names: str, indexes: bool = True) -> None:
         """Paper's ``persist()``: move table columns to device up-front.
@@ -251,7 +254,8 @@ class DataFrame:
 
     def lower(self, engine: str = "compiled",
               native: bool = False, mesh=None,
-              axis: str = "data", join_index: bool = True) -> S.Lowered:
+              axis: str = "data", join_index: bool = True,
+              memory_budget=None, morsel_rows=None) -> S.Lowered:
         """Optimize + lower this query for ``engine``.
 
         Returns a :class:`repro.core.stages.Lowered`: inspect the plan via
@@ -274,9 +278,18 @@ class DataFrame:
         ``join_index=False`` disables the build-side join index cache:
         joins re-sort their build keys inside the program (the
         cold-path baseline of DESIGN.md section 10).
+
+        ``memory_budget`` (bytes) declares how much fast memory the
+        spine stream may use: an over-budget query is rewritten for
+        out-of-core morsel execution -- the scan streams through the
+        plan in fixed-size chunks and partial aggregates merge
+        (DESIGN.md section 14).  ``morsel_rows`` pins the chunk size
+        explicitly.  Composes with ``native`` and ``parallel``.
         """
         return self.ctx.lower(self.plan, engine, native=native,
-                              mesh=mesh, axis=axis, join_index=join_index)
+                              mesh=mesh, axis=axis, join_index=join_index,
+                              memory_budget=memory_budget,
+                              morsel_rows=morsel_rows)
 
     def params(self) -> Tuple[E.Param, ...]:
         """Param placeholders of this query (binding order)."""

@@ -445,7 +445,8 @@ def fingerprint(e: Expr) -> str:
     if isinstance(e, WithDomain):
         return f"(dom:{e.domain}:{fingerprint(e.arg)})"
     if isinstance(e, Udf):
-        return f"(udf:{e.name}@{id(e.fn):x}:" + ",".join(
+        from repro.core import fnhash as FH
+        return f"(udf:{e.name}#{FH.fn_token(e.fn)}:" + ",".join(
             map(fingerprint, e.args)) + ")"
     raise TypeError(f"cannot fingerprint {e!r}")
 

@@ -1,0 +1,307 @@
+"""Out-of-core morsel execution: bounded-memory whole-query programs.
+
+The compiled engine's whole-query trace assumes the spine table's bound
+columns fit the accelerator's fast memory at once -- the Flare paper can
+assume a big NUMA host, but a TPU core sees ~16 MiB of VMEM and a slice
+of HBM.  This module breaks that assumption morsel-style (the
+Umbra/HyPer term): the scan streams through the plan's parallel section
+in fixed-size row chunks ("morsels"), each morsel computes a partial
+aggregate, and the partials merge under exactly the recomposition rules
+the sharded ``parallel`` engine already uses for its per-shard partials
+(``repro.core.parallel._partial_of``: ``avg`` rewritten to sum [+
+count] and recomposed post-merge, ``min``/``max``/``any`` merged with
+their own ops, the group mask recovered from the merged count).
+
+The rewrite is a plan-level wrap: :func:`plan_morsels` finds the
+deepest spine aggregate whose prologue is row-parallel
+(Filter/Project/Join-probe/MapBatches -- the same ``_SPINE_SAFE`` set
+shard planning uses) and replaces it with a :class:`MorselMerge` node
+whose ``lower_stream`` pads the spine scan to a morsel multiple and
+drives a ``jax.lax.fori_loop`` over ``dynamic_slice`` windows.  ONE
+morsel-sized program body is traced (so XLA sees a loop over a small
+working set, never the whole table) and everything composes:
+
+* native kernel dispatch annotates the partial aggregate inside the
+  loop (the Pallas kernels see morsel-sized streams),
+* the ``parallel`` engine wraps its per-shard partial aggregate, so
+  each mesh shard streams its own morsels before the cross-shard
+  collective merge,
+* the morsel size is part of the plan fingerprint, so templates with
+  different memory budgets never share a compile-cache entry.
+
+:func:`plan_morsels` picks the morsel size from a declared
+``memory_budget`` (bytes): the per-morsel working set is modeled as
+``bound_columns x 4 bytes x morsel_rows x 2`` (f32 streams,
+double-buffered), the largest lane-aligned morsel that fits wins, and a
+plan that fits monolithically is left untouched.  A budget too small
+for even one lane row, or a plan with no distributive aggregate to
+merge behind, raises :class:`MemoryBudgetError` instead of silently
+computing out-of-budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lower as L
+from repro.core import plan as P
+
+LANES = 128
+
+#: Streams enter kernels as f32 (see ``repro.native.patterns``).
+BYTES_PER_VALUE = 4
+
+#: Double buffering: one morsel computes while the next one loads.
+DOUBLE_BUFFER = 2
+
+
+class MemoryBudgetError(ValueError):
+    """The declared ``memory_budget`` cannot be satisfied: no morsel
+    size fits, or the plan has no distributive aggregate barrier to
+    merge partial morsel results behind."""
+
+
+# ---------------------------------------------------------------------------
+# the merge node
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class MorselMerge(P.Plan):
+    """Merge point of the out-of-core section: ``child`` is the partial
+    aggregate (possibly NativeOp-annotated by the dispatch pass), and
+    lowering drives it over fixed-size spine morsels inside a
+    ``fori_loop``, merging the dense per-morsel group vectors with the
+    same recomposition rules the parallel engine's :class:`ShardMerge`
+    applies across shards.  Implements the custom-lowering protocol of
+    ``repro.core.lower``, so ``build_callable`` traces the loop into
+    the same whole-query program as the surrounding operators.
+    """
+
+    child: P.Plan
+    original: P.Aggregate             # pre-rewrite aggregate (schema truth)
+    merges: Tuple[Tuple[str, str], ...]  # (partial column, agg op)
+    avg_names: Tuple[str, ...]        # columns to recompose as sum/count
+    count_name: Optional[str]         # merged count used for avg + mask
+    synthetic: Optional[str]          # added count column to drop
+    morsel_rows: int
+    spine: Any = dataclasses.field(default=None, repr=False)  # Scan node
+
+    def children(self) -> Tuple[P.Plan, ...]:
+        return (self.child,)
+
+    def with_children(self, kids):
+        return dataclasses.replace(self, child=kids[0])
+
+    def infer_schema(self, catalog):
+        return self.original.schema(catalog)
+
+    def describe(self):
+        return (f"MorselMerge[m={self.morsel_rows}] "
+                + ", ".join(f"{n}:{op}" for n, op in self.merges))
+
+    def fingerprint(self):
+        # the morsel size IS part of the template identity: programs
+        # traced for different memory budgets have different loop
+        # bodies and must not share a compiled executable
+        return (f"morsel[{self.morsel_rows}]"
+                f"({self.child.fingerprint()};"
+                f"{self.original.fingerprint()})")
+
+    # -- repro.core.lower custom-lowering protocol ---------------------------
+
+    def static_info_hook(self, catalog) -> L.StaticInfo:
+        return L.static_info(self.original, catalog)
+
+    def required_columns_hook(self, rec, needed) -> None:
+        rec(self.child, needed)
+
+    def lower_stream(self, catalog, scans, params) -> L.Stream:
+        spine = self.spine
+        sstream = scans.get(id(spine))
+        if sstream is None:
+            raise KeyError(f"morsel spine scan {spine.table!r} not bound")
+        m = self.morsel_rows
+        n = sstream.n
+        n_morsels = -(-n // m)
+        pad = n_morsels * m - n
+        mask = sstream.the_mask()
+        cols = dict(sstream.cols)
+        if pad:
+            # padding rows are invalid: they land in every per-morsel
+            # aggregate as masked-out rows and contribute the neutral
+            # element, exactly like shard padding does
+            mask = jnp.pad(mask, (0, pad), constant_values=False)
+            cols = {k: jnp.pad(v, (0, pad)) for k, v in cols.items()}
+
+        def morsel_cols(start) -> Dict[str, jnp.ndarray]:
+            mcols = {k: jax.lax.dynamic_slice_in_dim(v, start, m)
+                     for k, v in cols.items()}
+            mmask = jax.lax.dynamic_slice_in_dim(mask, start, m)
+            mscans = dict(scans)
+            mscans[id(spine)] = L.Stream(
+                mcols, mmask, L.StaticInfo(sstream.info.cols, m))
+            s = L.lower_node(self.child, catalog, mscans, params)
+            return dict(s.cols)
+
+        # ONE abstract trace of the morsel body fixes the accumulator
+        # shapes/dtypes (the generic lowering promotes int sums to f32,
+        # native kernels emit f32 -- don't guess, ask)
+        shapes = jax.eval_shape(morsel_cols,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+        init: Dict[str, jnp.ndarray] = {}
+        for name, op in self.merges:
+            sd = shapes[name]
+            if op in ("sum", "count"):
+                fill = jnp.zeros((), sd.dtype)
+            elif op == "min":
+                fill = jnp.asarray(L._type_max(sd.dtype), sd.dtype)
+            else:  # max / any
+                fill = jnp.asarray(L._type_min(sd.dtype), sd.dtype)
+            init[name] = jnp.full(sd.shape, fill, sd.dtype)
+        for k in self.original.keys:
+            init[k] = jnp.zeros(shapes[k].shape, shapes[k].dtype)
+
+        def body(i, acc):
+            s = morsel_cols(i * np.int32(m))
+            out = {}
+            for name, op in self.merges:
+                if op in ("sum", "count"):
+                    out[name] = acc[name] + s[name]
+                elif op == "min":
+                    out[name] = jnp.minimum(acc[name], s[name])
+                else:
+                    out[name] = jnp.maximum(acc[name], s[name])
+            for k in self.original.keys:
+                # decoded from the group index -- identical every morsel
+                out[k] = s[k]
+            return out
+
+        final = jax.lax.fori_loop(0, n_morsels, body, init)
+        cnt = final.get(self.count_name) if self.count_name else None
+        out_cols = {k: final[k] for k in self.original.keys}
+        for name, _ in self.merges:
+            if name == self.synthetic:
+                continue
+            v = final[name]
+            if name in self.avg_names:
+                v = v / jnp.maximum(cnt, 1).astype(v.dtype)
+            out_cols[name] = v
+        mask_out = (cnt > 0) if (self.original.keys
+                                 and cnt is not None) else None
+        return L.Stream(out_cols, mask_out,
+                        L.static_info(self.original, catalog))
+
+
+def find_morsel_node(p: P.Plan) -> Optional[MorselMerge]:
+    """The (single) MorselMerge of a morsel-planned plan, or None."""
+    if isinstance(p, MorselMerge):
+        return p
+    for c in p.children():
+        found = find_morsel_node(c)
+        if found is not None:
+            return found
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def working_set_bytes(n_cols: int, rows: int) -> int:
+    """Modeled working set of streaming ``n_cols`` bound spine columns
+    over ``rows`` rows: f32 values, double-buffered."""
+    return n_cols * BYTES_PER_VALUE * rows * DOUBLE_BUFFER
+
+
+def choose_morsel_rows(n_cols: int, spine_rows: int, memory_budget: int
+                       ) -> int:
+    """Largest lane-aligned morsel whose working set fits the budget
+    (capped at the padded spine length -- bigger buys nothing)."""
+    per_row = n_cols * BYTES_PER_VALUE * DOUBLE_BUFFER
+    m = (memory_budget // per_row) // LANES * LANES
+    if m <= 0:
+        raise MemoryBudgetError(
+            f"memory budget {memory_budget} B cannot hold one {LANES}-row "
+            f"morsel of {n_cols} bound column(s) "
+            f"({per_row * LANES} B needed)")
+    return min(m, -(-spine_rows // LANES) * LANES)
+
+
+def morselize_aggregate(agg: P.Aggregate, spine: P.Scan,
+                        catalog: P.Catalog, n_cols: int, spine_rows: int,
+                        memory_budget: Optional[int],
+                        morsel_rows: Optional[int]) -> P.Plan:
+    """Wrap ``agg`` in a :class:`MorselMerge` sized for the budget, or
+    return it unchanged when the monolithic working set already fits
+    (and no explicit ``morsel_rows`` forces the loop)."""
+    if morsel_rows is None:
+        if working_set_bytes(n_cols, spine_rows) <= memory_budget:
+            return agg
+        morsel_rows = choose_morsel_rows(n_cols, spine_rows, memory_budget)
+    if morsel_rows <= 0:
+        raise MemoryBudgetError(f"morsel_rows={morsel_rows} must be >= 1")
+    from repro.core import parallel as PAR
+    partial, merges, avg_names, count_name, synthetic = \
+        PAR._partial_of(agg)
+    return MorselMerge(child=partial, original=agg, merges=merges,
+                       avg_names=avg_names, count_name=count_name,
+                       synthetic=synthetic, morsel_rows=morsel_rows,
+                       spine=spine)
+
+
+def plan_morsels(p: P.Plan, catalog: P.Catalog,
+                 memory_budget: Optional[int] = None,
+                 morsel_rows: Optional[int] = None) -> P.Plan:
+    """Rewrite an optimized plan for bounded-memory execution.
+
+    No-op when neither knob is given, or when ``memory_budget`` is
+    satisfied by the monolithic whole-table program.  Otherwise the
+    deepest spine aggregate becomes a :class:`MorselMerge` over its
+    partial form; raises :class:`MemoryBudgetError` when the plan has
+    no such barrier to merge behind (a non-aggregating query streams
+    its full output by construction -- there is nothing to recompose).
+    """
+    if memory_budget is None and morsel_rows is None:
+        return p
+    from repro.core import parallel as PAR
+    if isinstance(p, P.IterativeKernel):
+        raise MemoryBudgetError(
+            "morsel execution does not support IterativeKernel roots: "
+            "the training kernel consumes the whole gathered matrix; "
+            "lower the relational half separately or raise the budget")
+    try:
+        path, spine = PAR._spine_path(p)
+    except PAR.UnsupportedParallelPlan as ex:
+        raise MemoryBudgetError(str(ex)) from ex
+    spine_rows = catalog.table(spine.table).num_rows
+    n_cols = len(L.required_scan_columns(p, catalog).get(id(spine), ())) or 1
+
+    barrier_i = None
+    for i, node in enumerate(path):
+        if not isinstance(node, PAR._SPINE_SAFE):
+            barrier_i = i  # keep the last hit: the DEEPEST barrier
+
+    if barrier_i is None or not isinstance(path[barrier_i], P.Aggregate):
+        if (morsel_rows is None
+                and working_set_bytes(n_cols, spine_rows) <= memory_budget):
+            return p  # fits whole -- nothing to stream
+        found = (path[barrier_i].describe() if barrier_i is not None
+                 else "a plain row pipeline")
+        raise MemoryBudgetError(
+            f"memory budget needs a distributive aggregate on the spine "
+            f"to merge morsel partials behind; deepest barrier is "
+            f"{found}")
+
+    agg = path[barrier_i]
+    node = morselize_aggregate(agg, spine, catalog, n_cols, spine_rows,
+                               memory_budget, morsel_rows)
+    if node is agg:
+        return p
+    return PAR._rebuild(path, barrier_i, node)

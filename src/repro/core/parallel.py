@@ -340,7 +340,9 @@ def _partial_of(agg: PL.Aggregate) -> Tuple[PL.Aggregate, Tuple, Tuple,
 
 def shard_plan(p: PL.Plan, catalog: PL.Catalog, mesh: Optional[Mesh] = None,
                axis: str = "data", native: bool = False,
-               join_index: bool = True
+               join_index: bool = True,
+               memory_budget: Optional[int] = None,
+               morsel_rows: Optional[int] = None
                ) -> Tuple[PL.Plan, Optional[ShardedDispatchReport]]:
     """Rewrite an optimized plan for sharded execution on ``mesh``.
 
@@ -348,6 +350,13 @@ def shard_plan(p: PL.Plan, catalog: PL.Catalog, mesh: Optional[Mesh] = None,
     :class:`ShardMerge` or :class:`ShardGather`) and, when
     ``native=True``, the per-shard dispatch report of the native
     kernel-annotation pass that ran over the sharded plan.
+
+    ``memory_budget``/``morsel_rows`` compose out-of-core execution
+    with sharding: each shard's partial aggregate is additionally
+    wrapped in a :class:`repro.core.morsel.MorselMerge`, so every shard
+    streams its OWN slice of the spine in bounded-memory morsels before
+    the cross-shard collective merge.  The budget is per shard (each
+    shard owns its accelerator's memory).
     """
     if mesh is None:
         from repro.launch.mesh import make_data_mesh
@@ -374,9 +383,38 @@ def shard_plan(p: PL.Plan, catalog: PL.Catalog, mesh: Optional[Mesh] = None,
         if not isinstance(node, _SPINE_SAFE):
             barrier_i = i  # keep the last hit: the DEEPEST barrier
 
-    if barrier_i is not None and isinstance(path[barrier_i], PL.Aggregate):
+    out_of_core = memory_budget is not None or morsel_rows is not None
+    merge_barrier = (barrier_i is not None
+                     and isinstance(path[barrier_i], PL.Aggregate))
+    if out_of_core and not merge_barrier:
+        # gather-planned spine: no partials to merge, so a budget can
+        # only pass through when the shard-local working set fits whole
+        from repro.core import morsel as MO
+        n_cols = len(L.required_scan_columns(p, catalog)
+                     .get(id(spine), ())) or 1
+        if (morsel_rows is not None
+                or MO.working_set_bytes(n_cols, pad_to // n_shards)
+                > memory_budget):
+            raise MO.MemoryBudgetError(
+                "memory budget needs a distributive aggregate on the "
+                "spine to merge morsel partials behind; this sharded "
+                "plan gathers instead of merging")
+        out_of_core = False
+    if merge_barrier:
         agg = path[barrier_i]
         partial, merges, avg_names, count_name, synthetic = _partial_of(agg)
+        if out_of_core:
+            # morselize the shard-local partial: _partial_of is
+            # idempotent on it (no avg left, count already present), so
+            # the inner MorselMerge hands ShardMerge exactly the partial
+            # columns it expects, un-recomposed
+            from repro.core import morsel as MO
+            shard_rows = pad_to // n_shards
+            n_cols = len(L.required_scan_columns(p, catalog)
+                         .get(id(spine), ())) or 1
+            partial = MO.morselize_aggregate(
+                partial, spine, catalog, n_cols, shard_rows,
+                memory_budget, morsel_rows)
         node = ShardMerge(child=partial, original=agg, merges=merges,
                           avg_names=avg_names, count_name=count_name,
                           synthetic=synthetic, **common)

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import expr as E
+from repro.core import fnhash as FH
 from repro.relational import table as T
 
 # ---------------------------------------------------------------------------
@@ -345,7 +346,8 @@ class MapBatches(Plan):
         outs = ",".join(f"{f.name}:{f.dtype}:{f.domain}"
                         for f in self.out_fields)
         return (f"mapbatches({self.child.fingerprint()},"
-                f"{self.name}@{id(self.fn):x},{self.columns},[{outs}])")
+                f"{self.name}#{FH.fn_token(self.fn)},"
+                f"{self.columns},[{outs}])")
 
 
 @dataclasses.dataclass(eq=False)
@@ -393,9 +395,11 @@ class IterativeKernel(Plan):
             f"{k}={E.fingerprint(v) if isinstance(v, E.Expr) else repr(v)}"
             for k, v in self.hyper)
         # name alone is not identity: two ad-hoc kernels can share
-        # __name__ (lambdas!), so the function object disambiguates --
-        # same convention as MapBatches / expr.Udf
-        kid = f"{self.kernel.name}@{id(self.kernel.fn):x}"
+        # __name__ (lambdas!), so the function *content* disambiguates --
+        # same convention as MapBatches / expr.Udf.  A content hash (not
+        # id()) keeps the key stable across processes and immune to
+        # address reuse after GC.
+        kid = f"{self.kernel.name}#{FH.fn_token(self.kernel.fn)}"
         return (f"train({self.child.fingerprint()},{kid},"
                 f"{self.features},{self.label},[{hyp}])")
 

@@ -240,28 +240,59 @@ def _load_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
         return None, ""
     header, sections = loaded
     meta = header.get("meta") or {}
-    schema = p.schema(catalog)
-    out_info = L.static_info(p, catalog)
+    # IterativeKernel roots return a kernel-result pytree, not columns:
+    # the "value" kind.  There is no schema; the output tree structure is
+    # recovered by an abstract re-trace (jax.eval_shape -- plan lowering
+    # runs again, XLA compilation still does not).
+    is_value = isinstance(p, P.IterativeKernel)
     layout, index_layout = _template_geometry(p, catalog)
     pdtypes = [jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))
                for s in param_specs]
     n_args = (sum(len(names) for _, names in layout)
               + 2 * len(index_layout) + len(param_specs))
+    if is_value:
+        schema = out_info = None
+        try:
+            build = (L.build_batch_callable if bucket is not None
+                     else L.build_callable)
+            fn = build(p, catalog, param_specs)[0]
+            avals = shared_avals(layout, index_layout, catalog)
+            for s, dt in zip(param_specs, pdtypes):
+                avals.append(jax.ShapeDtypeStruct(
+                    () if bucket is None else (bucket,), dt))
+            out_leaves, out_tree = jax.tree_util.tree_flatten(
+                jax.eval_shape(fn, *avals))
+        except Exception:
+            store.demote_hit("exec", "corrupt")
+            return None, ""
+        n_out = len(out_leaves)
+    else:
+        schema = p.schema(catalog)
+        out_info = L.static_info(p, catalog)
+        out_tree = None
+        n_out = len(schema.names) + 1
     expect = {
         "engine": engine_name,
         "bucket": bucket,
         "params": [[s.name, s.dtype] for s in param_specs],
         "n_args": n_args,
-        "n_out": len(schema.names) + 1,
+        "n_out": n_out,
+        "kind": "value" if is_value else "relational",
     }
+    if meta.get("kind") is None:  # artifacts written before "kind" existed
+        expect.pop("kind")
     if (len(sections) != 2
             or any(meta.get(k) != v for k, v in expect.items())):
         store.demote_hit("exec", "corrupt")
         return None, ""
-    # flat output order of the native executable = tree_flatten of the
-    # traced (out_cols dict, mask) pytree: sorted column names, then mask
-    names_sorted = sorted(schema.names)
-    dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
+    if is_value:
+        names_sorted, dicts = [], {}
+    else:
+        # flat output order of the native executable = tree_flatten of the
+        # traced (out_cols dict, mask) pytree: sorted column names, then
+        # mask
+        names_sorted = sorted(schema.names)
+        dicts = {n: sc.dictionary for n, sc in out_info.cols.items()}
 
     dispatch: Optional[Callable[[List[Any]], Any]] = None
     disposition = ""
@@ -270,9 +301,15 @@ def _load_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
             native = PX.deserialize_native(sections[0])
             kept = tuple(int(i) for i in meta.get("kept", []))
 
-            def dispatch(args, _native=native, _kept=kept):
-                outs = PX.execute_flat(_native, args, _kept)
-                return dict(zip(names_sorted, outs)), outs[len(names_sorted)]
+            if is_value:
+                def dispatch(args, _native=native, _kept=kept):
+                    outs = PX.execute_flat(_native, args, _kept)
+                    return jax.tree_util.tree_unflatten(out_tree, outs)
+            else:
+                def dispatch(args, _native=native, _kept=kept):
+                    outs = PX.execute_flat(_native, args, _kept)
+                    return (dict(zip(names_sorted, outs)),
+                            outs[len(names_sorted)])
 
             disposition = "hit:native"
         except Exception:
@@ -303,6 +340,9 @@ def _load_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
             return dispatch(args)
 
         def finalize(out):
+            if schema is None:  # value kind: kernel result pytree
+                return L.ValueResult(jax.tree_util.tree_map(np.asarray,
+                                                            out))
             out_cols, mask = out
             out_np = {k: np.asarray(v) for k, v in out_cols.items()}
             return L.Result(out_np, np.asarray(mask), schema, dicts)
@@ -323,6 +363,9 @@ def _load_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
         return dispatch(args)
 
     def finalize_one(out, i: int):
+        if schema is None:  # value kind: kernel pytree stacked on axis 0
+            return L.ValueResult(jax.tree_util.tree_map(
+                lambda v: np.asarray(v[i]), out))
         out_cols, mask = out
         out_np = {k: np.asarray(v[i]) for k, v in out_cols.items()}
         return L.Result(out_np, np.asarray(mask[i]), schema, dicts)
@@ -342,7 +385,9 @@ def _save_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
     jax_exe = getattr(exe_like, "jax_exe", None)
     export_src = getattr(exe_like, "export_src", None)
     n_args = getattr(exe_like, "n_args", None)
-    if jax_exe is None or schema is None or n_args is None:
+    n_out = getattr(exe_like, "n_out", None)
+    is_value = schema is None
+    if jax_exe is None or n_args is None or (is_value and n_out is None):
         store.tier("exec").unsupported += 1
         return "unsupported: executor exposes no serializable executable"
     try:
@@ -361,7 +406,8 @@ def _save_persisted_exec(store: "PSTORE.ArtifactStore", digest: str,
         "bucket": bucket,
         "params": [[s.name, s.dtype] for s in param_specs],
         "n_args": n_args,
-        "n_out": len(schema.names) + 1,
+        "n_out": n_out if is_value else len(schema.names) + 1,
+        "kind": "value" if is_value else "relational",
         "kept": list(kept),
         "platforms": platforms,
     }
@@ -598,10 +644,16 @@ class WholeQueryEngine:
         run.raw = raw            # deferred-sync protocol (AsyncResult)
         run.finalize = finalize
         # handles for the persistent store tier (repro.persist): the
-        # jax executable to serialize, its argument count, and the
-        # (fn, avals) source for the portable jax.export payload
+        # jax executable to serialize, its argument count, flat output
+        # arity, and the (fn, avals) source for the portable jax.export
+        # payload
         run.jax_exe = exe
         run.n_args = len(artifact.avals)
+        try:
+            run.n_out = jax.tree_util.tree_structure(
+                artifact.jax_lowered.out_info).num_leaves
+        except Exception:
+            run.n_out = None
         run.export_src = (artifact.fn, artifact.avals)
         return run
 
@@ -962,6 +1014,7 @@ class BatchExecutor:
     # have nothing new to write back)
     jax_exe: Any = None
     n_args: Optional[int] = None
+    n_out: Optional[int] = None
     export_src: Optional[Tuple[Callable, Tuple]] = None
 
 
@@ -985,7 +1038,12 @@ def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
         dt = jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))
         pdtypes.append(dt)
         avals.append(jax.ShapeDtypeStruct((bucket,), dt))
-    exe = jax.jit(bfn).lower(*avals).compile()
+    lowered = jax.jit(bfn).lower(*avals)
+    exe = lowered.compile()
+    try:
+        n_out = jax.tree_util.tree_structure(lowered.out_info).num_leaves
+    except Exception:
+        n_out = None
     schema = (None if isinstance(p, P.IterativeKernel)
               else p.schema(catalog))
 
@@ -1006,7 +1064,7 @@ def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
         return L.Result(out_np, np.asarray(mask[i]), schema, dicts)
 
     return BatchExecutor(raw, finalize_one, bucket,
-                         jax_exe=exe, n_args=len(avals),
+                         jax_exe=exe, n_args=len(avals), n_out=n_out,
                          export_src=(bfn, tuple(avals)))
 
 
@@ -1229,12 +1287,14 @@ class Compiled:
                 if cache is not None:
                     cache.insert(key, exe)
                 if can_persist:
+                    bschema = (None
+                               if isinstance(self._plan, P.IterativeKernel)
+                               else self._plan.schema(self._catalog))
                     with OT.span("persist", op="save", bucket=bucket):
                         _save_persisted_exec(
                             store, _exec_digest(self.cache_key, bucket),
                             exe, self.engine_name, self._param_specs,
-                            self._plan.schema(self._catalog),
-                            bucket=bucket)
+                            bschema, bucket=bucket)
         return exe
 
     def count(self, **params: Any) -> int:
@@ -1297,7 +1357,9 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
                device_cache: Optional[ENG.DeviceCache] = None,
                compile_cache: Optional[CompileCache] = None,
                native: bool = False, mesh: Optional[Any] = None,
-               axis: str = "data", join_index: bool = True) -> Lowered:
+               axis: str = "data", join_index: bool = True,
+               memory_budget: Optional[int] = None,
+               morsel_rows: Optional[int] = None) -> Lowered:
     """Lower an (already optimized) plan for ``engine``.
 
     The DataFrame front end (``df.lower(engine=...)``) optimizes first
@@ -1308,6 +1370,18 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     (DESIGN.md section 10): every join keeps its in-program argsort.
     This is the cold/baseline path benchmarks compare against; templates
     lowered with and without the cache get distinct cache keys.
+
+    ``memory_budget`` (bytes) declares how much fast memory the spine
+    stream may occupy: a plan whose bound-column working set exceeds it
+    is rewritten for out-of-core morsel execution
+    (:func:`repro.core.morsel.plan_morsels` -- the scan streams in
+    fixed-size chunks through a ``fori_loop`` and partial aggregates
+    merge with the parallel engine's recomposition rules).
+    ``morsel_rows`` forces an explicit morsel size instead.  Both
+    compose with ``native=True`` (kernels see morsel-sized streams) and
+    with ``engine="parallel"`` (each shard streams its own morsels
+    before the cross-shard merge); the morsel size is part of the
+    template fingerprint.
 
     ``native=True`` (or ``engine="compiled-native"``, the registry
     alias) runs the :mod:`repro.native` dispatch pass over the plan
@@ -1327,20 +1401,38 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     report lands on ``Lowered.dispatch_report()``.
     """
     dispatch_report = None
+    out_of_core = memory_budget is not None or morsel_rows is not None
     if engine == "parallel":
         # lazy import: registers the parallel engine; the shard planner
         # handles native annotation itself (partial aggregates first)
+        # and the morsel wrap (per-shard partials stream their morsels)
         from repro.core import parallel as PAR
         with OT.span("shard_plan", axis=axis, native=native):
             p, dispatch_report = PAR.shard_plan(p, catalog, mesh=mesh,
                                                 axis=axis, native=native,
-                                                join_index=join_index)
+                                                join_index=join_index,
+                                                memory_budget=memory_budget,
+                                                morsel_rows=morsel_rows)
     else:
         if mesh is not None:
             raise ValueError(
                 f"mesh= applies to the 'parallel' engine, got {engine!r}")
         if native and engine == "compiled":
             engine = "compiled-native"
+        if out_of_core:
+            if engine not in ("compiled", "compiled-native"):
+                raise ValueError(
+                    "memory_budget/morsel_rows apply to the compiled, "
+                    f"compiled-native and parallel engines, got {engine!r}")
+            # morsel wrap BEFORE native annotation: the dispatch pass
+            # must see (and kernel-annotate) the partial aggregate the
+            # loop body actually computes
+            from repro.core import morsel as MO
+            with OT.span("morsel_plan", budget=memory_budget or 0,
+                         morsel_rows=morsel_rows or 0):
+                p = MO.plan_morsels(p, catalog,
+                                    memory_budget=memory_budget,
+                                    morsel_rows=morsel_rows)
         if engine == "compiled-native":
             # lazy import: registers the patterns + the engine alias
             from repro.native import dispatch as ND

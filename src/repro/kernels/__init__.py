@@ -19,6 +19,18 @@ compile natively on TPU; ``ops`` picks the mode from the backend via
 import jax
 
 
+class KernelBudgetError(ValueError):
+    """A kernel was invoked outside its static resource envelope (group
+    domain over ``MAX_GROUPS``, malformed block geometry, ...).
+
+    Raised by explicit checks -- never ``assert`` -- so the guards
+    survive ``python -O``.  The native dispatch eligibility layer
+    (``repro.native.patterns``) screens these limits *before* emitting a
+    kernel and routes over-budget fragments to the scatter/XLA
+    fallbacks; seeing this exception at runtime means a caller bypassed
+    eligibility."""
+
+
 def should_interpret() -> bool:
     """Pallas interpret-mode fallback: anything that is not a TPU."""
     return jax.default_backend() != "tpu"

@@ -55,12 +55,19 @@ DEFAULT_BLOCK_ROWS = 256
 SCATTER_MAX_GROUPS = 1 << 20
 
 
-def pad_build(x: jnp.ndarray, fill) -> jnp.ndarray:
+def pad_build(x: jnp.ndarray, fill,
+              slab_rows: Optional[int] = None) -> jnp.ndarray:
     """Pad a 1-D build-side array to a lane multiple, as a [rows, 128]
     resident block.  Key arrays pad with +inf (no probe ever matches),
-    masks and payload with 0."""
+    masks and payload with 0.  With ``slab_rows`` the row count is
+    additionally padded to a slab multiple, so the paged layout tiles
+    evenly (see :func:`join_probe_agg`)."""
     n = x.shape[0]
     padded = (n + LANES - 1) // LANES * LANES
+    if slab_rows is not None:
+        rows = padded // LANES
+        rows = (rows + slab_rows - 1) // slab_rows * slab_rows
+        padded = rows * LANES
     x = jnp.pad(x, (0, padded - n), constant_values=fill)
     return x.reshape(padded // LANES, LANES)
 
@@ -92,6 +99,7 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
                    ops: Optional[Sequence[str]] = None,
                    fills: Optional[Sequence[float]] = None,
                    accum: str = "onehot",
+                   slab_rows: Optional[int] = None,
                    interpret: bool = False):
     """Run the fused probe/gather/filter/aggregate pass.
 
@@ -99,15 +107,55 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
     [brows, 128] resident blocks (see :func:`pad_build`).  Keyless
     (``num_groups=None``): returns ``n_out`` [1, 128] lane partials.
     Grouped: returns the [n_out, G] f32 group accumulator.
+
+    ``slab_rows`` selects the **paged** build layout for build sides too
+    large for whole-VMEM residency: the grid grows a slab dimension and
+    each build array streams HBM->VMEM one ``[slab_rows, 128]`` slab at
+    a time (Pallas double-buffers the loads), with the slab dimension
+    outermost so every slab is paged in once and all probe blocks
+    stream against it.  Correctness needs no re-merge: each contiguous
+    slab of the globally sorted build keys is itself sorted, a key
+    matches in exactly one slab (``probe_sorted`` misses elsewhere, and
+    the +inf padding never matches), so out-of-slab rows contribute the
+    neutral element and the accumulator composes across slabs exactly
+    like extra grid steps.
     """
+    from repro.kernels import KernelBudgetError
     rows = probe_cols[0].shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
+    if rows % block_rows != 0:
+        raise KernelBudgetError(
+            f"join_probe: probe rows={rows} not a multiple of "
+            f"block_rows={block_rows}")
     n_probe = len(probe_cols)
     n_build = len(build_arrays)
-    grid = (rows // block_rows,)
-    pspec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
-    bspecs = [pl.BlockSpec(b.shape, lambda i, s: (0, 0))
-              for b in build_arrays]
+    if slab_rows is None:
+        grid = (rows // block_rows,)
+        pspec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
+        bspecs = [pl.BlockSpec(b.shape, lambda i, s: (0, 0))
+                  for b in build_arrays]
+    else:
+        brows = build_arrays[0].shape[0]
+        if brows % slab_rows != 0:
+            raise KernelBudgetError(
+                f"join_probe: build rows={brows} not a multiple of "
+                f"slab_rows={slab_rows} (pad with pad_build(...,"
+                " slab_rows=))")
+        # slab outermost (slowest): each slab pages into VMEM once,
+        # every probe block streams against it before the next slab
+        grid = (brows // slab_rows, rows // block_rows)
+        pspec = pl.BlockSpec((block_rows, LANES), lambda b, i, s: (i, 0))
+        bspecs = [pl.BlockSpec((slab_rows, LANES), lambda b, i, s: (b, 0))
+                  for b_arr in build_arrays]
+
+    def _edges():
+        """(first-program, last-program) predicates over the grid."""
+        if slab_rows is None:
+            i = pl.program_id(0)
+            return i == 0, i == pl.num_programs(0) - 1
+        b, i = pl.program_id(0), pl.program_id(1)
+        return ((b == 0) & (i == 0),
+                (b == pl.num_programs(0) - 1)
+                & (i == pl.num_programs(1) - 1))
 
     if num_groups is None:
         def kern(scal_ref, *refs):
@@ -115,9 +163,9 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
             b_refs = refs[n_probe:n_probe + n_build]
             out_refs = refs[n_probe + n_build:n_probe + n_build + n_out]
             acc_refs = refs[n_probe + n_build + n_out:]
-            i = pl.program_id(0)
+            first, last = _edges()
 
-            @pl.when(i == 0)
+            @pl.when(first)
             def _init():
                 for a in acc_refs:
                     a[...] = jnp.zeros_like(a)
@@ -128,17 +176,18 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
             for j in range(n_out):
                 acc_refs[j][...] += jnp.sum(vals[j], axis=0, keepdims=True)
 
-            @pl.when(i == pl.num_programs(0) - 1)
+            @pl.when(last)
             def _flush():
                 for j in range(n_out):
                     out_refs[j][...] = acc_refs[j][...]
 
+        zero_map = ((lambda i, s: (0, 0)) if slab_rows is None
+                    else (lambda b, i, s: (0, 0)))
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[pspec] * n_probe + bspecs,
-            out_specs=[pl.BlockSpec((1, LANES),
-                                    lambda i, s: (0, 0))] * n_out,
+            out_specs=[pl.BlockSpec((1, LANES), zero_map)] * n_out,
             scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)] * n_out,
         )
         return pl.pallas_call(
@@ -150,10 +199,18 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
         )(scal, *probe_cols, *build_arrays)
 
     # -- grouped ---------------------------------------------------------------
-    assert accum in ("onehot", "scatter"), accum
-    assert num_groups <= SCATTER_MAX_GROUPS, num_groups
+    if accum not in ("onehot", "scatter"):
+        raise KernelBudgetError(f"join_probe: unknown accum {accum!r}")
+    if num_groups > SCATTER_MAX_GROUPS:
+        raise KernelBudgetError(
+            f"join_probe: group domain {num_groups} exceeds "
+            f"SCATTER_MAX_GROUPS={SCATTER_MAX_GROUPS}; the fragment "
+            "must keep its generic XLA lowering")
     ops = tuple(ops) if ops is not None else ("sum",) * n_out
-    assert len(ops) == n_out and set(ops) <= {"sum", "max"}, ops
+    if len(ops) != n_out or not set(ops) <= {"sum", "max"}:
+        raise KernelBudgetError(
+            f"join_probe: ops {ops!r} must be {n_out} entries drawn "
+            "from {'sum', 'max'}")
     fills = tuple(fills) if fills is not None else (0.0,) * n_out
     max_rows = [j for j, op in enumerate(ops) if op == "max"]
 
@@ -161,9 +218,9 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
         p_refs = refs[:n_probe]
         b_refs = refs[n_probe:n_probe + n_build]
         o_ref, acc_ref = refs[n_probe + n_build], refs[n_probe + n_build + 1]
-        i = pl.program_id(0)
+        first, last = _edges()
 
-        @pl.when(i == 0)
+        @pl.when(first)
         def _init():
             # scalar-literal init: Pallas kernels must not capture
             # array constants
@@ -203,15 +260,17 @@ def join_probe_agg(body_fn: BodyFn, probe_cols: Sequence[jnp.ndarray],
                 acc = acc.at[j].set(row)
         acc_ref[...] = acc
 
-        @pl.when(i == pl.num_programs(0) - 1)
+        @pl.when(last)
         def _flush():
             o_ref[...] = acc_ref[...]
 
+    zero_map = ((lambda i, s: (0, 0)) if slab_rows is None
+                else (lambda b, i, s: (0, 0)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[pspec] * n_probe + bspecs,
-        out_specs=pl.BlockSpec((n_out, num_groups), lambda i, s: (0, 0)),
+        out_specs=pl.BlockSpec((n_out, num_groups), zero_map),
         scratch_shapes=[pltpu.VMEM((n_out, num_groups), jnp.float32)],
     )
     return pl.pallas_call(

@@ -32,6 +32,22 @@ DEFAULT_BLOCK_ROWS = 64
 MAX_GROUPS = 512
 
 
+def _check_limits(rows: int, block_rows: int, num_groups: int) -> None:
+    """Explicit envelope checks (assert would vanish under python -O):
+    the dispatch eligibility layer screens these before emitting, so a
+    failure here means a caller bypassed eligibility."""
+    from repro.kernels import KernelBudgetError
+    if rows % block_rows != 0:
+        raise KernelBudgetError(
+            f"segmented_reduce: rows={rows} not a multiple of "
+            f"block_rows={block_rows}")
+    if num_groups > MAX_GROUPS:
+        raise KernelBudgetError(
+            f"segmented_reduce: group domain {num_groups} exceeds the "
+            f"one-hot accumulator limit MAX_GROUPS={MAX_GROUPS}; route "
+            "this fragment to the scatter/XLA fallback")
+
+
 def _kernel(vals_ref, codes_ref, o_ref, acc_ref):
     i = pl.program_id(0)
 
@@ -61,8 +77,7 @@ def segmented_sum(values: jnp.ndarray, codes: jnp.ndarray, num_groups: int,
 
     Padded elements must carry value 0 (any code)."""
     rows = values.shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
-    assert num_groups <= MAX_GROUPS
+    _check_limits(rows, block_rows, num_groups)
     grid = (rows // block_rows,)
     spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     return pl.pallas_call(
@@ -112,8 +127,7 @@ def segmented_multi_sum(value_fn: ValueFn, cols: Sequence[jnp.ndarray],
     emit it for excluded rows, and padded elements must carry it too.
     """
     rows = codes.shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
-    assert num_groups <= MAX_GROUPS
+    _check_limits(rows, block_rows, num_groups)
     n_cols = len(cols)
     ops = tuple(ops) if ops is not None else ("sum",) * n_out
     assert len(ops) == n_out and set(ops) <= {"sum", "max"}, ops

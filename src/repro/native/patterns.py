@@ -733,6 +733,30 @@ class _ProbeAnalysis:
     key_doms: Any = None
     accum: Optional[str] = None   # "onehot" | "scatter" | None (keyless)
     block_default: Optional[int] = None
+    slab_rows: Optional[int] = None  # paged build side; None = resident
+
+
+_SLAB_ROWS_DEFAULT = 512  # [slab_rows, 128] build page; halved until it fits
+
+
+def _choose_slab(n_build: int, brows: int, n_in: int, n_out: int,
+                 num_groups: Optional[int] = None, n_max: int = 0,
+                 acc_bytes: int = 0
+                 ) -> Tuple[Optional[int], Optional[int]]:
+    """Largest build-side slab (halving from :data:`_SLAB_ROWS_DEFAULT`,
+    floor 1) whose double-buffered HBM->VMEM page plus probe blocks and
+    ``acc_bytes`` of accumulator fits the VMEM budget.  Returns
+    ``(slab_rows, block_rows)`` or ``(None, None)`` if even a one-row
+    slab spills."""
+    slab = min(_SLAB_ROWS_DEFAULT, max(1, brows // 2))
+    while slab >= 1:
+        paged = n_build * slab * LANES * 4 * 2  # x2: Pallas double-buffers
+        bd = R.choose_block_rows(n_in, n_out, num_groups, n_max=n_max,
+                                 resident_bytes=paged + acc_bytes)
+        if bd is not None:
+            return slab, bd
+        slab //= 2
+    return None, None
 
 
 def _analyze_probe(frag: R.Fragment, catalog: P.Catalog) -> _ProbeAnalysis:
@@ -800,7 +824,14 @@ def _analyze_probe_uncached(frag: R.Fragment,
         out.block_default = R.choose_block_rows(n_in, n_out,
                                                 resident_bytes=resident)
         if out.block_default is None:
-            return _ProbeAnalysis(reason="input blocks exceed VMEM budget")
+            # whole-build residency spills VMEM: switch to the tiled
+            # variant that pages the build side HBM->VMEM in slabs
+            out.slab_rows, out.block_default = _choose_slab(
+                n_build, b_pad // LANES, n_in, n_out)
+            if out.block_default is None:
+                return _ProbeAnalysis(reason=(
+                    "input blocks exceed VMEM budget even with a "
+                    "paged build side"))
         return out
     try:
         child_info = L.static_info(frag.root.child, catalog)
@@ -815,6 +846,11 @@ def _analyze_probe_uncached(frag: R.Fragment,
             n_in, n_out, out.domain, n_max=n_max, resident_bytes=resident)
         if out.block_default is not None:
             return out
+        out.slab_rows, out.block_default = _choose_slab(
+            n_build, b_pad // LANES, n_in, n_out, out.domain, n_max=n_max)
+        if out.block_default is not None:
+            return out
+        out.slab_rows = None
         # one-hot spills VMEM: fall through to the scatter path
     if out.domain > JP_K.SCATTER_MAX_GROUPS:
         return _ProbeAnalysis(reason=(
@@ -832,7 +868,11 @@ def _analyze_probe_uncached(frag: R.Fragment,
     out.block_default = R.choose_block_rows(n_in, n_out,
                                             resident_bytes=acc_bytes)
     if out.block_default is None:
-        return _ProbeAnalysis(reason="accumulator exceeds VMEM budget")
+        out.slab_rows, out.block_default = _choose_slab(
+            n_build, b_pad // LANES, n_in, n_out,
+            acc_bytes=n_out * out.domain * 4 * 2)
+        if out.block_default is None:
+            return _ProbeAnalysis(reason="accumulator exceeds VMEM budget")
     return out
 
 
@@ -857,11 +897,11 @@ def _emit_join_probe(frag: R.Fragment, catalog: P.Catalog):
     spec = ana.spec
     (plan_, cnt_slot, n_out, ops, fills, pred_fns, val_fns, key_fns,
      probe_cols, build_cols, param_names, strides, domain, key_doms,
-     accum, block_default) = (
+     accum, block_default, slab_rows) = (
         ana.plan_, ana.cnt_slot, ana.n_out, ana.ops, ana.fills,
         ana.pred_fns, ana.val_fns, ana.key_fns, ana.probe_cols,
         ana.build_cols, ana.param_names, ana.strides, ana.domain,
-        ana.key_doms, ana.accum, ana.block_default)
+        ana.key_doms, ana.accum, ana.block_default, ana.slab_rows)
     out_info = L.static_info(frag.root, catalog)
     left_on, doms = join.left_on, spec.doms
     masked_build = spec.masked
@@ -933,20 +973,23 @@ def _emit_join_probe(frag: R.Fragment, catalog: P.Catalog):
             left.the_mask().astype(jnp.float32), block_rows, 0.0))
         # build arrays ride in sorted by the cached permutation, so the
         # in-kernel probe position indexes them directly
-        barrays = [JP_K.pad_build(keys.astype(jnp.float32), jnp.inf)]
+        barrays = [JP_K.pad_build(keys.astype(jnp.float32), jnp.inf,
+                                  slab_rows=slab_rows)]
         if masked_build:
             barrays.append(JP_K.pad_build(
-                right.the_mask().astype(jnp.float32)[perm], 0.0))
+                right.the_mask().astype(jnp.float32)[perm], 0.0,
+                slab_rows=slab_rows))
         for name in build_cols:
             barrays.append(JP_K.pad_build(
-                right.cols[name].astype(jnp.float32)[perm], 0.0))
+                right.cols[name].astype(jnp.float32)[perm], 0.0,
+                slab_rows=slab_rows))
 
         out_cols: Dict[str, jnp.ndarray] = {}
         if grouped:
             out = JP_K.join_probe_agg(
                 body_fn, pblocks, barrays, scal, n_out, block_rows,
                 num_groups=domain, ops=ops, fills=fills, accum=accum,
-                interpret=interpret)
+                slab_rows=slab_rows, interpret=interpret)
             cnt = out[cnt_slot]
             gidx = jnp.arange(domain, dtype=jnp.int32)
             for k, s, dk in zip(frag.root.keys, strides, key_doms):
@@ -956,7 +999,8 @@ def _emit_join_probe(frag: R.Fragment, catalog: P.Catalog):
             return L.Stream(out_cols, cnt > 0, out_info)
 
         outs = JP_K.join_probe_agg(body_fn, pblocks, barrays, scal,
-                                   n_out, block_rows, interpret=interpret)
+                                   n_out, block_rows, slab_rows=slab_rows,
+                                   interpret=interpret)
         sums = [jnp.sum(o) for o in outs]
         cnt = sums[cnt_slot] if cnt_slot is not None else None
         for a, (kind, slot) in zip(aggs, plan_):

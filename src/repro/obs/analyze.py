@@ -33,25 +33,28 @@ def _fmt_bytes(n: int) -> str:
     return f"{n}B"
 
 
-def _plan_tree(p, catalog, scan_cols: Dict[int, List[str]]) -> str:
+def _plan_tree(p, catalog, scan_cols: Dict[tuple, List[str]]) -> str:
+    """Render the plan; ``scan_cols`` is keyed by root-to-scan child-index
+    path (NOT ``id(node)`` -- addresses are recycled after GC and do not
+    survive the plan copies the lowering pipeline makes)."""
     from repro.core import plan as P
     lines: List[str] = []
 
-    def rec(node, depth):
+    def rec(node, depth, path):
         desc = node.describe()
         if isinstance(node, P.Scan) and node.table in catalog:
             tbl = catalog.table(node.table)
-            cols = scan_cols.get(id(node))
+            cols = scan_cols.get(path)
             names = cols if cols is not None else list(tbl.schema.names)
             nbytes = sum(tbl.columns[c].data.nbytes
                          for c in names if c in tbl.columns)
             desc += (f"  [rows={tbl.num_rows} cols={len(names)} "
                      f"bytes={_fmt_bytes(nbytes)}]")
         lines.append("  " * depth + ("*" if depth == 0 else "+- ") + desc)
-        for c in node.children():
-            rec(c, depth + 1)
+        for i, c in enumerate(node.children()):
+            rec(c, depth + 1, path + (i,))
 
-    rec(p, 0)
+    rec(p, 0, ())
     return "\n".join(lines)
 
 
@@ -101,7 +104,7 @@ def explain_analyze(df, engine: str = "compiled", native: bool = False,
     plan = lowered.plan()
     catalog = df.ctx.catalog
     try:
-        scan_cols = L.required_scan_columns(plan, catalog)
+        scan_cols = L.required_scan_columns_by_path(plan, catalog)
     except Exception:
         scan_cols = {}
     try:

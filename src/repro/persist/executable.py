@@ -26,12 +26,15 @@ are covered by the cache key), so one artifact serves any catalog whose
 table metadata matches -- the same catalog-free contract as the
 in-memory :data:`repro.core.stages.Executor`.
 
-Plans whose fingerprints embed process-local function identity
-(``expr.Udf``, ``MapBatches``, ``IterativeKernel`` -- all fingerprint
-``name@id(fn)``) are refused: their cache keys cannot match across
-processes, so persisting them could never hit and, worse, a *false*
-stable key could serve a stale closure.  :func:`plan_persistable` is
-the gate, and refusals are counted as ``unsupported``.
+Plans that capture Python functions (``expr.Udf``, ``MapBatches``,
+``IterativeKernel``) fingerprint the function *content* -- sha256 over
+bytecode, constants and closure values (:mod:`repro.core.fnhash`,
+``name#token`` markers) -- so their cache keys are stable across
+processes and they persist like any relational plan.  The historical
+``name@id(fn)`` address markers made that impossible; the ``@hexaddr``
+regex below stays as a refusal gate so any future fingerprint that
+regresses to process-local identity is counted ``unsupported`` rather
+than persisted under a key that could serve a stale closure.
 """
 from __future__ import annotations
 
@@ -54,21 +57,13 @@ _LOCAL_ID = re.compile(r"@[0-9a-f]+[,)\]]")
 
 
 def plan_persistable(p: P.Plan) -> Tuple[bool, str]:
-    """Can this plan's compiled form be addressed across processes?"""
+    """Can this plan's compiled form be addressed across processes?
 
-    verdict: List[str] = []
-
-    def rec(n: P.Plan):
-        if isinstance(n, (P.MapBatches, P.IterativeKernel)):
-            verdict.append(f"{type(n).__name__} captures a process-local "
-                           "Python function")
-            return
-        for c in n.children():
-            rec(c)
-
-    rec(p)
-    if verdict:
-        return False, verdict[0]
+    UDF / MapBatches / IterativeKernel plans are admitted: their
+    fingerprints carry content hashes (``#token``), not addresses.
+    Only a fingerprint that still embeds ``@hexaddr`` process-local
+    identity is refused.
+    """
     if _LOCAL_ID.search(p.fingerprint()):
         return False, ("plan fingerprint embeds process-local function "
                        "identity (udf)")

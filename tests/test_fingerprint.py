@@ -1,0 +1,190 @@
+"""Content-hashed function fingerprints (repro.core.fnhash).
+
+The regression this file pins: plan fingerprints used to embed
+``id(fn)`` -- the CPython object address.  CPython reuses freed
+addresses aggressively, so a GC'd function followed by a *different*
+definition at the same address produced an identical fingerprint and
+could silently serve a stale compiled executable from the template
+cache.  Fingerprints now carry a sha256 content token (``name#token``),
+so identity follows what the function *does*, not where it lives.
+"""
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import CompileCache, FlareContext, col, sum_, udf
+from repro.core import fnhash as FH
+from repro.core import stages as S
+from repro.relational.table import Table
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    rng = np.random.default_rng(11)
+    c = FlareContext()
+    c.register("t", Table.from_arrays({
+        "a": rng.uniform(0.0, 10.0, 256),
+        "g": rng.integers(0, 4, 256).astype(np.int32),
+    }, domains={"g": 4}))
+    return c
+
+
+def _fresh_fn(body: str):
+    """Define a function from source in a throwaway namespace, so its
+    lifetime (and address) is fully under the test's control."""
+    ns = {}
+    exec(f"def f(cols):\n    return {{'x': {body}}}", ns)
+    return ns["f"]
+
+
+# ---------------------------------------------------------------------------
+# fn_token semantics
+# ---------------------------------------------------------------------------
+
+
+def test_token_stable_for_identical_definitions():
+    f1 = _fresh_fn("cols['a'] * 2.0")
+    f2 = _fresh_fn("cols['a'] * 2.0")
+    assert f1 is not f2
+    assert FH.fn_token(f1) == FH.fn_token(f2)
+
+
+def test_token_tracks_constants_and_body():
+    base = FH.fn_token(_fresh_fn("cols['a'] * 2.0"))
+    assert FH.fn_token(_fresh_fn("cols['a'] * 3.0")) != base
+    assert FH.fn_token(_fresh_fn("cols['a'] + 2.0")) != base
+
+
+def test_token_tracks_closure_values_and_defaults():
+    def make(c):
+        def f(x):
+            return x * c
+        return f
+
+    assert FH.fn_token(make(2.0)) != FH.fn_token(make(3.0))
+    assert FH.fn_token(make(2.0)) == FH.fn_token(make(2.0))
+
+    def d1(x, k=1.0):
+        return x + k
+
+    def d2(x, k=2.0):
+        return x + k
+
+    assert FH.fn_token(d1) != FH.fn_token(d2)
+
+
+def test_token_handles_nested_functions_and_arrays():
+    def outer_a(x):
+        return (lambda v: v + 1.0)(x)
+
+    def outer_b(x):
+        return (lambda v: v + 2.0)(x)
+
+    assert FH.fn_token(outer_a) != FH.fn_token(outer_b)
+
+    arr1, arr2 = np.arange(4), np.arange(1, 5)
+
+    def g1(x):
+        return x + arr1
+
+    def g2(x):
+        return x + arr2
+
+    assert FH.fn_token(g1) != FH.fn_token(g2)
+
+
+def test_token_is_address_free():
+    class Weird:
+        pass
+
+    w = Weird()
+
+    def f(x):
+        return (x, w)
+
+    # the default repr of a captured object carries " at 0x...": the
+    # token must strip it, or GC address reuse leaks back in
+    assert hex(id(w))[2:] not in FH.fn_token(f)
+
+
+# ---------------------------------------------------------------------------
+# THE regression: same address, different function, distinct cache key
+# ---------------------------------------------------------------------------
+
+
+def test_address_reuse_gets_distinct_cache_keys():
+    """del + gc + re-def: CPython frequently hands the new function the
+    old address.  Whether or not the allocator cooperates on this run,
+    the content tokens must differ; when it does cooperate this is
+    exactly the stale-executable scenario id() keyed wrongly."""
+    reused = False
+    for _ in range(32):
+        f1 = _fresh_fn("cols['a'] * 2.0")
+        addr1, tok1 = id(f1), FH.fn_token(f1)
+        del f1
+        gc.collect()
+        f2 = _fresh_fn("cols['a'] * 3.0")
+        tok2 = FH.fn_token(f2)
+        assert tok1 != tok2
+        if id(f2) == addr1:
+            reused = True  # id() would have collided; tokens did not
+            break
+        del f2
+        gc.collect()
+    assert reused, "allocator never reused the address; inconclusive run"
+
+
+def test_mapbatches_fingerprint_distinct_after_address_reuse(ctx):
+    def key_for(fn):
+        df = ctx.table("t").map_batches(fn, columns=["a"],
+                                        schema={"x": "float64"})
+        return df.plan.fingerprint(), S.template_key(
+            "compiled", df.plan, ctx.catalog)
+
+    f1 = _fresh_fn("cols['a'] * 2.0")
+    fp1, key1 = key_for(f1)
+    del f1
+    gc.collect()
+    f2 = _fresh_fn("cols['a'] * 3.0")
+    fp2, key2 = key_for(f2)
+    assert fp1 != fp2 and key1 != key2
+    assert "#" in fp1 and "@" not in fp1  # content marker, no address
+
+
+def test_stale_executable_not_served_across_redefinition(ctx):
+    """End to end: compile with fn A, destroy it, re-define a different
+    fn (address may be reused) -- the second compile must MISS the
+    shared cache and produce the new function's numbers."""
+    cache = CompileCache()
+
+    def run(fn):
+        df = ctx.table("t").map_batches(fn, columns=["a"],
+                                        schema={"x": "float64"})
+        out = (df.group_by("g").agg(sum_(col("x"), "sx"))
+               .lower(engine="compiled")
+               .compile(cache=cache).collect())
+        return np.asarray(out["sx"])
+
+    f1 = _fresh_fn("cols['a'] * 2.0")
+    got1 = run(f1)
+    del f1
+    gc.collect()
+    f2 = _fresh_fn("cols['a'] * 3.0")
+    got2 = run(f2)
+    np.testing.assert_allclose(got2, got1 * 1.5, rtol=1e-6)
+    assert cache.misses == 2  # a fresh compile each time, no stale hit
+
+
+def test_udf_and_train_fingerprints_use_content_markers(ctx):
+    @udf("float64")
+    def sqr(x):
+        return x * x
+
+    q = ctx.table("t").select(("x", sqr(col("a"))))
+    assert "#" in q.plan.fingerprint()
+    assert "@" not in q.plan.fingerprint()
+
+    tr = ctx.table("t").train("kmeans", columns=["a"], k=2, max_iter=3)
+    fp = tr.plan.fingerprint()
+    assert "#" in fp and "@" not in fp

@@ -1,0 +1,356 @@
+"""Out-of-core morsel execution (DESIGN.md section 14).
+
+Covers the morsel planner (budget -> morsel size), the MorselMerge
+streaming loop against the monolithic compiled path (the differential
+oracle), boundary geometry (non-divisible tables, one-row morsels,
+single-morsel bit-identity, empty selections), composition with the
+native dispatch pass and the parallel engine, the budget error
+surface, and the tiled join-probe fallback that pages an over-budget
+build side HBM->VMEM in slabs instead of rejecting the fragment.
+"""
+import importlib
+
+import numpy as np
+import pytest
+
+from conftest import assert_results_equal
+from repro.core import (FlareContext, any_, avg, col, count, lit, max_,
+                        min_, sum_)
+from repro.core import lower as L
+from repro.core import morsel as MO
+from repro.core import plan as P
+from repro.kernels import KernelBudgetError
+from repro.relational import queries as Q
+import repro.native.registry as REG
+
+PAT = importlib.import_module("repro.native.patterns")
+
+SF = 0.01
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    c = FlareContext()
+    Q.register_tpch(c, sf=SF)
+    return c
+
+
+def _collect(df, **kwargs):
+    return df.lower(engine="compiled", **kwargs).compile().collect()
+
+
+# ---------------------------------------------------------------------------
+# differential: morsel loop vs monolithic program
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3", "q6"])
+def test_morsel_matches_monolithic(ctx, qname):
+    df = Q.QUERIES[qname](ctx)
+    base = _collect(df)
+    for kwargs in (dict(morsel_rows=1024),
+                   dict(morsel_rows=777),      # non-lane-aligned, non-divisor
+                   dict(memory_budget=64 * 1024)):
+        got = _collect(df, **kwargs)
+        assert_results_equal(base, got, rtol=2e-4,
+                             msg=f"{qname}/{kwargs}")
+
+
+def test_morsel_rows_one(ctx):
+    """One row per morsel: every boundary is a morsel boundary."""
+    df = Q.q6(ctx)
+    assert_results_equal(_collect(df), _collect(df, morsel_rows=1),
+                         rtol=2e-4)
+
+
+def test_single_morsel_covering_table_is_bit_identical(ctx):
+    """morsel_rows == the exact table length: one unpadded morsel whose
+    slice is the whole stream -- the reductions see identical operands
+    in identical order, so the result is bit-identical, not just
+    close."""
+    n = ctx.catalog.table("lineitem").num_rows
+    df = Q.q6(ctx)
+    base, got = _collect(df), _collect(df, morsel_rows=n)
+    for k in base:
+        assert np.array_equal(np.asarray(base[k]), np.asarray(got[k])), k
+
+
+def test_grouped_min_max_any_count_avg(ctx):
+    """Every merge op of the recomposition table crosses a morsel
+    boundary: min/max/any merge by extremum, count/sum by addition,
+    avg recomposes from the merged sum and count."""
+    df = (ctx.table("lineitem")
+          .group_by("l_returnflag")
+          .agg(min_(col("l_quantity"), "min_q"),
+               max_(col("l_quantity"), "max_q"),
+               avg(col("l_discount"), "avg_d"),
+               sum_(col("l_extendedprice"), "sum_p"),
+               any_(col("l_tax"), "some_tax"),
+               count("n"))
+          .sort("l_returnflag"))
+    assert_results_equal(_collect(df), _collect(df, morsel_rows=555),
+                         rtol=2e-4)
+
+
+def test_empty_selection_and_empty_morsels(ctx):
+    """A predicate selecting nothing: every morsel contributes only
+    neutral elements, keyless counts land on 0."""
+    df = (ctx.table("lineitem")
+          .filter(col("l_quantity") < lit(-1.0))
+          .agg(sum_(col("l_extendedprice"), "s"), count("n")))
+    got = _collect(df, morsel_rows=256)
+    assert np.atleast_1d(np.asarray(got["n"]))[0] == 0
+    assert np.atleast_1d(np.asarray(got["s"]))[0] == 0.0
+    assert_results_equal(_collect(df), got, rtol=2e-4)
+
+
+def test_morsel_composes_with_native_dispatch(ctx):
+    """The dispatch pass kernel-annotates the partial aggregate inside
+    the morsel loop; results still match the plain compiled path."""
+    for qname in ("q1", "q6"):
+        df = Q.QUERIES[qname](ctx)
+        low = df.lower(engine="compiled", native=True, morsel_rows=1024)
+        assert MO.find_morsel_node(low.plan()) is not None
+        assert_results_equal(_collect(df), low.compile().collect(),
+                             rtol=2e-4, msg=qname)
+
+
+def test_morsel_composes_with_parallel_engine(subproc):
+    """Per-shard morsel streaming behind the cross-shard collective
+    merge: shard, then morselize each shard's partial."""
+    out = subproc(4, """
+from conftest import assert_results_equal
+from repro.core import FlareContext
+from repro.relational import queries as Q
+ctx = FlareContext()
+Q.register_tpch(ctx, sf=0.01)
+for qname in ("q1", "q6"):
+    df = Q.QUERIES[qname](ctx)
+    base = df.lower(engine="compiled").compile().collect()
+    got = df.lower(engine="parallel",
+                   memory_budget=64 * 1024).compile().collect()
+    assert_results_equal(base, got, rtol=2e-4, msg=qname)
+print("parallel-morsel-ok")
+""")
+    assert "parallel-morsel-ok" in out
+
+
+# ---------------------------------------------------------------------------
+# the planner: budget -> morsel size, and the error surface
+# ---------------------------------------------------------------------------
+
+
+def test_budget_drives_morsel_size(ctx):
+    df = Q.q6(ctx)
+    budget = 64 * 1024
+    low = df.lower(engine="compiled", memory_budget=budget)
+    node = MO.find_morsel_node(low.plan())
+    assert node is not None
+    n_cols = len(L.required_scan_columns(
+        df.lower(engine="compiled").plan(), ctx.catalog)[id(node.spine)])
+    assert node.morsel_rows % MO.LANES == 0
+    assert MO.working_set_bytes(n_cols, node.morsel_rows) <= budget
+    # one more lane row would blow the budget
+    assert MO.working_set_bytes(n_cols,
+                                node.morsel_rows + MO.LANES) > budget
+
+
+def test_generous_budget_keeps_monolithic_plan(ctx):
+    low = Q.q6(ctx).lower(engine="compiled", memory_budget=1 << 34)
+    assert MO.find_morsel_node(low.plan()) is None
+
+
+def test_morsel_rows_are_template_keyed(ctx):
+    """Different morsel sizes are different programs: the fingerprint
+    (hence the executable-cache template key) must not collide."""
+    df = Q.q6(ctx)
+    fps = {df.lower(engine="compiled", morsel_rows=m).plan().fingerprint()
+           for m in (128, 256, None)}
+    assert len(fps) == 3
+
+
+def test_budget_too_small_raises(ctx):
+    with pytest.raises(MO.MemoryBudgetError, match="cannot hold"):
+        Q.q6(ctx).lower(engine="compiled", memory_budget=16)
+
+
+def test_plan_without_aggregate_raises(ctx):
+    df = ctx.table("lineitem").filter(col("l_quantity") < lit(10.0))
+    with pytest.raises(MO.MemoryBudgetError,
+                       match="distributive aggregate"):
+        df.lower(engine="compiled", memory_budget=1024)
+
+
+def test_iterative_kernel_root_raises(ctx):
+    tr = ctx.table("lineitem").train(
+        "kmeans", columns=["l_quantity", "l_discount"], k=2, max_iter=3)
+    with pytest.raises(MO.MemoryBudgetError, match="IterativeKernel"):
+        tr.lower(engine="compiled", morsel_rows=128)
+
+
+def test_non_compiled_engine_raises(ctx):
+    with pytest.raises(ValueError, match="compiled"):
+        Q.q6(ctx).lower(engine="volcano", memory_budget=1024)
+
+
+def test_parallel_gather_plan_under_budget_raises(subproc):
+    """A sharded plan whose barrier gathers (no spine aggregate) cannot
+    merge morsel partials: the budget request must fail loudly, not
+    silently run out-of-budget."""
+    out = subproc(2, """
+import pytest
+from repro.core import FlareContext, col, lit
+from repro.core import morsel as MO
+ctx = FlareContext()
+from repro.relational import queries as Q
+Q.register_tpch(ctx, sf=0.01)
+df = ctx.table("lineitem").filter(col("l_quantity") < lit(2.0))
+try:
+    df.lower(engine="parallel", memory_budget=1024)
+except MO.MemoryBudgetError:
+    print("gather-raises-ok")
+""")
+    assert "gather-raises-ok" in out
+
+
+# ---------------------------------------------------------------------------
+# tiled join-probe: paged build side instead of rejection
+# ---------------------------------------------------------------------------
+
+
+def _probe_fragment(ctx, qname):
+    p = Q.QUERIES[qname](ctx).lower(engine="compiled").plan()
+    found = []
+
+    def rec(n):
+        frag = PAT._match_join_probe(n, ctx.catalog)
+        if frag is not None:
+            found.append(frag)
+        for c in n.children():
+            rec(c)
+
+    rec(p)
+    assert found, qname
+    return found[0]
+
+
+# budgets (bytes) where the resident build spills this SF's geometry
+# but a paged slab fits -- found by scanning the analysis, pinned here
+_SLAB_CASES = [("q14", 48 * 1024, None),      # keyless
+               ("q19", 64 * 1024, None),      # keyless
+               ("q3", 536 * 1024, "scatter")]  # grouped scatter
+
+
+@pytest.mark.parametrize("qname,budget,accum", _SLAB_CASES)
+def test_join_probe_pages_over_budget_build(ctx, qname, budget, accum,
+                                            monkeypatch):
+    frag = _probe_fragment(ctx, qname)
+    monkeypatch.setattr(REG, "VMEM_BUDGET_BYTES", budget)
+    ana = PAT._analyze_probe_uncached(frag, ctx.catalog)
+    assert ana.reason is None, ana.reason
+    assert ana.slab_rows is not None
+    assert ana.accum == accum
+    # without the slab fallback this geometry was a hard rejection
+    monkeypatch.setattr(PAT, "_choose_slab",
+                        lambda *a, **k: (None, None))
+    rejected = PAT._analyze_probe_uncached(frag, ctx.catalog)
+    assert rejected.reason is not None
+
+
+@pytest.mark.parametrize("qname,budget,accum", _SLAB_CASES)
+def test_join_probe_slab_differential(ctx, qname, budget, accum,
+                                      monkeypatch):
+    df = Q.QUERIES[qname](ctx)
+    base = _collect(df)
+    monkeypatch.setattr(REG, "VMEM_BUDGET_BYTES", budget)
+    low = df.lower(engine="compiled", native=True)
+    rep = low.dispatch_report()
+    assert rep.fired_patterns() == ["join-probe"], str(rep)
+    assert_results_equal(base, low.compile().collect(), rtol=2e-4,
+                         msg=qname)
+
+
+# ---------------------------------------------------------------------------
+# kernel budget errors: raises, not asserts (they survive python -O)
+# ---------------------------------------------------------------------------
+
+
+def test_segmented_reduce_geometry_raises():
+    import jax.numpy as jnp
+    from repro.kernels.segmented_reduce import kernel as SR_K
+    vals = jnp.ones((384, 128), jnp.float32)
+    segs = jnp.zeros((384, 128), jnp.int32)
+    with pytest.raises(KernelBudgetError, match="block_rows"):
+        SR_K.segmented_sum(vals, segs, num_groups=4, block_rows=250,
+                           interpret=True)
+    with pytest.raises(KernelBudgetError, match="MAX_GROUPS"):
+        SR_K.segmented_sum(vals, segs, num_groups=SR_K.MAX_GROUPS + 1,
+                           block_rows=128, interpret=True)
+
+
+def test_join_probe_geometry_raises():
+    import jax.numpy as jnp
+    from repro.kernels.join_probe import kernel as JP_K
+
+    def body(scal, pblocks, barrays):
+        return [pblocks[0]], None
+
+    probe = [jnp.ones((256, 128), jnp.float32)]
+    build = [JP_K.pad_build(jnp.arange(300.0), jnp.inf)]
+    scal = jnp.zeros((1,), jnp.float32)
+    with pytest.raises(KernelBudgetError, match="block_rows"):
+        JP_K.join_probe_agg(body, probe, build, scal, 1, 250,
+                            interpret=True)
+    with pytest.raises(KernelBudgetError, match="slab_rows"):
+        JP_K.join_probe_agg(body, probe, build, scal, 1, 128,
+                            slab_rows=5, interpret=True)
+    with pytest.raises(KernelBudgetError, match="accum"):
+        JP_K.join_probe_agg(body, probe, build, scal, 1, 128,
+                            num_groups=8, accum="bogus", interpret=True)
+    with pytest.raises(KernelBudgetError, match="SCATTER_MAX_GROUPS"):
+        JP_K.join_probe_agg(body, probe, build, scal, 1, 128,
+                            num_groups=JP_K.SCATTER_MAX_GROUPS + 1,
+                            accum="scatter", interpret=True)
+    with pytest.raises(KernelBudgetError, match="ops"):
+        JP_K.join_probe_agg(body, probe, build, scal, 1, 128,
+                            num_groups=8, ops=("median",),
+                            interpret=True)
+
+
+def test_kernel_budget_error_is_value_error():
+    assert issubclass(KernelBudgetError, ValueError)
+    assert issubclass(MO.MemoryBudgetError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# exit criterion: SF >= 1 under a ceiling the monolithic path can't meet
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_outofcore_at_scale_factor_one():
+    ctx1 = FlareContext()
+    Q.register_tpch(ctx1, sf=1.0)
+    n = ctx1.catalog.table("lineitem").num_rows
+    assert n >= 5_000_000  # ~6M at SF=1 (generator rounds)
+    budget = 64 * (1 << 20)  # 64 MiB: q1's ~7-column monolithic
+    for qname in ("q1", "q3", "q6"):  # working set needs ~340 MiB
+        df = Q.QUERIES[qname](ctx1)
+        p = df.lower(engine="compiled").plan()
+        node = MO.find_morsel_node(
+            df.lower(engine="compiled", memory_budget=budget).plan())
+        assert node is not None, qname  # the ceiling actually binds
+        n_cols = len(L.required_scan_columns(
+            p, ctx1.catalog)[id(node.spine)])
+        assert MO.working_set_bytes(n_cols, n) > budget
+        base = df.lower(engine="compiled").compile().collect()
+        got = (df.lower(engine="compiled", memory_budget=budget)
+               .compile().collect())
+        # f32 sums over ~1.5M rows/group carry ~1e-3 of accumulation-
+        # order rounding in BOTH paths; the chunked morsel sums are the
+        # more accurate side.  Counts must still match exactly.
+        assert_results_equal(base, got, rtol=5e-3, msg=qname)
+        for k in base:
+            x = np.atleast_1d(np.asarray(base[k]))
+            if x.dtype.kind in "iu":
+                assert np.array_equal(x, np.asarray(got[k])), (qname, k)

@@ -280,6 +280,43 @@ def test_explain_analyze_q19_join_provenance(ctx):
     assert "== Query Lifecycle ==" in text
 
 
+def test_explain_analyze_scan_stats_cover_every_scan(ctx):
+    """Per-scan stats are keyed by structural path, not id(node): every
+    Scan line must carry the *pruned* bound-column count even after the
+    lowering pipeline copies the plan (join_index=False rebuilds the
+    root, which used to orphan the id()-keyed stats)."""
+    import re
+
+    from repro.core import lower as L
+
+    for join_index in (True, False):
+        df = Q.q6(ctx)
+        text = df.explain(analyze=True, join_index=join_index)
+        scan_lines = [ln for ln in text.splitlines() if "Scan " in ln]
+        assert scan_lines, text
+        # every rendered Scan carries stats...
+        assert all("cols=" in ln for ln in scan_lines), scan_lines
+        # ...and lineitem's count is the pruned binding set, not the
+        # full 16-column schema fallback
+        plan = df.lower(engine="compiled",
+                        join_index=join_index).plan()
+        by_path = L.required_scan_columns_by_path(plan, ctx.catalog)
+        want = {len(cols) for cols in by_path.values()}
+        li = next(ln for ln in scan_lines if "lineitem" in ln)
+        got = int(re.search(r"cols=(\d+)", li).group(1))
+        assert got in want and got < 16, (got, want, li)
+
+
+def test_scan_paths_stable_across_plan_copies(ctx):
+    from repro.core import lower as L
+
+    plan = Q.q6(ctx).plan
+    copy = plan.with_children(plan.children())
+    a = L.required_scan_columns_by_path(plan, ctx.catalog)
+    b = L.required_scan_columns_by_path(copy, ctx.catalog)
+    assert a == b and a  # same structural keys, same pruned columns
+
+
 def test_explain_analyze_leaves_tracing_off(ctx):
     assert not OT.TRACER.on
     Q.q6(ctx).explain(analyze=True)

@@ -280,18 +280,56 @@ def test_batch_executors_persist_per_bucket(tables, store):
         assert_results_equal(w, g, msg="persisted batch executor")
 
 
-def test_unsupported_plan_counted_not_written(tables, store):
-    ctx = make_ctx(tables, store)
-    df = ctx.table("lineitem").map_batches(
+def _udf_df(ctx):
+    return ctx.table("lineitem").map_batches(
         lambda cols: {"double_qty": cols["l_quantity"] * 2.0},
         columns=["l_quantity"], schema={"double_qty": "float64"})
+
+
+def test_udf_plan_persists_with_content_hashed_fingerprint(tables, store):
+    """MapBatches plans fingerprint the function *content* (sha256 over
+    bytecode/consts/closure -- repro.core.fnhash), so their cache keys
+    are process-independent and the exec tier admits them."""
+    ctx = make_ctx(tables, store)
+    df = _udf_df(ctx)
     ok, reason = plan_persistable(df.plan)
-    assert not ok and "MapBatches" in reason
+    assert ok, reason
+    assert "#" in df.plan.fingerprint()       # content-hash marker
+    assert "@" not in df.plan.fingerprint()   # no process-local address
     compiled = df.lower(engine="compiled").compile(cache=CompileCache())
-    compiled.collect()
-    assert compiled.stats.persist.startswith("unsupported")
-    assert store.tier("exec").unsupported == 1
-    assert not exec_paths(store)
+    want = compiled.collect()
+    assert compiled.stats.persist == "written"
+    assert store.tier("exec").unsupported == 0
+    assert len(exec_paths(store)) == 1
+
+    # a fresh context (fresh memory caches) serves the UDF plan off disk
+    c2 = _udf_df(make_ctx(tables, store)).lower(
+        engine="compiled").compile(cache=CompileCache())
+    got = c2.collect()
+    assert c2.stats.disk_hit and c2.stats.persist.startswith("hit")
+    assert store.tier("exec").writes == 1  # no second write-through
+    assert_results_equal(want, got, msg="persisted UDF executable")
+
+
+def test_iterative_kernel_plan_persists_as_value_kind(tables, store):
+    """IterativeKernel roots return a pytree, not a table; the exec
+    tier persists them under kind="value" and a fresh context replays
+    the training result without XLA compilation."""
+    def make(ctx_):
+        return (ctx_.table("lineitem")
+                .train("logreg", columns=["l_quantity", "l_extendedprice"],
+                       label="l_discount", max_iter=5))
+
+    c1 = make(make_ctx(tables, store)).lower(
+        engine="compiled").compile(cache=CompileCache())
+    want = c1()
+    assert c1.stats.persist == "written", c1.stats.persist
+    c2 = make(make_ctx(tables, store)).lower(
+        engine="compiled").compile(cache=CompileCache())
+    got = c2()
+    assert c2.stats.disk_hit and c2.stats.persist.startswith("hit")
+    np.testing.assert_allclose(np.asarray(want.weights),
+                               np.asarray(got.weights), rtol=1e-5)
 
 
 def test_persist_false_disables_the_store(tables, store):
