@@ -45,6 +45,7 @@ from repro.obs import metrics as OM
 from repro.obs import trace as OT
 from repro.persist import store as PS
 from repro.relational import table as T
+from repro.resilience import faults as FZ
 
 # Pipeline breakers.  MapBatches breaks on the STAGE engine by design:
 # Spark treats UDFs as black boxes and materialises around them (paper
@@ -197,6 +198,8 @@ class IndexCache:
                 if entry is None:
                     with OT.span("index_build", keys=",".join(key_cols),
                                  rows=tbl.num_rows):
+                        FZ.fault_point("index.build",
+                                       keys=",".join(key_cols))
                         entry = self._build(tbl, tuple(key_cols),
                                             tuple(doms))
                     sp.set(outcome="built")
@@ -375,6 +378,12 @@ class CompileStats:
     the human-readable disposition of the disk tier for this compile
     ("hit:native", "hit:portable", "written", "unsupported: ...",
     "" when no store was in play).
+
+    ``degraded`` is the degradation-ladder provenance: one dict per
+    recorded hop (:class:`repro.resilience.degrade.DegradeEvent`) when
+    a recoverable failure re-lowered this template on a weaker rung --
+    empty on the happy path.  A degraded answer is correct but slower;
+    consumers that care (benchmarks, the chaos gate) check this field.
     """
 
     trace_compile_s: float = 0.0
@@ -387,6 +396,7 @@ class CompileStats:
     dispatch: Optional[Any] = None
     disk_hit: bool = False
     persist: str = ""
+    degraded: Tuple[Dict[str, Any], ...] = ()
 
 
 def require_param(params: Optional[Dict[str, Any]], spec: E.Param):

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import lower as L
 from repro.core import plan as P
+from repro.resilience import faults as FZ
 
 LANES = 128
 
@@ -122,6 +123,10 @@ class MorselMerge(P.Plan):
         rec(self.child, needed)
 
     def lower_stream(self, catalog, scans, params) -> L.Stream:
+        # trust boundary: the streaming loop is traced here, so a
+        # kernel/VMEM refusal surfaces at trace time -- the injected
+        # fault mirrors that (the ladder re-lowers without the loop)
+        FZ.fault_point("morsel.loop", morsel_rows=self.morsel_rows)
         spine = self.spine
         sstream = scans.get(id(spine))
         if sstream is None:

@@ -70,6 +70,7 @@ from repro.core import plan as PL
 from repro.core import stages as S
 from repro.native import registry as R
 from repro.relational import table as T
+from repro.resilience import faults as FZ
 
 
 class UnsupportedParallelPlan(TypeError):
@@ -537,6 +538,7 @@ class ParallelEngine:
         return artifact.jax_lowered.compiler_ir(dialect)
 
     def compile(self, artifact: _ParallelArtifact) -> S.Executor:
+        FZ.fault_point("compile.xla", engine="parallel")
         exe = artifact.jax_lowered.compile()
         layout, specs = artifact.layout, artifact.param_specs
         index_layout = artifact.index_layout

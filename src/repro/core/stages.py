@@ -51,6 +51,8 @@ from repro.obs import trace as OT
 from repro.persist import executable as PX
 from repro.persist import store as PSTORE
 from repro.relational import table as T
+from repro.resilience import degrade as DG
+from repro.resilience import faults as FZ
 
 CompileStats = ENG.CompileStats
 
@@ -610,6 +612,7 @@ class WholeQueryEngine:
         return artifact.jax_lowered.compiler_ir(dialect)
 
     def compile(self, artifact: _WholeQueryArtifact) -> Executor:
+        FZ.fault_point("compile.xla")
         exe = artifact.jax_lowered.compile()
         layout, specs = artifact.layout, artifact.param_specs
         index_layout = artifact.index_layout
@@ -818,6 +821,10 @@ class Lowered:
         self._dispatch_report = dispatch_report
         self._artifact: Any = None
         self._lower_s = 0.0
+        # re-lower source for the degradation ladder: the pre-rewrite
+        # plan + lowering kwargs, stashed by lower_plan().  None for
+        # directly-constructed Lowered objects (no ladder).
+        self._degrade_src: Optional[Dict[str, Any]] = None
 
     # -- introspection -------------------------------------------------------
 
@@ -880,7 +887,27 @@ class Lowered:
         memory, and sets ``stats.disk_hit`` (no tracing, and on the
         native tier no XLA compilation); a fresh compile writes
         through.
+
+        Failures on the recoverable allowlist (kernel budget, corrupt
+        artifact, XLA compile error -- :func:`repro.resilience.degrade.
+        recoverable`) re-lower on the next rung of the degradation
+        ladder instead of raising, recording the hop on
+        ``stats.degraded``; ``FLARE_DEGRADE=off`` disables this.
         """
+        try:
+            return self._compile_inner(cache, persist)
+        except Exception as err:
+            low, event = DG.next_lowered(self._degrade_src,
+                                         self._engine.name, err, "compile")
+            if low is None:
+                raise
+            compiled = low.compile(persist=persist)
+            compiled.stats.degraded = ((event.to_dict(),)
+                                       + tuple(compiled.stats.degraded))
+            return compiled
+
+    def _compile_inner(self, cache: Optional[CompileCache],
+                       persist: Any) -> "Compiled":
         cache = cache if cache is not None else self._compile_cache
         stats = CompileStats(engine=self._engine.name, cache_key=self._key,
                              dispatch=self._dispatch_report)
@@ -934,7 +961,8 @@ class Lowered:
                 csp.set(persist=stats.persist)
         return Compiled(exe, self._plan, self._catalog, self._engine.name,
                         self._param_specs, self._key, self._device_cache,
-                        stats, compile_cache=cache, store=store)
+                        stats, compile_cache=cache, store=store,
+                        degrade_src=self._degrade_src)
 
 
 class AsyncResult:
@@ -1038,6 +1066,7 @@ def compile_batch_executor(p: P.Plan, catalog: P.Catalog,
         dt = jax.dtypes.canonicalize_dtype(T.numpy_dtype(s.dtype))
         pdtypes.append(dt)
         avals.append(jax.ShapeDtypeStruct((bucket,), dt))
+    FZ.fault_point("compile.xla", bucket=bucket)
     lowered = jax.jit(bfn).lower(*avals)
     exe = lowered.compile()
     try:
@@ -1091,7 +1120,8 @@ class Compiled:
                  key: Tuple, device_cache: ENG.DeviceCache,
                  stats: CompileStats,
                  compile_cache: Optional[CompileCache] = None,
-                 store: Optional["PSTORE.ArtifactStore"] = None):
+                 store: Optional["PSTORE.ArtifactStore"] = None,
+                 degrade_src: Optional[Dict[str, Any]] = None):
         self._exe = exe
         self._plan = p
         self._catalog = catalog
@@ -1103,6 +1133,10 @@ class Compiled:
         self._compile_cache = compile_cache
         self._store = store
         self._last_trace: Optional[OT.Trace] = None
+        self._degrade_src = degrade_src
+        # sticky execution-time fallback: set by the first recoverable
+        # execution failure, every later call routes straight to it
+        self._degraded_to: Optional["Compiled"] = None
 
     def params(self) -> Tuple[E.Param, ...]:
         return self._param_specs
@@ -1122,7 +1156,32 @@ class Compiled:
             raise TypeError(f"unknown parameter(s) {extra}; this template "
                             f"takes {sorted(known)}")
 
+    def _degrade_for(self, err: BaseException) -> Optional["Compiled"]:
+        """Build (and pin) the execution-time fallback Compiled for a
+        recoverable failure; None when the ladder must not engage."""
+        low, event = DG.next_lowered(self._degrade_src, self.engine_name,
+                                     err, "execute")
+        if low is None:
+            return None
+        fb = low.compile()
+        self.stats.degraded = (tuple(self.stats.degraded)
+                               + (event.to_dict(),)
+                               + tuple(fb.stats.degraded))
+        self._degraded_to = fb
+        return fb
+
     def result(self, **params: Any) -> L.Result:
+        if self._degraded_to is not None:
+            return self._degraded_to.result(**params)
+        try:
+            return self._result_inner(**params)
+        except Exception as err:
+            fb = self._degrade_for(err)
+            if fb is None:
+                raise
+            return fb.result(**params)
+
+    def _result_inner(self, **params: Any) -> L.Result:
         self._check_bindings(params)
         if not OT.TRACER.on:  # hot path: zero tracing machinery
             t0 = time.perf_counter()
@@ -1153,6 +1212,17 @@ class Compiled:
         Engines without a deferred path (interpreters, stage, parallel)
         fall back to eager execution behind an already-ready handle, so
         the API is uniform across engines."""
+        if self._degraded_to is not None:
+            return self._degraded_to.submit(**params)
+        try:
+            return self._submit_inner(**params)
+        except Exception as err:
+            fb = self._degrade_for(err)
+            if fb is None:
+                raise
+            return fb.submit(**params)
+
+    def _submit_inner(self, **params: Any) -> AsyncResult:
         self._check_bindings(params)
         raw = getattr(self._exe, "raw", None)
         tracing = OT.TRACER.on
@@ -1214,6 +1284,29 @@ class Compiled:
         bindings = [dict(b) for b in bindings]
         if not bindings:
             return []
+        if self._degraded_to is not None:
+            return self._batch_on(self._degraded_to, bindings, block)
+        try:
+            return self._batch_inner(bindings, block)
+        except Exception as err:
+            fb = self._degrade_for(err)
+            if fb is None:
+                raise
+            return self._batch_on(fb, bindings, block)
+
+    @staticmethod
+    def _batch_on(fb: "Compiled", bindings: List[Dict[str, Any]],
+                  block: bool) -> List[Any]:
+        """Run a batch on the fallback rung: vmap-coalesced when the
+        rung supports it, per-binding dispatch otherwise (interpreted
+        rungs have no vmap batching rule but the answer is the same)."""
+        if fb.engine_name in _BATCHABLE_ENGINES:
+            return fb.batch(bindings, block=block)
+        handles = [fb.submit(**b) for b in bindings]
+        return [h.result() for h in handles] if block else handles
+
+    def _batch_inner(self, bindings: List[Dict[str, Any]],
+                     block: bool) -> List[Any]:
         if self.engine_name not in _BATCHABLE_ENGINES:
             raise TypeError(
                 f"batched execution requires one of {_BATCHABLE_ENGINES} "
@@ -1401,6 +1494,16 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     report lands on ``Lowered.dispatch_report()``.
     """
     dispatch_report = None
+    # degradation-ladder re-lower source: the pre-rewrite plan and the
+    # caller's lowering knobs, captured before shard/morsel/native
+    # rewrites mutate the plan (repro.resilience.degrade re-lowers from
+    # here on a weaker rung)
+    degrade_src = dict(plan=p, catalog=catalog, engine=engine,
+                       device_cache=device_cache,
+                       compile_cache=compile_cache, native=native,
+                       axis=axis, join_index=join_index,
+                       memory_budget=memory_budget,
+                       morsel_rows=morsel_rows)
     out_of_core = memory_budget is not None or morsel_rows is not None
     if engine == "parallel":
         # lazy import: registers the parallel engine; the shard planner
@@ -1464,9 +1567,11 @@ def lower_plan(p: P.Plan, catalog: P.Catalog, engine: str = "compiled",
     eng = get_engine(engine)
     specs = P.params_of(p)
     key = template_key(engine, p, catalog, index_specs=index_specs)
-    return Lowered(p, catalog, eng, specs, key,
-                   device_cache if device_cache is not None
-                   else ENG._DEFAULT_CACHE,
-                   compile_cache if compile_cache is not None
-                   else _DEFAULT_COMPILE_CACHE,
-                   dispatch_report=dispatch_report)
+    lowered = Lowered(p, catalog, eng, specs, key,
+                      device_cache if device_cache is not None
+                      else ENG._DEFAULT_CACHE,
+                      compile_cache if compile_cache is not None
+                      else _DEFAULT_COMPILE_CACHE,
+                      dispatch_report=dispatch_report)
+    lowered._degrade_src = degrade_src
+    return lowered

@@ -36,6 +36,7 @@ from repro.native import registry as R
 from repro.obs import export as OX
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
+from repro.resilience import faults as FZ
 
 
 @dataclasses.dataclass(eq=False)
@@ -88,6 +89,10 @@ class NativeOp(P.Plan):
         rec(self.child, needed)
 
     def lower_stream(self, catalog, scans, params) -> L.Stream:
+        # trust boundary: a kernel emitter can refuse the geometry
+        # (KernelBudgetError) -- injected here so the degradation
+        # ladder sees the failure exactly where a real one surfaces
+        FZ.fault_point("native.kernel", pattern=self.pattern)
         # named scope at trace time: the Pallas kernel's ops carry the
         # pattern name into the compiled program / device profiles
         with OX.kernel_scope(f"flare:{self.pattern}"):

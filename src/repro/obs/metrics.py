@@ -129,12 +129,19 @@ def snapshot() -> Dict[str, Any]:
     """The one process-wide telemetry view (superset of
     ``engines.cache_stats()``, which returns this dict's ``caches``)."""
     from repro.persist import store as PS  # lazy: persist imports obs
+    from repro.resilience import degrade as DG  # lazy: imports obs
+    from repro.resilience import faults as FZ
+    plan = FZ.active()
     return {
         "caches": cache_section(),
         "disk": PS.live_store_stats(),
         "dispatch": dispatch_section(),
         "serve": serve_section(),
         "counters": REGISTRY.counters(),
+        "resilience": {
+            "faults": plan.counts() if plan is not None else {},
+            "degrade": DG.stats(),
+        },
         "trace": {**OT.TRACER.stats(),
                   "phases": OT.Trace(OT.TRACER.spans()).phase_totals()},
     }

@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.obs import trace as OT
+from repro.resilience import faults as FZ
 
 #: Bump on any incompatible change to the container or section layout.
 FORMAT_VERSION = 1
@@ -131,6 +132,12 @@ class TierStats:
     counts compile artifacts that cannot be persisted (non-exportable
     engine, process-local UDFs); ``errors`` counts unexpected
     serialization failures that were swallowed into a recompile.
+
+    ``quarantined`` counts corrupt artifacts renamed aside (to
+    ``<name>.flare.quarantine``) for post-mortem instead of deleted
+    blind; ``unlink_raced`` counts unlink/rename targets that were
+    already gone -- a concurrent reader promoted them or a second
+    evicting process won the race (benign, but worth seeing).
     """
 
     hits: int = 0
@@ -141,6 +148,8 @@ class TierStats:
     unsupported: int = 0
     errors: int = 0
     evicted: int = 0
+    quarantined: int = 0
+    unlink_raced: int = 0
     bytes_written: int = 0
     bytes_read: int = 0
 
@@ -156,6 +165,8 @@ class TierStats:
             "version_miss": self.version_miss,
             "unsupported": self.unsupported, "errors": self.errors,
             "evicted": self.evicted,
+            "quarantined": self.quarantined,
+            "unlink_raced": self.unlink_raced,
             "bytes_written": self.bytes_written,
             "bytes_read": self.bytes_read,
             "hit_rate": round(self.hit_rate, 4),
@@ -253,6 +264,10 @@ class ArtifactStore:
         with OT.span("store.save", tier=kind, digest=digest[:12],
                      nbytes=len(blob)) as sp:
             try:
+                # trust boundary: disk writes fail for infrastructural
+                # reasons (ENOSPC, permissions); injected faults take
+                # the same swallowed-into-recompile path below
+                FZ.fault_point("persist.save", tier=kind)
                 fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
                                            prefix=".tmp-",
                                            suffix=".flare")
@@ -335,10 +350,11 @@ class ArtifactStore:
         """Read an artifact; returns ``(header, sections)`` or None.
 
         Every failure mode degrades to None: absent file (``misses``),
-        structural damage (``corrupt`` -- the bad file is removed so it
-        is rebuilt, not re-tripped-over), incompatible envelope
-        (``version_miss``).  A hit touches the file's mtime for LRU
-        eviction.
+        structural damage (``corrupt`` -- the bad file is renamed to
+        ``<name>.flare.quarantine`` so it is rebuilt, not
+        re-tripped-over, and the evidence survives for post-mortem),
+        incompatible envelope (``version_miss``).  A hit touches the
+        file's mtime for LRU eviction.
 
         ``envelope_keys`` narrows the envelope fields checked here: the
         exec loader passes ``("format",)`` so it can inspect both
@@ -357,16 +373,17 @@ class ArtifactStore:
                 sp.set(outcome="miss")
                 return None
             try:
+                # trust boundary: anything read off disk is untrusted
+                # until parsed + checksummed; injected corruption takes
+                # the same quarantine path a real torn file would
+                FZ.fault_point("persist.load", tier=kind)
                 header, sections = self._parse(blob, kind)
                 self._check_envelope(header, kind, envelope_keys)
             except StoreCorrupt:
                 st.corrupt += 1
                 st.misses += 1
                 sp.set(outcome="corrupt")
-                try:
-                    os.unlink(path)
-                except OSError:
-                    pass
+                self._quarantine(kind, path)
                 return None
             except StoreVersionMiss:
                 st.version_miss += 1
@@ -381,6 +398,32 @@ class ArtifactStore:
         except OSError:
             pass
         return header, sections
+
+    def _quarantine(self, kind: str, path: str) -> None:
+        """Move a corrupt artifact aside instead of deleting it blind.
+
+        ``os.replace`` is atomic and keeps the bytes for post-mortem;
+        the ``.quarantine`` suffix excludes the file from
+        :meth:`entries`/:meth:`nbytes`/:meth:`evict`, so quarantined
+        junk can never wedge the live store.  A concurrent loader may
+        have quarantined (or a writer replaced) the path first -- that
+        race is benign and counted as ``unlink_raced``.
+        """
+        st = self.stats[kind]
+        try:
+            os.replace(path, path + ".quarantine")
+            st.quarantined += 1
+        except FileNotFoundError:
+            st.unlink_raced += 1
+        except OSError:
+            # rename refused (e.g. exotic filesystem): fall back to a
+            # race-safe unlink so the corrupt file is at least rebuilt
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                st.unlink_raced += 1
+            except OSError:
+                st.errors += 1
 
     def demote_hit(self, kind: str, reason: str) -> None:
         """Retroactively turn the last :meth:`load` hit into a miss.
@@ -438,6 +481,13 @@ class ArtifactStore:
                 break
             try:
                 os.unlink(p)
+            except FileNotFoundError:
+                # a second evicting process (or a corrupt-quarantine)
+                # got there first: the bytes are gone either way, so
+                # count them against the total and move on
+                self.stats[k].unlink_raced += 1
+                total -= sz
+                continue
             except OSError:
                 continue
             total -= sz
@@ -446,11 +496,13 @@ class ArtifactStore:
         return evicted
 
     def clear(self) -> None:
-        for d in self._dirs.values():
+        for k, d in self._dirs.items():
             for f in os.listdir(d):
                 if f.endswith(".flare"):
                     try:
                         os.unlink(os.path.join(d, f))
+                    except FileNotFoundError:
+                        self.stats[k].unlink_raced += 1
                     except OSError:
                         pass
 

@@ -1,0 +1,48 @@
+"""Resilience layer: deterministic fault injection + engine degradation.
+
+Two cooperating pieces (DESIGN.md section 15):
+
+* :mod:`repro.resilience.faults` -- a registry of named fault sites at
+  every trust boundary (persist load/save, XLA compile, native kernel
+  lowering, index build, serve dispatch, morsel loop).  Arm a
+  :class:`FaultPlan` with the :func:`inject` context manager or the
+  ``FLARE_FAULTS`` env var and the named sites raise on a deterministic
+  ``first:N`` / ``every:N`` / seeded ``p:<prob>`` schedule.
+
+* :mod:`repro.resilience.degrade` -- the graceful-degradation ladder
+  ``compiled-native -> compiled -> stage -> volcano`` (and ``parallel ->
+  compiled`` on mesh loss).  A closed allowlist of recoverable error
+  types triggers a re-lower on the next rung with a recorded
+  :class:`DegradeEvent`; anything outside the allowlist still raises.
+  Policy knob: ``FLARE_DEGRADE=off|auto``.
+
+Injected faults and degradations are counted in the
+:class:`repro.obs.metrics.MetricsRegistry` and visible as trace spans,
+so chaos runs (``tools/chaos_ci_check.py``) can assert behavior under
+failure, not just under success.
+"""
+from repro.resilience.faults import (  # noqa: F401
+    SITES,
+    DispatchFault,
+    FaultPlan,
+    IndexBuildError,
+    XlaCompileFault,
+    fault_point,
+    inject,
+    refresh_from_env,
+)
+from repro.resilience.degrade import (  # noqa: F401
+    LADDER,
+    DegradeEvent,
+    clear_events,
+    enabled,
+    events,
+    recoverable,
+)
+
+__all__ = [
+    "SITES", "FaultPlan", "inject", "fault_point", "refresh_from_env",
+    "XlaCompileFault", "IndexBuildError", "DispatchFault",
+    "LADDER", "DegradeEvent", "recoverable", "enabled", "events",
+    "clear_events",
+]

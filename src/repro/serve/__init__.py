@@ -6,7 +6,11 @@ deferred per request.  See DESIGN.md section 11.
 
     from repro.serve import QueryServer
 """
-from repro.serve.server import QueryServer, ServeFuture
+from repro.serve.server import (DeadlineExceededError, NotDispatchedError,
+                                QueryServer, QueueFullError, ServeFuture,
+                                SyncTimeoutError)
 from repro.serve.stats import ServeStats, percentile
 
-__all__ = ["QueryServer", "ServeFuture", "ServeStats", "percentile"]
+__all__ = ["QueryServer", "ServeFuture", "ServeStats", "percentile",
+           "QueueFullError", "NotDispatchedError", "SyncTimeoutError",
+           "DeadlineExceededError"]

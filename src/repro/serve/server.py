@@ -32,12 +32,40 @@ from repro.core.dataframe import FlareContext
 from repro.obs import metrics as OM
 from repro.obs import trace as OT
 from repro.persist import store as PS
+from repro.resilience import faults as FZ
 from repro.serve.stats import ServeStats
 
 #: Template registries map a name to a factory ``ctx -> DataFrame`` whose
 #: plan carries ``param()`` placeholders; resolved lazily so importing the
 #: server never forces query construction.
 TemplateFactory = Callable[[FlareContext], Any]
+
+
+class QueueFullError(RuntimeError):
+    """Admission refused: the submit queue is at ``max_queue``.
+
+    Typed backpressure -- the caller sheds load or retries after a
+    flush instead of the queue growing without bound.
+    """
+
+
+class NotDispatchedError(TimeoutError):
+    """``ServeFuture.result(timeout)`` expired while the request was
+    still queued: no flush ran in time.  The request is still pending;
+    call ``QueryServer.flush()`` (or ``start()`` a worker) and read the
+    future again."""
+
+
+class SyncTimeoutError(TimeoutError):
+    """``ServeFuture.result(timeout)`` expired AFTER dispatch: the
+    batch executed but the device had not produced this request's
+    value within the budget.  The computation is still in flight;
+    reading the future again with a longer timeout can succeed."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """The request's ``deadline_s`` passed before its batch dispatched;
+    the server cancelled it at flush without executing anything."""
 
 
 class ServeFuture:
@@ -51,12 +79,16 @@ class ServeFuture:
     by what each requester observed.
     """
 
-    def __init__(self, stats: ServeStats, submit_t: float):
+    def __init__(self, stats: ServeStats, submit_t: float,
+                 deadline_t: Optional[float] = None):
         self._dispatched = threading.Event()
         self._handle: Optional[S.AsyncResult] = None
         self._error: Optional[BaseException] = None
         self._stats = stats
         self._submit_t = submit_t
+        #: absolute ``perf_counter`` admission deadline (None = none):
+        #: the server cancels the request at flush if it passes
+        self._deadline_t = deadline_t
         self._latency_recorded = False
         self._lock = threading.Lock()
 
@@ -74,15 +106,30 @@ class ServeFuture:
         return self._dispatched.is_set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
-        """The request's :class:`repro.core.lower.Result` (blocks)."""
+        """The request's :class:`repro.core.lower.Result` (blocks).
+
+        ``timeout`` covers the whole wait and the failure mode is
+        typed by *phase*: :class:`NotDispatchedError` when no flush
+        dispatched the request in time (nothing ran; flush and retry),
+        :class:`SyncTimeoutError` when the batch executed but the
+        device had not delivered this request's value yet (still in
+        flight; a later read can succeed).  Both subclass
+        ``TimeoutError``.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
         if not self._dispatched.wait(timeout):
-            raise TimeoutError("request not dispatched; call "
-                               "QueryServer.flush() or start() a worker")
+            raise NotDispatchedError(
+                f"request not dispatched within {timeout}s; call "
+                f"QueryServer.flush() or start() a worker")
         if self._error is not None:
             raise self._error
         t_sync = time.perf_counter()
         with OT.span("serve.sync"):
-            out = self._handle.result()
+            if deadline is None:
+                out = self._handle.result()
+            else:
+                out = self._sync_before(deadline)
         with self._lock:
             if not self._latency_recorded:
                 self._latency_recorded = True
@@ -90,6 +137,22 @@ class ServeFuture:
                 self._stats.record_latency(now - self._submit_t)
                 self._stats.record_sync(now - t_sync)
         return out
+
+    def _sync_before(self, deadline: float) -> Any:
+        """Materialise within the remaining budget: poll the handle's
+        readiness probe (cheap, non-blocking) and only pay the blocking
+        sync once the device value exists."""
+        step = 0.0005
+        while not self._handle.ready():
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                raise SyncTimeoutError(
+                    "request dispatched but device sync did not "
+                    "complete in time; the batch is still in flight -- "
+                    "read the future again with a longer timeout")
+            time.sleep(min(step, remaining))
+            step = min(step * 2, 0.01)
+        return self._handle.result()
 
     def compact(self, timeout: Optional[float] = None) -> Dict[str, Any]:
         return self.result(timeout).compact()
@@ -123,19 +186,34 @@ class QueryServer:
     ``max_batch`` caps coalescing (a full queue splits into chunks);
     ``engine`` must support vmap batching (see
     ``stages._BATCHABLE_ENGINES``).
+
+    ``max_queue`` bounds admission: a submit against a full queue
+    raises :class:`QueueFullError` (typed backpressure -- counted in
+    ``stats.rejected``) instead of letting the queue grow without
+    bound; None disables the bound.  Requests can carry a
+    ``deadline_s``; a request whose deadline passes while still queued
+    is cancelled cleanly at the next flush
+    (:class:`DeadlineExceededError` on its future, nothing executed).
+
+    A failing coalesced dispatch is bisected: the server retries ever
+    smaller halves until the poison request(s) are isolated, so one bad
+    binding fails only its own :class:`ServeFuture` instead of every
+    waiter in the batch (``stats.bisects``/``poisoned``).
     """
 
     def __init__(self, ctx: FlareContext,
                  templates: Optional[Dict[str, TemplateFactory]] = None,
                  engine: str = "compiled", max_batch: int = 64,
                  join_index: Optional[bool] = None,
-                 warm_start: bool = False):
+                 warm_start: bool = False,
+                 max_queue: Optional[int] = 10_000):
         if templates is None:
             from repro.relational.queries import TEMPLATES
             templates = TEMPLATES
         self.ctx = ctx
         self.engine = engine
         self.max_batch = max(1, int(max_batch))
+        self.max_queue = max_queue if max_queue is None else int(max_queue)
         self.join_index = join_index
         self.templates = dict(templates)
         self.stats = ServeStats()
@@ -204,12 +282,36 @@ class QueryServer:
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, name: str, **params: Any) -> ServeFuture:
-        """Admit one request; returns immediately with a future."""
-        fut = ServeFuture(self.stats, time.perf_counter())
+    def submit(self, name: str, deadline_s: Optional[float] = None,
+               **params: Any) -> ServeFuture:
+        """Admit one request; returns immediately with a future.
+
+        Raises :class:`QueueFullError` when the queue is at
+        ``max_queue``.  ``deadline_s`` (seconds from now) bounds how
+        long the request may sit queued: past it, the next flush
+        cancels the request instead of dispatching it.  ``deadline_s``
+        is reserved (like ``block`` on ``Compiled.__call__``); a
+        template parameter of that name must bind through
+        :meth:`serve`.
+        """
+        return self._admit(name, params, deadline_s)
+
+    def _admit(self, name: str, params: Dict[str, Any],
+               deadline_s: Optional[float]) -> ServeFuture:
+        now = time.perf_counter()
+        fut = ServeFuture(self.stats, now,
+                          None if deadline_s is None else now + deadline_s)
         req = _Request(name, params, fut)
         with OT.span("serve.submit", template=name) as sp:
             with self._lock:
+                if (self.max_queue is not None
+                        and len(self._queue) >= self.max_queue):
+                    self.stats.rejected += 1
+                    OM.REGISTRY.inc("serve.rejected")
+                    sp.set(outcome="rejected")
+                    raise QueueFullError(
+                        f"admission queue full ({self.max_queue} "
+                        f"requests); flush() or shed load")
                 self._queue.append(req)
                 self.stats.submitted += 1
                 depth = len(self._queue)
@@ -234,23 +336,52 @@ class QueryServer:
             batch, self._queue = self._queue, []
         if not batch:
             return 0
+        now = time.perf_counter()
+        live: List[_Request] = []
+        for req in batch:
+            dl = req.future._deadline_t
+            if dl is not None and now > dl:
+                # cancel cleanly: nothing dispatched, nothing shared
+                self.stats.deadline_expired += 1
+                OM.REGISTRY.inc("serve.deadline_expired")
+                req.future._fail(DeadlineExceededError(
+                    f"deadline expired {now - dl:.3f}s before dispatch "
+                    f"of template {req.name!r}"))
+            else:
+                live.append(req)
+        if not live:
+            return 0
         with OT.span("serve.flush", drained=len(batch)) as sp:
             groups: Dict[str, List[_Request]] = {}
-            for req in batch:
+            for req in live:
                 groups.setdefault(req.name, []).append(req)
             sp.set(groups=len(groups))
             for name, reqs in groups.items():
                 for i in range(0, len(reqs), self.max_batch):
                     self._dispatch(name, reqs[i:i + self.max_batch])
-        return len(batch)
+        return len(live)
 
     def _dispatch(self, name: str, reqs: List[_Request]) -> None:
         now = time.perf_counter()
         for r in reqs:  # admission-queue wait, from the request's seat
             self.stats.record_queue(now - r.future._submit_t)
+        self._dispatch_isolating(name, reqs)
+
+    def _dispatch_isolating(self, name: str, reqs: List[_Request]) -> None:
+        """Dispatch one group; on failure, bisect to isolate poison.
+
+        A coalesced vmapped dispatch fails as a unit, but one bad
+        binding must not fail every waiter: the failing group is split
+        in half and each half retried, recursively, until the poison
+        request(s) stand alone -- every healthy request completes
+        normally, every poisoned one gets the typed error on its OWN
+        future.  log2(batch) extra dispatches in the worst case, zero
+        on the happy path.
+        """
         try:
             with OT.span("serve.dispatch", template=name,
                          requests=len(reqs)) as sp:
+                FZ.fault_point("serve.dispatch", template=name)
                 compiled = self.compiled_for(name)
                 c0 = compiled.stats.compile_s
                 handles = compiled.batch([r.params for r in reqs],
@@ -262,9 +393,20 @@ class QueryServer:
             self.stats.record_batch(len(reqs), bucket,
                                     compiled.stats.compile_s - c0,
                                     compiled.stats.run_s)
-        except BaseException as err:  # surface through every waiter
-            for r in reqs:
-                r.future._fail(err)
+        except BaseException as err:
+            if len(reqs) == 1:  # isolated: fail ONLY this waiter
+                self.stats.poisoned += 1
+                OM.REGISTRY.inc("serve.poisoned")
+                reqs[0].future._fail(err)
+                return
+            self.stats.bisects += 1
+            OM.REGISTRY.inc("serve.bisect")
+            with OT.span("serve.bisect", template=name,
+                         requests=len(reqs), error=type(err).__name__):
+                pass
+            mid = len(reqs) // 2
+            self._dispatch_isolating(name, reqs[:mid])
+            self._dispatch_isolating(name, reqs[mid:])
             return
         for r, h in zip(reqs, handles):
             r.future._assign(h)
@@ -273,8 +415,11 @@ class QueryServer:
               block: bool = True) -> List[Any]:
         """Admit ``(name, params)`` pairs, flush once, and return one
         result (or un-materialised future, ``block=False``) per request
-        in submission order."""
-        futs = [self.submit(name, **params) for name, params in requests]
+        in submission order.  Params bind verbatim here (no reserved
+        names), so a template parameter called ``deadline_s`` is only
+        bindable through this path."""
+        futs = [self._admit(name, dict(params), None)
+                for name, params in requests]
         self.flush()
         return [f.result() for f in futs] if block else futs
 

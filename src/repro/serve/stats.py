@@ -35,6 +35,13 @@ class ServeStats:
     request at first result materialisation (submit -> host value), so
     the deferred-sync path is measured from the requester's seat.
 
+    The resilience counters measure behavior under failure:
+    ``rejected`` (admissions refused by the bounded queue),
+    ``deadline_expired`` (requests cancelled at flush, never
+    dispatched), ``bisects`` (failing coalesced dispatches split to
+    isolate poison) and ``poisoned`` (requests whose OWN dispatch
+    failed after isolation -- the only ones that see an error).
+
     ``preloaded``/``disk_hits``/``preload_s`` describe startup against
     the persistent artifact store (DESIGN.md section 12): how many
     templates :meth:`repro.serve.QueryServer.preload` readied, how many
@@ -58,6 +65,10 @@ class ServeStats:
     preloaded: int = 0
     disk_hits: int = 0
     preload_s: float = 0.0
+    rejected: int = 0
+    deadline_expired: int = 0
+    bisects: int = 0
+    poisoned: int = 0
 
     def record_batch(self, size: int, bucket: int,
                      compile_s: float, run_s: float) -> None:
@@ -128,6 +139,10 @@ class ServeStats:
             "preloaded": self.preloaded,
             "disk_hits": self.disk_hits,
             "preload_s": round(self.preload_s, 6),
+            "rejected": self.rejected,
+            "deadline_expired": self.deadline_expired,
+            "bisects": self.bisects,
+            "poisoned": self.poisoned,
         }
 
     def __repr__(self):

@@ -1,0 +1,609 @@
+"""The resilience layer: fault injection, the degradation ladder, and
+the hardened serve path (DESIGN.md section 15).
+
+Covers the acceptance surface of the robustness subsystem:
+
+* the fault registry: deterministic ``first:N`` / ``every:N`` /
+  seeded-probability schedules, env + programmatic arming, unknown-site
+  rejection, armed/fired telemetry,
+* the ladder: recoverable failures at compile and execute time
+  re-lower on the next rung and return the volcano-oracle answer with
+  recorded ``CompileStats.degraded`` provenance; ``FLARE_DEGRADE=off``
+  and non-allowlisted errors raise typed, never silently wrong,
+* persist faults heal BELOW the ladder: corrupt loads quarantine the
+  artifact and recompile; failed saves count and continue,
+* serve hardening: bounded-queue backpressure (``QueueFullError``),
+  per-request deadlines that cancel cleanly, poison-request bisection
+  (one bad binding fails only its own future), and the
+  not-dispatched vs sync-timeout distinction on ``ServeFuture.result``,
+* typed error surfaces: ``KernelBudgetError``, ``MemoryBudgetError``
+  and ``UnsupportedParallelPlan`` keep their concrete types through
+  the stages and served paths.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from conftest import assert_results_equal
+from repro import resilience as RZ
+from repro.core import FlareContext
+from repro.core import morsel as MO
+from repro.core.parallel import UnsupportedParallelPlan
+from repro.core.stages import CompileCache
+from repro.kernels import KernelBudgetError
+from repro.persist.store import ArtifactStore, StoreCorrupt
+from repro.relational import queries as Q
+from repro.resilience import degrade as DG
+from repro.resilience import faults as FZ
+from repro.serve import (DeadlineExceededError, NotDispatchedError,
+                         QueryServer, QueueFullError, ServeFuture,
+                         ServeStats, SyncTimeoutError)
+
+SF = 0.005
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    c = FlareContext()
+    Q.register_tpch(c, sf=SF)
+    return c
+
+
+@pytest.fixture()
+def fresh_ctx():
+    """Function-scoped context: fresh tables -> guaranteed index-cache
+    misses, so execute-time fault sites actually run."""
+    c = FlareContext()
+    Q.register_tpch(c, sf=SF)
+    return c
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    DG.clear_events()
+    yield
+    assert FZ.active() is None, "a test leaked an armed FaultPlan"
+
+
+def oracle(ctx, name, binding):
+    return Q.TEMPLATES[name](ctx).lower(engine="volcano").compile()(**binding)
+
+
+def binding(name, i=0):
+    return dict(Q.TEMPLATE_BINDINGS[name][i])
+
+
+# ---------------------------------------------------------------------------
+# the fault registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_site_rejected():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FZ.FaultPlan({"no.such.site": "first:1"})
+
+
+def test_bad_schedule_rejected():
+    with pytest.raises(ValueError, match="unknown fault schedule"):
+        FZ.FaultPlan({"compile.xla": "sometimes"})
+    with pytest.raises(ValueError, match="0..1"):
+        FZ.FaultPlan({"compile.xla": "p:1.5"})
+
+
+def test_first_and_every_schedules():
+    plan = FZ.FaultPlan({"compile.xla": "first:2"})
+    fires = [plan.check("compile.xla") is not None for _ in range(5)]
+    assert fires == [True, True, False, False, False]
+    plan = FZ.FaultPlan({"compile.xla": "every:3"})
+    fires = [plan.check("compile.xla") is not None for _ in range(6)]
+    assert fires == [False, False, True, False, False, True]
+
+
+def test_probability_schedule_is_seed_deterministic():
+    a = FZ.FaultPlan({"compile.xla": "p:0.5"}, seed=7)
+    b = FZ.FaultPlan({"compile.xla": "p:0.5"}, seed=7)
+    seq_a = [a.check("compile.xla") is not None for _ in range(64)]
+    seq_b = [b.check("compile.xla") is not None for _ in range(64)]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)
+    c = FZ.FaultPlan({"compile.xla": "p:0.5"}, seed=8)
+    assert [c.check("compile.xla") is not None
+            for _ in range(64)] != seq_a
+
+
+def test_sites_raise_their_characteristic_types():
+    expect = {
+        "persist.load": StoreCorrupt,
+        "persist.save": OSError,
+        "compile.xla": FZ.XlaCompileFault,
+        "native.kernel": KernelBudgetError,
+        "index.build": FZ.IndexBuildError,
+        "serve.dispatch": FZ.DispatchFault,
+        "morsel.loop": KernelBudgetError,
+    }
+    assert set(expect) == set(FZ.SITES)
+    for site, etype in expect.items():
+        with RZ.inject(site, "first:1"):
+            with pytest.raises(etype):
+                FZ.fault_point(site)
+
+
+def test_fault_point_free_when_disarmed():
+    assert FZ.active() is None
+    FZ.fault_point("compile.xla")  # no plan: must be a no-op
+
+
+def test_inject_nests_and_restores():
+    with RZ.inject("compile.xla", "every:1") as outer:
+        with RZ.inject("index.build", "every:1"):
+            FZ.fault_point("compile.xla")  # outer plan shadowed: silent
+            with pytest.raises(FZ.IndexBuildError):
+                FZ.fault_point("index.build")
+        with pytest.raises(FZ.XlaCompileFault):
+            FZ.fault_point("compile.xla")
+    assert outer.counts()["compile.xla"]["fired"] == 1
+
+
+def test_env_arming_roundtrip(monkeypatch):
+    monkeypatch.setenv("FLARE_FAULTS",
+                       "persist.load:first:1, compile.xla:p:0.5, seed:9")
+    plan = FZ.refresh_from_env()
+    assert plan is not None and plan.seed == 9
+    assert set(plan.counts()) == {"persist.load", "compile.xla"}
+    monkeypatch.delenv("FLARE_FAULTS")
+    assert FZ.refresh_from_env() is None
+
+
+def test_fired_counts_and_metrics(ctx):
+    from repro.obs import metrics as OM
+    before = OM.REGISTRY.counters().get("faults.fired.native.kernel", 0)
+    with RZ.inject("native.kernel", "first:1") as plan:
+        Q.TEMPLATES["q6"](ctx).lower(engine="compiled", native=True) \
+            .compile(cache=CompileCache())
+    assert plan.counts()["native.kernel"] == {"checked": 1, "fired": 1}
+    got = OM.REGISTRY.counters()["faults.fired.native.kernel"]
+    assert got == before + 1
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_shape():
+    assert DG.LADDER == {"compiled-native": "compiled",
+                         "compiled": "stage",
+                         "stage": "volcano",
+                         "parallel": "compiled"}
+
+
+def test_recoverable_allowlist_is_closed():
+    assert DG.recoverable(KernelBudgetError("x"))
+    assert DG.recoverable(StoreCorrupt("x"))
+    assert DG.recoverable(FZ.XlaCompileFault("x"))
+    assert DG.recoverable(FZ.IndexBuildError("x"))
+    assert DG.recoverable(UnsupportedParallelPlan("x"))
+    # wrong-answer classes must NEVER degrade
+    assert not DG.recoverable(MO.MemoryBudgetError("x"))
+    assert not DG.recoverable(ValueError("x"))
+    assert not DG.recoverable(TypeError("x"))
+    assert not DG.recoverable(AssertionError("x"))
+    assert not DG.recoverable(FZ.DispatchFault("x"))
+
+
+def test_native_kernel_fault_degrades_to_compiled(ctx):
+    b = binding("q6")
+    want = oracle(ctx, "q6", b)
+    with RZ.inject("native.kernel", "first:1"):
+        c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled", native=True) \
+            .compile(cache=CompileCache())
+    assert [ (d["frm"], d["to"], d["phase"]) for d in c.stats.degraded ] \
+        == [("compiled-native", "compiled", "compile")]
+    assert c.stats.degraded[0]["error_type"] == "KernelBudgetError"
+    assert_results_equal(want, c(**b))
+
+
+def test_xla_fault_degrades_compiled_to_stage(ctx):
+    b = binding("q6")
+    want = oracle(ctx, "q6", b)
+    with RZ.inject("compile.xla", "first:1"):
+        c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache())
+    assert [(d["frm"], d["to"]) for d in c.stats.degraded] \
+        == [("compiled", "stage")]
+    assert_results_equal(want, c(**b))
+
+
+def test_persistent_xla_fault_chains_to_the_floor(fresh_ctx):
+    """Every rung's compile faults: the ladder walks parallel ->
+    compiled -> stage (whose per-stage jits compile lazily at execute,
+    past the compile.xla site) and the answer is still right.
+
+    Needs a fresh context: the degraded rung re-lowers against the
+    context's own CompileCache, and a warm executable there would
+    (correctly) satisfy the rung without reaching the faulted XLA
+    boundary at all."""
+    b = binding("q6")
+    want = oracle(fresh_ctx, "q6", b)
+    with RZ.inject("compile.xla", "every:1"):
+        c = Q.TEMPLATES["q6"](fresh_ctx).lower(engine="parallel") \
+            .compile(cache=CompileCache())
+        got = c(**b)
+    hops = [(d["frm"], d["to"]) for d in c.stats.degraded]
+    assert hops[:2] == [("parallel", "compiled"), ("compiled", "stage")]
+    assert_results_equal(want, got)
+
+
+def test_index_fault_degrades_at_execute_and_sticks(fresh_ctx):
+    b = binding("q14")
+    want = oracle(fresh_ctx, "q14", b)
+    with RZ.inject("index.build", "every:1"):
+        c = Q.TEMPLATES["q14"](fresh_ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache())
+        got = c(**b)
+    assert_results_equal(want, got)
+    evs = [(d["frm"], d["phase"]) for d in c.stats.degraded]
+    assert ("compiled", "execute") in evs
+    # sticky: later calls route straight to the fallback rung
+    assert c._degraded_to is not None
+    assert_results_equal(want, c(**b))
+
+
+def test_batch_degrades_per_binding(fresh_ctx):
+    bindings = [binding("q14", i % len(Q.TEMPLATE_BINDINGS["q14"]))
+                for i in range(3)]
+    want = [oracle(fresh_ctx, "q14", b) for b in bindings]
+    with RZ.inject("index.build", "every:1"):
+        c = Q.TEMPLATES["q14"](fresh_ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache())
+        got = c.batch(bindings)
+    assert len(got) == 3
+    for w, g in zip(want, got):
+        assert_results_equal(w, g.compact())
+    assert c.stats.degraded
+
+
+def test_morsel_loop_fault_degrades(ctx):
+    b = binding("q6")
+    want = oracle(ctx, "q6", b)
+    with RZ.inject("morsel.loop", "first:1"):
+        c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled",
+                                         morsel_rows=4096) \
+            .compile(cache=CompileCache())
+    assert c.stats.degraded
+    assert_results_equal(want, c(**b))
+
+
+def test_degrade_off_raises_typed(ctx, monkeypatch):
+    monkeypatch.setenv("FLARE_DEGRADE", "off")
+    with RZ.inject("native.kernel", "first:1"):
+        with pytest.raises(KernelBudgetError):
+            Q.TEMPLATES["q6"](ctx).lower(engine="compiled", native=True) \
+                .compile(cache=CompileCache())
+    with RZ.inject("compile.xla", "first:1"):
+        with pytest.raises(FZ.XlaCompileFault):
+            Q.TEMPLATES["q6"](ctx).lower(engine="compiled") \
+                .compile(cache=CompileCache())
+
+
+def test_degrade_never_masks_wrong_answer_errors(ctx):
+    """Non-allowlisted errors raise even with the ladder on."""
+    assert DG.enabled()
+    with pytest.raises(MO.MemoryBudgetError, match="cannot hold"):
+        Q.TEMPLATES["q6"](ctx).lower(engine="compiled", memory_budget=16)
+    c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled").compile()
+    with pytest.raises(TypeError, match="unknown parameter"):
+        c(bogus=1.0)
+
+
+def test_degrade_events_recorded(ctx):
+    DG.clear_events()
+    with RZ.inject("native.kernel", "first:1"):
+        Q.TEMPLATES["q6"](ctx).lower(engine="compiled", native=True) \
+            .compile(cache=CompileCache())
+    evs = DG.events()
+    assert len(evs) == 1
+    assert (evs[0].frm, evs[0].to) == ("compiled-native", "compiled")
+    assert evs[0].error_type == "KernelBudgetError"
+    snap = DG.stats()
+    assert snap["events"] == 1
+    assert snap["transitions"] == {"compiled-native->compiled": 1}
+
+
+def test_obs_snapshot_has_resilience_section(ctx):
+    from repro import obs
+    with RZ.inject("compile.xla", "first:1") as plan:
+        snap = obs.snapshot()
+        assert snap["resilience"]["faults"] == plan.counts()
+    snap = obs.snapshot()
+    assert snap["resilience"]["faults"] == {}
+    assert "degrade" in snap["resilience"]
+
+
+# ---------------------------------------------------------------------------
+# persist faults heal below the ladder
+# ---------------------------------------------------------------------------
+
+
+def test_persist_load_fault_quarantines_and_recompiles(ctx, tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    b = binding("q6")
+    want = oracle(ctx, "q6", b)
+    low = Q.TEMPLATES["q6"](ctx).lower(engine="compiled")
+    low.compile(cache=CompileCache(), persist=store)  # writes through
+    assert store.tier("exec").writes >= 1
+    with RZ.inject("persist.load", "every:1"):
+        c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache(), persist=store)
+        got = c(**b)
+    assert_results_equal(want, got)
+    # healed below the ladder: no degradation, artifact quarantined
+    assert c.stats.degraded == ()
+    assert store.tier("exec").quarantined >= 1
+    exec_dir = os.path.dirname(store.path_for("exec", "0" * 16))
+    qfiles = [f for f in os.listdir(exec_dir)
+              if f.endswith(".quarantine")]
+    assert qfiles
+
+
+def test_persist_save_fault_counts_and_continues(ctx, tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    b = binding("q6")
+    with RZ.inject("persist.save", "every:1"):
+        c = Q.TEMPLATES["q6"](ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache(), persist=store)
+        got = c(**b)
+    assert_results_equal(oracle(ctx, "q6", b), got)
+    assert store.tier("exec").errors >= 1
+    assert store.tier("exec").writes == 0
+
+
+# ---------------------------------------------------------------------------
+# store unlink races + quarantine (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_artifact_quarantined_not_deleted(tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    path = store.save("exec", "d" * 16, {"m": 1}, [b"payload"])
+    with open(path, "r+b") as f:
+        f.seek(0)
+        f.write(b"XXXX")  # clobber the magic
+    assert store.load("exec", "d" * 16) is None
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".quarantine")
+    st = store.tier("exec")
+    assert st.corrupt == 1 and st.quarantined == 1
+    # quarantined junk is invisible to entries/nbytes/evict
+    assert store.entries("exec") == 0
+    assert store.nbytes() == 0
+    assert st.to_dict()["quarantined"] == 1
+
+
+def test_quarantine_race_is_counted_not_raised(tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    gone = store.path_for("exec", "e" * 16)
+    store._quarantine("exec", gone)  # no file: a reader beat us to it
+    st = store.tier("exec")
+    assert st.unlink_raced == 1 and st.quarantined == 0
+
+
+def test_evict_unlink_race_is_missing_ok(tmp_path, monkeypatch):
+    store = ArtifactStore(tmp_path / "small")
+    for i in range(4):
+        store.save("exec", f"{i:016x}", {"i": i}, [b"x" * 512])
+    real_unlink = os.unlink
+    raced = {"n": 0}
+
+    def racy_unlink(p, *a, **kw):
+        # a second evicting process wins exactly once
+        if raced["n"] == 0 and str(p).endswith(".flare"):
+            raced["n"] += 1
+            real_unlink(p)  # the other process's unlink
+        return real_unlink(p, *a, **kw)
+
+    monkeypatch.setattr(os, "unlink", racy_unlink)
+    evicted = store.evict(0)
+    assert raced["n"] == 1
+    st = store.tier("exec")
+    assert st.unlink_raced == 1
+    assert evicted == 3 and st.evicted == 3
+    assert store.entries("exec") == 0
+
+
+def test_clear_unlink_race_is_missing_ok(tmp_path, monkeypatch):
+    store = ArtifactStore(tmp_path / "store")
+    store.save("exec", "f" * 16, {"m": 1}, [b"x"])
+    real_unlink = os.unlink
+
+    def racy_unlink(p, *a, **kw):
+        real_unlink(p)
+        return real_unlink(p, *a, **kw)  # second call: FileNotFoundError
+
+    monkeypatch.setattr(os, "unlink", racy_unlink)
+    store.clear()  # must not raise
+    assert store.tier("exec").unlink_raced == 1
+
+
+# ---------------------------------------------------------------------------
+# serve hardening: backpressure, deadlines, poison isolation
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_backpressure(ctx):
+    server = QueryServer(ctx, max_queue=2)
+    b = binding("q6")
+    server.submit("q6", **b)
+    server.submit("q6", **b)
+    with pytest.raises(QueueFullError, match="admission queue full"):
+        server.submit("q6", **b)
+    assert server.stats.rejected == 1
+    assert server.flush() == 2  # backpressure cleared by draining
+
+
+def test_deadline_cancels_cleanly_without_dispatch(ctx):
+    server = QueryServer(ctx)
+    b = binding("q6")
+    doomed = server.submit("q6", deadline_s=0.0, **b)
+    time.sleep(0.002)
+    live = server.submit("q6", **b)
+    dispatched = server.flush()
+    assert dispatched == 1  # the expired request never executed
+    with pytest.raises(DeadlineExceededError):
+        doomed.result(timeout=1)
+    assert_results_equal(oracle(ctx, "q6", b),
+                         live.result(timeout=30).compact())
+    assert server.stats.deadline_expired == 1
+
+
+def test_poison_request_fails_alone(ctx):
+    """One bad binding in a coalesced batch: bisection isolates it --
+    every healthy waiter completes, only the poison future errors."""
+    server = QueryServer(ctx)
+    b = binding("q6")
+    healthy = [server.submit("q6", **b) for _ in range(5)]
+    poison = server.submit("q6", nonsense=1.0)
+    healthy += [server.submit("q6", **b) for _ in range(2)]
+    server.flush()
+    want = oracle(ctx, "q6", b)
+    for f in healthy:
+        assert_results_equal(want, f.result(timeout=30).compact())
+    with pytest.raises(TypeError, match="unknown parameter"):
+        poison.result(timeout=1)
+    assert server.stats.poisoned == 1
+    assert server.stats.bisects >= 1
+
+
+def test_injected_dispatch_fault_is_isolated_by_bisection(ctx):
+    server = QueryServer(ctx)
+    b = binding("q6")
+    with RZ.inject("serve.dispatch", "first:1"):
+        futs = [server.submit("q6", **b) for _ in range(4)]
+        server.flush()
+    want = oracle(ctx, "q6", b)
+    for f in futs:  # the retried halves all succeed
+        assert_results_equal(want, f.result(timeout=30).compact())
+    assert server.stats.bisects == 1
+    assert server.stats.poisoned == 0
+
+
+def test_total_dispatch_failure_fails_each_future_typed(ctx):
+    server = QueryServer(ctx)
+    b = binding("q6")
+    with RZ.inject("serve.dispatch", "every:1"):
+        futs = [server.submit("q6", **b) for _ in range(3)]
+        server.flush()
+    for f in futs:
+        with pytest.raises(FZ.DispatchFault):
+            f.result(timeout=1)
+    assert server.stats.poisoned == 3
+
+
+# ---------------------------------------------------------------------------
+# ServeFuture.result(timeout): not-dispatched vs sync-timeout (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_before_dispatch_is_not_dispatched_error(ctx):
+    server = QueryServer(ctx)
+    fut = server.submit("q6", **binding("q6"))
+    with pytest.raises(NotDispatchedError, match="not dispatched"):
+        fut.result(timeout=0.01)
+    assert isinstance(NotDispatchedError("x"), TimeoutError)
+    server.flush()
+    fut.result(timeout=30)
+
+
+def test_timeout_after_dispatch_is_sync_timeout_error():
+    """Dispatched but the device is slow: the future must say so --
+    NOT claim the request was never dispatched."""
+
+    class NeverReady:
+        def ready(self):
+            return False
+
+        def result(self):  # pragma: no cover - must not be reached
+            raise AssertionError("blocking sync on an un-ready handle")
+
+    fut = ServeFuture(ServeStats(), time.perf_counter())
+    fut._assign(NeverReady())
+    with pytest.raises(SyncTimeoutError, match="still in flight"):
+        fut.result(timeout=0.05)
+    assert isinstance(SyncTimeoutError("x"), TimeoutError)
+    assert not isinstance(SyncTimeoutError("x"), NotDispatchedError)
+
+
+def test_sync_timeout_recovers_on_retry():
+    class ReadyAfter:
+        def __init__(self, t):
+            self.t = t
+
+        def ready(self):
+            return time.perf_counter() >= self.t
+
+        def result(self):
+            return "value"
+
+    fut = ServeFuture(ServeStats(), time.perf_counter())
+    fut._assign(ReadyAfter(time.perf_counter() + 0.08))
+    with pytest.raises(SyncTimeoutError):
+        fut.result(timeout=0.01)
+    assert fut.result(timeout=5) == "value"
+
+
+# ---------------------------------------------------------------------------
+# typed error surfaces (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_budget_error_typed_through_compile(ctx, monkeypatch):
+    monkeypatch.setenv("FLARE_DEGRADE", "off")
+    with RZ.inject("native.kernel", "every:1"):
+        with pytest.raises(KernelBudgetError) as ei:
+            Q.TEMPLATES["q6"](ctx).lower(engine="compiled", native=True) \
+                .compile(cache=CompileCache())
+    assert type(ei.value) is KernelBudgetError  # not wrapped
+
+
+def test_index_error_typed_through_call_and_submit(fresh_ctx, monkeypatch):
+    monkeypatch.setenv("FLARE_DEGRADE", "off")
+    b = binding("q14")
+    with RZ.inject("index.build", "every:1"):
+        c = Q.TEMPLATES["q14"](fresh_ctx).lower(engine="compiled") \
+            .compile(cache=CompileCache())
+        with pytest.raises(FZ.IndexBuildError):
+            c(**b)
+        with pytest.raises(FZ.IndexBuildError):
+            c.submit(**b)  # the AsyncResult dispatch path
+
+
+def test_memory_budget_error_typed_through_lower(ctx):
+    with pytest.raises(MO.MemoryBudgetError) as ei:
+        Q.TEMPLATES["q6"](ctx).lower(engine="compiled", memory_budget=16)
+    assert type(ei.value) is MO.MemoryBudgetError
+
+
+def test_unsupported_parallel_plan_typed_through_lower(ctx):
+    pipeline = (ctx.table("lineitem")
+                .to_matrix("l_quantity", "l_discount")
+                .train("kmeans", k=2, max_iter=3))
+    with pytest.raises(UnsupportedParallelPlan) as ei:
+        pipeline.lower(engine="parallel")
+    assert type(ei.value) is UnsupportedParallelPlan
+
+
+def test_served_path_keeps_typed_errors(ctx, monkeypatch):
+    monkeypatch.setenv("FLARE_DEGRADE", "off")
+    server = QueryServer(ctx)
+    fut = server.submit("no-such-template")
+    server.flush()
+    with pytest.raises(KeyError, match="unknown template"):
+        fut.result(timeout=1)
+    with RZ.inject("serve.dispatch", "every:1"):
+        fut = server.submit("q6", **binding("q6"))
+        server.flush()
+    with pytest.raises(FZ.DispatchFault) as ei:
+        fut.result(timeout=1)
+    assert type(ei.value) is FZ.DispatchFault

@@ -1,0 +1,337 @@
+"""CI gate for the resilience layer: every fault site, injected, must
+end in an oracle-correct answer (possibly via degradation) or a typed
+error -- never a wrong answer, never an untyped crash.
+
+One fresh subprocess per *scenario*; each scenario arms one fault site
+(through the ``FLARE_FAULTS`` spec syntax + :class:`repro.resilience.
+inject`, the same machinery a chaos run in production would use) and
+drives the prepared-template workload
+(``relational/queries.py:TEMPLATES``) through the engines that cross
+that site:
+
+* ``compile.xla``    -- compiled + parallel; the ladder must land every
+  query on a weaker rung with recorded provenance, answers unchanged;
+* ``native.kernel``  -- compiled-native degrades to compiled;
+* ``index.build``    -- execute-time degradation, sticky fallback;
+* ``morsel.loop``    -- budgeted lowering degrades off the morsel path;
+* ``persist.load``   -- corrupt artifacts quarantine + recompile BELOW
+  the ladder (no degradation event, answers unchanged);
+* ``persist.save``   -- failed write-throughs count and continue;
+* ``serve.dispatch`` -- coalesced-dispatch faults bisect: zero healthy
+  futures may fail (no cross-request error broadcast);
+
+plus one ``FLARE_DEGRADE=off`` scenario asserting the same fault then
+surfaces as the site's *typed* error instead of silently degrading.
+
+The child computes volcano oracles BEFORE arming faults (volcano
+crosses no fault site), classifies every (template, engine) run as
+``ok_match`` / ``ok_match_degraded`` / ``typed_error`` / the failure
+classes, and reports its fault-plan counts, degradation events and the
+full ``obs.snapshot()``.  The parent asserts every outcome is in the
+green set, that the armed site actually *fired* at least once per
+scenario, and that scenario-specific expectations hold (degradation
+observed where promised, quarantines counted, zero bisection
+collateral).
+
+Usage::
+
+    PYTHONPATH=src python tools/chaos_ci_check.py
+
+``$CI_CHAOS_SF`` overrides the TPC-H scale factor (default 0.005).
+Verdict lands at ``$CHAOS_CI_JSON`` (default ``chaos_ci_check.json``),
+the per-scenario metrics snapshots at ``$CHAOS_CI_METRICS`` (default
+``chaos_ci_metrics.json``) -- both uploaded by CI.  Exits non-zero on
+any red outcome.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SF = float(os.environ.get("CI_CHAOS_SF", "0.005"))
+JSON_PATH = os.environ.get("CHAOS_CI_JSON", "chaos_ci_check.json")
+METRICS_PATH = os.environ.get("CHAOS_CI_METRICS", "chaos_ci_metrics.json")
+
+#: Outcomes that keep CI green.
+OK = {"ok_match", "ok_match_degraded", "typed_error"}
+
+#: scenario name -> config shipped to the child via $CHAOS_SCENARIO.
+#: ``faults`` uses the FLARE_FAULTS spec syntax; ``engines`` picks the
+#: lowering modes driven under fire; ``expect`` adds per-scenario
+#: assertions checked by the parent.
+SCENARIOS = [
+    {"name": "compile.xla",
+     "faults": "compile.xla:every:1,seed:11", "site": "compile.xla",
+     "engines": ["compiled", "parallel"],
+     "expect": {"degraded": True}},
+    {"name": "native.kernel",
+     "faults": "native.kernel:first:1", "site": "native.kernel",
+     "engines": ["compiled-native"],
+     "expect": {"degraded": True}},
+    {"name": "index.build",
+     "faults": "index.build:every:1", "site": "index.build",
+     "engines": ["compiled"],
+     "expect": {}},  # q6 has no join: only the join templates degrade
+    {"name": "morsel.loop",
+     "faults": "morsel.loop:first:1", "site": "morsel.loop",
+     "engines": ["compiled"], "morsel_rows": 4096,
+     "expect": {"degraded": True}},
+    {"name": "persist.load",
+     "faults": "persist.load:every:1", "site": "persist.load",
+     "engines": ["compiled"], "store": True, "prewarm": True,
+     "expect": {"quarantined": True, "degraded": False}},
+    {"name": "persist.save",
+     "faults": "persist.save:every:1", "site": "persist.save",
+     "engines": ["compiled"], "store": True,
+     "expect": {"save_errors": True, "degraded": False}},
+    {"name": "serve.dispatch",
+     "faults": "serve.dispatch:first:1", "site": "serve.dispatch",
+     "engines": ["served"],
+     "expect": {"bisected": True, "failed_futures": 0}},
+    {"name": "degrade-off.typed",
+     "faults": "compile.xla:every:1", "site": "compile.xla",
+     "engines": ["compiled"], "degrade_off": True,
+     "expect": {"typed": True, "degraded": False}},
+]
+
+_CHILD = """
+import json, os, sys
+import numpy as np
+from repro import obs
+from repro import resilience as RZ
+from repro.core import CompileCache, FlareContext
+from repro.relational import queries as Q
+from repro.resilience import degrade as DG
+from repro.resilience import faults as FZ
+
+cfg = json.loads(os.environ["CHAOS_SCENARIO"])
+ctx = FlareContext()
+Q.register_tpch(ctx, sf=cfg["sf"])
+store = None
+if cfg.get("store"):
+    from repro.persist import ArtifactStore
+    store = ArtifactStore(cfg["store_dir"])
+
+#: errors a fault may legitimately surface as (the sites' own types);
+#: anything else -- bare RuntimeError, wrong ValueError -- is red
+TYPED = ("KernelBudgetError", "XlaCompileFault", "IndexBuildError",
+         "DispatchFault", "StoreCorrupt", "MemoryBudgetError",
+         "UnsupportedParallelPlan")
+
+
+def close(a, b):
+    if set(a) != set(b):
+        return False
+    for k in a:
+        x = np.atleast_1d(np.asarray(a[k]))
+        y = np.atleast_1d(np.asarray(b[k]))
+        if x.shape != y.shape:
+            return False
+        if x.dtype.kind in "OUS" or y.dtype.kind in "OUS":
+            if list(x) != list(y):
+                return False
+        elif not np.allclose(x.astype(np.float64), y.astype(np.float64),
+                             rtol=5e-3, atol=1e-6):
+            return False
+    return True
+
+
+def lowered(name, engine):
+    kw = {}
+    if cfg.get("morsel_rows"):
+        kw["morsel_rows"] = cfg["morsel_rows"]
+    if engine == "compiled-native":
+        return Q.TEMPLATES[name](ctx).lower(engine="compiled",
+                                            native=True, **kw)
+    return Q.TEMPLATES[name](ctx).lower(engine=engine, **kw)
+
+
+# oracles BEFORE arming: volcano crosses no fault site, so the truth
+# is computed fault-free even though the plan arms at import for real
+# env-driven runs
+oracles = {name: [Q.TEMPLATES[name](ctx).lower(engine="volcano")
+                  .compile()(**dict(b))
+                  for b in Q.TEMPLATE_BINDINGS[name][:2]]
+           for name in sorted(Q.TEMPLATES)}
+
+if cfg.get("prewarm"):     # populate the store so load faults have prey
+    for name in sorted(Q.TEMPLATES):
+        lowered(name, "compiled").compile(cache=CompileCache(),
+                                          persist=store)
+
+plan = FZ.parse_env(cfg["faults"])
+results = []
+with RZ.inject(plan):
+    for engine in cfg["engines"]:
+        if engine == "served":
+            continue
+        for name in sorted(Q.TEMPLATES):
+            rec = {"template": name, "engine": engine}
+            try:
+                kw = {"cache": CompileCache()}
+                if store is not None:
+                    kw["persist"] = store
+                c = lowered(name, engine).compile(**kw)
+                got = [c(**dict(b))
+                       for b in Q.TEMPLATE_BINDINGS[name][:2]]
+                match = all(close(w, g)
+                            for w, g in zip(oracles[name], got))
+                if not match:
+                    rec["outcome"] = "WRONG_ANSWER"
+                elif c.stats.degraded:
+                    rec["outcome"] = "ok_match_degraded"
+                    rec["degraded"] = list(c.stats.degraded)
+                else:
+                    rec["outcome"] = "ok_match"
+            except Exception as err:
+                rec["error"] = type(err).__name__
+                rec["outcome"] = ("typed_error"
+                                  if type(err).__name__ in TYPED
+                                  else "UNTYPED_ERROR")
+                if rec["outcome"] == "UNTYPED_ERROR":
+                    rec["message"] = str(err)[:200]
+            results.append(rec)
+    failed_futures = 0
+    if "served" in cfg["engines"]:
+        from repro.serve import QueryServer
+        server = QueryServer(ctx)
+        futs = []
+        for name in sorted(Q.TEMPLATES):
+            futs += [(name, i, server.submit(name, **dict(b)))
+                     for i, b in enumerate(Q.TEMPLATE_BINDINGS[name][:2])]
+        server.flush()
+        for name, i, fut in futs:
+            rec = {"template": name, "engine": "served"}
+            try:
+                got = fut.result(timeout=120)
+                rec["outcome"] = ("ok_match"
+                                  if close(oracles[name][i], got.compact())
+                                  else "WRONG_ANSWER")
+            except Exception as err:
+                failed_futures += 1
+                rec["error"] = type(err).__name__
+                rec["outcome"] = ("typed_error"
+                                  if type(err).__name__ in TYPED
+                                  else "UNTYPED_ERROR")
+            results.append(rec)
+        results.append({"engine": "served", "template": "_stats",
+                        "outcome": "ok_match",
+                        "serve": server.stats.to_dict()})
+
+report = {
+    "results": results,
+    "faults": plan.counts(),
+    "degrade": DG.stats(),
+    "failed_futures": failed_futures if "served" in cfg["engines"] else None,
+    "store": store.stats_dict() if store is not None else None,
+    "snapshot": obs.snapshot(),
+}
+json.dump(report, sys.stdout, default=str)
+"""
+
+
+def run_child(cfg: dict) -> dict:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""),
+               CHAOS_SCENARIO=json.dumps(cfg))
+    # the scenario's store is explicit; an ambient one would let disk
+    # hits skip the very compile paths the faults target
+    env.pop("FLARE_CACHE_DIR", None)
+    env.pop("FLARE_FAULTS", None)  # armed inside, after the oracles
+    if cfg.get("degrade_off"):
+        env["FLARE_DEGRADE"] = "off"
+    else:
+        env.pop("FLARE_DEGRADE", None)
+    proc = subprocess.run([sys.executable, "-c", _CHILD],
+                          capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        print(proc.stderr, file=sys.stderr)
+        raise SystemExit(
+            f"chaos_ci_check: scenario {cfg['name']!r} child crashed")
+    return json.loads(proc.stdout)
+
+
+def check_scenario(cfg: dict, rep: dict) -> list:
+    bad = []
+    name = cfg["name"]
+    runs = [r for r in rep["results"] if r["template"] != "_stats"]
+    for r in runs:
+        if r["outcome"] not in OK:
+            bad.append(f"{name}: {r['template']}/{r['engine']} -> "
+                       f"{r['outcome']} ({r.get('error', r.get('message'))})")
+    fired = rep["faults"].get(cfg["site"], {}).get("fired", 0)
+    if fired < 1:
+        bad.append(f"{name}: site {cfg['site']} never fired "
+                   f"(counts: {rep['faults']})")
+    exp = cfg.get("expect", {})
+    degraded = any(r["outcome"] == "ok_match_degraded" for r in runs)
+    if exp.get("degraded") is True and not degraded:
+        bad.append(f"{name}: expected ladder degradation, saw none")
+    if exp.get("degraded") is False and degraded:
+        bad.append(f"{name}: degradation must not engage here")
+    if exp.get("typed") and not any(r["outcome"] == "typed_error"
+                                    for r in runs):
+        bad.append(f"{name}: expected typed errors, saw none")
+    if exp.get("quarantined") and not (
+            rep["store"] and rep["store"]["exec"]["quarantined"] >= 1):
+        bad.append(f"{name}: corrupt loads did not quarantine")
+    if exp.get("save_errors") and not (
+            rep["store"] and rep["store"]["exec"]["errors"] >= 1):
+        bad.append(f"{name}: failed saves not counted")
+    if "failed_futures" in exp and rep["failed_futures"] != exp[
+            "failed_futures"]:
+        bad.append(f"{name}: {rep['failed_futures']} healthy futures "
+                   f"failed (cross-request error broadcast)")
+    if exp.get("bisected"):
+        serve = next((r["serve"] for r in rep["results"]
+                      if r.get("serve")), {})
+        if not serve.get("bisects"):
+            bad.append(f"{name}: dispatch fault was not bisected")
+    return bad
+
+
+def main() -> int:
+    print(f"chaos_ci_check: sf={SF}, {len(SCENARIOS)} scenarios")
+    failures, verdicts, metrics = [], [], {}
+    with tempfile.TemporaryDirectory(prefix="chaos-ci-") as tmp:
+        for cfg in SCENARIOS:
+            cfg = dict(cfg, sf=SF,
+                       store_dir=os.path.join(tmp, cfg["name"]))
+            rep = run_child(cfg)
+            bad = check_scenario(cfg, rep)
+            failures += bad
+            outcomes = {}
+            for r in rep["results"]:
+                if r["template"] != "_stats":
+                    outcomes[r["outcome"]] = outcomes.get(
+                        r["outcome"], 0) + 1
+            verdicts.append({"scenario": cfg["name"],
+                             "site": cfg["site"],
+                             "fired": rep["faults"].get(
+                                 cfg["site"], {}).get("fired", 0),
+                             "outcomes": outcomes,
+                             "degrade_events": rep["degrade"]["events"],
+                             "ok": not bad})
+            metrics[cfg["name"]] = rep["snapshot"]
+            mark = "ok" if not bad else "FAIL"
+            print(f"  {cfg['name']:<20} fired={verdicts[-1]['fired']:<3} "
+                  f"{outcomes} [{mark}]")
+    summary = {"sf": SF, "scenarios": verdicts,
+               "ok": not failures, "failures": failures}
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2)
+    with open(METRICS_PATH, "w") as f:
+        json.dump(metrics, f, indent=2, default=str)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    print(f"wrote {JSON_PATH} + {METRICS_PATH}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
